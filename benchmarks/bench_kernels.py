@@ -1,0 +1,52 @@
+"""Kernel-level microbenchmarks: jnp reference path timings on CPU (the
+Pallas kernels themselves target TPU; interpret-mode timing is meaningless,
+so we time the dispatch path the CPU benchmarks actually use, plus report
+the bytes-reduction each kernel achieves on TPU by construction).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(n=65536, d=128, n_bits=256, q=64):
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (n, d))
+    proj = jax.random.normal(k2, (d, n_bits))
+    queries = jax.random.normal(k3, (q, d))
+
+    rows = []
+    dt = _time(ops.srp_hash, x, proj)
+    rows.append(common.fmt_row(
+        "kernel/srp_hash", dt * 1e6,
+        f"n={n};bits={n_bits};tpu_hbm_out_bytes=1/{8 * 4}x_of_signs"))
+
+    codes = ops.srp_hash(x, proj)
+    qcodes = ops.srp_hash(queries, proj)
+    dt = _time(ops.hamming_scores, qcodes, codes)
+    ip_bytes = n * d * 4
+    code_bytes = n * (n_bits // 8)
+    rows.append(common.fmt_row(
+        "kernel/hamming_scores", dt * 1e6,
+        f"q={q};n={n};bytes_vs_exact={code_bytes / ip_bytes:.3f}"))
+
+    dt = _time(lambda a, b: ops.ip_topk(a, b, 100), queries, x)
+    rows.append(common.fmt_row("kernel/ip_topk", dt * 1e6, f"k=100;n={n}"))
+    return rows

@@ -1,0 +1,54 @@
+"""Fig. 6: SA-ALSH vs H2-ALSH for standalone kMIPS (recall + query time) and
+Table 2: F1 of answering RkMIPS with plain kMIPS results (they are different
+problems -- the paper's motivation table).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import exact, metrics, sa_alsh
+
+
+def run(n=16384, m=16384, d=64, nq=32, ks=(1, 5, 10, 20, 30, 40, 50)):
+    wl = common.make_workload("nmf", n, m, d, nq, ks=(1, 10, 50))
+    rows = []
+    tv, ti = exact.kmips(wl.items, wl.queries, max(ks))
+
+    for transform in ("sat", "qnf"):
+        name = "SA-ALSH" if transform == "sat" else "H2-ALSH"
+        key = jax.random.PRNGKey(2)
+        t0 = time.perf_counter()
+        idx = sa_alsh.build_index(wl.items, key, transform=transform)
+        jax.block_until_ready(idx.codes)
+        rows.append(common.fmt_row(f"fig6/index/{name}",
+                                   (time.perf_counter() - t0) * 1e6, ""))
+        for k in ks:
+            n_cand = max(64, 4 * k)       # candidate depth scales with k
+            vals, ids, _ = sa_alsh.kmips_topk(idx, wl.queries, k,
+                                              n_cand=n_cand)
+            jax.block_until_ready(vals)
+            t0 = time.perf_counter()
+            vals, ids, tiles = sa_alsh.kmips_topk(idx, wl.queries, k,
+                                                  n_cand=n_cand)
+            jax.block_until_ready(vals)
+            dt = (time.perf_counter() - t0) / nq
+            rec = float(jnp.mean(metrics.recall_at_k(ids, ti[:, :k])))
+            rows.append(common.fmt_row(
+                f"fig6/kmips/{name}/k={k}", dt * 1e6,
+                f"recall={rec:.3f};tiles={int(tiles)}"))
+
+    # Table 2: use top-k users by <u, q> as a (bad) RkMIPS answer.
+    for k in (1, 10, 50):
+        scores = wl.queries @ wl.users_unit.T            # (nq, m)
+        _, topu = jax.lax.top_k(scores, k)
+        pred = jnp.zeros(scores.shape, bool)
+        pred = jax.vmap(lambda p, i: p.at[i].set(True))(pred, topu)
+        f1 = float(jnp.mean(metrics.f1_score(pred, wl.truth[k])))
+        rows.append(common.fmt_row(f"table2/kmips_as_rkmips/k={k}", 0.0,
+                                   f"f1={f1:.3f}"))
+    return rows

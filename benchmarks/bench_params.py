@@ -1,0 +1,52 @@
+"""Appendix Figs. 3-5: parameter studies -- interval ratio b, sketch width
+K (the paper's hash-table count), and cone leaf size N0.
+
+The paper's findings to check: b=0.5 best trade-off (Fig. 3); accuracy
+saturates around K=128 while time grows (Fig. 4); N0 is insensitive
+(Fig. 5).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.core import metrics, sah
+
+
+def _measure(wl, k, **build_kwargs):
+    idx = sah.build(wl.items, wl.users, jax.random.PRNGKey(3),
+                    k_max=50, **build_kwargs)
+    jax.block_until_ready(idx.users)
+    pred, _ = sah.rkmips_batch(idx, wl.queries, k, scan="sketch",
+                               n_cand=64, tie_eps=common.TIE_EPS)
+    jax.block_until_ready(pred)
+    t0 = time.perf_counter()
+    pred, _ = sah.rkmips_batch(idx, wl.queries, k, scan="sketch",
+                               n_cand=64, tie_eps=common.TIE_EPS)
+    jax.block_until_ready(pred)
+    dt = (time.perf_counter() - t0) / wl.queries.shape[0]
+    po = sah.predictions_to_original(idx, pred, wl.users.shape[0])
+    f1 = float(jnp.mean(metrics.f1_score(po, wl.truth[k])))
+    return dt, f1
+
+
+def run(n=4096, m=8192, d=64, nq=8, k=10):
+    wl = common.make_workload("nmf", n, m, d, nq, ks=(k,))
+    rows = []
+    for b in (0.1, 0.3, 0.5, 0.7, 0.9):
+        dt, f1 = _measure(wl, k, b=b)
+        rows.append(common.fmt_row(f"fig3/interval_b/{b}", dt * 1e6,
+                                   f"f1={f1:.3f}"))
+    for bits in (64, 128, 192, 256):
+        dt, f1 = _measure(wl, k, n_bits=bits)
+        rows.append(common.fmt_row(f"fig4/bits_K/{bits}", dt * 1e6,
+                                   f"f1={f1:.3f}"))
+    for leaf in (32, 64, 128, 256):
+        dt, f1 = _measure(wl, k, leaf_size=leaf)
+        rows.append(common.fmt_row(f"fig5/leaf_N0/{leaf}", dt * 1e6,
+                                   f"f1={f1:.3f}"))
+    return rows

@@ -1,0 +1,29 @@
+"""Fig. 1 + Fig. 2 + Table 1: RkMIPS query time / F1 vs k, ablation grid,
+indexing time -- for SAH, SA-Simpfer, H2-Cone, H2-Simpfer, Simpfer.
+
+Raw H2-ALSH (no user pruning at all) is omitted: the paper shows it 2-3
+orders of magnitude slower than every pruned method (Fig. 1); our grid keeps
+the informative frontier. All other methods are exact configurations of the
+same engine (DESIGN.md SS3), so the comparison isolates exactly the paper's
+two contributions (SAT vs QNF; cone vs norm blocking).
+"""
+
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(n=8192, m=16384, d=64, nq=16, ks=(1, 5, 10, 20, 30, 40, 50)):
+    wl = common.make_workload("nmf", n, m, d, nq, ks)
+    rows = []
+    for method in common.METHODS:
+        idx, t_build = common.build_method(wl, method)
+        rows.append(common.fmt_row(
+            f"table1/index_time/{method}", t_build * 1e6,
+            f"n={n};m={m}"))
+        for k in ks:
+            dt, f1, stats = common.run_method(wl, idx, method, k)
+            rows.append(common.fmt_row(
+                f"fig1/query/{method}/k={k}", dt * 1e6,
+                f"f1={f1:.3f};scanned={int(stats.n_scan.mean())}"))
+    return rows

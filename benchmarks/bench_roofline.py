@@ -1,0 +1,37 @@
+"""Roofline table from the dry-run artifacts (results/dryrun/*.json).
+
+Not a paper table -- required by the task: per (arch x shape x mesh) the
+three roofline terms, the dominant bottleneck, and MODEL_FLOPS/HLO_FLOPs.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+
+
+def run(dryrun_dir="results/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        r = d["roofline"]
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        ratio = d.get("useful_flops_ratio")
+        rows.append(common.fmt_row(
+            f"roofline/{d['arch']}/{d['shape']}/{d['mesh']}",
+            bound * 1e6,
+            f"dom={r['dominant']};compute_ms={r['compute_s']*1e3:.2f};"
+            f"memory_ms={r['memory_s']*1e3:.2f};"
+            f"coll_ms={r['collective_s']*1e3:.2f};"
+            f"mem_gib={d['memory']['per_device_total']/2**30:.2f};"
+            f"useful={ratio:.3f}" if ratio else
+            f"dom={r['dominant']};mem_gib="
+            f"{d['memory']['per_device_total']/2**30:.2f}"))
+    if not rows:
+        rows.append(common.fmt_row("roofline/none", 0.0,
+                                   "run launch/dryrun first"))
+    return rows

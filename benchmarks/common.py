@@ -1,0 +1,82 @@
+"""Shared benchmark utilities: datasets, oracles, method matrix, timing."""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import exact, metrics, sah
+from repro.data import synthetic
+
+TIE_EPS = 1e-5          # queries come from the item set (see core/exact.py)
+
+
+@dataclasses.dataclass
+class Workload:
+    name: str
+    items: jnp.ndarray
+    users: jnp.ndarray
+    users_unit: jnp.ndarray
+    queries: jnp.ndarray
+    truth: dict          # k -> (nq, m) bool
+
+
+def make_workload(name: str, n: int, m: int, d: int = 64, nq: int = 16,
+                  ks=(1, 5, 10, 20, 30, 40, 50), kind: str = "nmf",
+                  seed: int = 0) -> Workload:
+    key = jax.random.PRNGKey(seed)
+    ki, kq = jax.random.split(key)
+    items, users = synthetic.recommendation_data(ki, n, m, d, kind=kind)
+    queries = synthetic.queries_from_items(kq, items, nq)
+    uu = users / jnp.linalg.norm(users, axis=-1, keepdims=True)
+    truth = {k: exact.rkmips_batch_chunked(items, uu, queries, k,
+                                           tie_eps=TIE_EPS) for k in ks}
+    jax.block_until_ready(truth[ks[-1]])
+    return Workload(name, items, users, uu, queries, truth)
+
+
+# Method matrix: the paper's Fig.1 + Fig.2 ablation grid.
+METHODS = {
+    "SAH":        dict(transform="sat", blocking="cone", scan="sketch"),
+    "SA-Simpfer": dict(transform="sat", blocking="norm", scan="sketch"),
+    "H2-Cone":    dict(transform="qnf", blocking="cone", scan="sketch"),
+    "H2-Simpfer": dict(transform="qnf", blocking="norm", scan="sketch"),
+    "Simpfer":    dict(transform="sat", blocking="norm", scan="exact"),
+}
+
+
+def build_method(wl: Workload, method: str, k_max: int = 50,
+                 n_bits: int = 128, seed: int = 1):
+    cfg = METHODS[method]
+    key = jax.random.PRNGKey(seed)
+    t0 = time.perf_counter()
+    idx = sah.build(wl.items, wl.users, key, k_max=k_max,
+                    n_bits=n_bits, transform=cfg["transform"],
+                    blocking=cfg["blocking"])
+    jax.block_until_ready(idx.users)
+    return idx, time.perf_counter() - t0
+
+
+def run_method(wl: Workload, idx, method: str, k: int, n_cand: int = 64):
+    """-> (query_time_s_per_query, f1)."""
+    cfg = METHODS[method]
+    m = wl.users.shape[0]
+    # warm (compile)
+    pred, _ = sah.rkmips_batch(idx, wl.queries, k, n_cand=n_cand,
+                               scan=cfg["scan"], tie_eps=TIE_EPS)
+    jax.block_until_ready(pred)
+    t0 = time.perf_counter()
+    pred, stats = sah.rkmips_batch(idx, wl.queries, k, n_cand=n_cand,
+                                   scan=cfg["scan"], tie_eps=TIE_EPS)
+    jax.block_until_ready(pred)
+    dt = (time.perf_counter() - t0) / wl.queries.shape[0]
+    po = sah.predictions_to_original(idx, pred, m)
+    f1 = float(jnp.mean(metrics.f1_score(po, wl.truth[k])))
+    return dt, f1, stats
+
+
+def fmt_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.1f},{derived}"

@@ -1,0 +1,58 @@
+"""Benchmark driver: one harness per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV. Scale with --scale {smoke,bench}.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", choices=("smoke", "bench"), default="bench")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: rkmips,kmips,kernels,"
+                         "roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_kernels, bench_kmips, bench_params,
+                            bench_rkmips, bench_roofline)
+
+    small = args.scale == "smoke"
+    suites = {
+        "rkmips": lambda: bench_rkmips.run(
+            n=2048 if small else 8192, m=4096 if small else 16384,
+            nq=8 if small else 16,
+            ks=(1, 10, 50) if small else (1, 5, 10, 20, 30, 40, 50)),
+        "kmips": lambda: bench_kmips.run(
+            n=4096 if small else 16384, m=4096 if small else 16384,
+            nq=8 if small else 32,
+            ks=(1, 10, 50) if small else (1, 5, 10, 20, 30, 40, 50)),
+        "params": lambda: bench_params.run(
+            n=2048 if small else 4096, m=4096 if small else 8192,
+            nq=4 if small else 8),
+        "kernels": lambda: bench_kernels.run(n=8192 if small else 65536),
+        "roofline": bench_roofline.run,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        suites = {k: v for k, v in suites.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        t0 = time.time()
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            raise
+        print(f"# suite {name} done in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Render the EXPERIMENTS.md roofline/dry-run tables from results JSONs.
+
+    PYTHONPATH=src python scripts/build_experiments.py > /tmp/tables.md
+"""
+
+import glob
+import json
+import os
+import sys
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k",
+               "full_graph_sm", "minibatch_lg", "ogb_products", "molecule",
+               "train_batch", "serve_p99", "serve_bulk", "retrieval_cand",
+               "retrieval_cand_sah"]
+ARCH_ORDER = ["dbrx-132b", "olmoe-1b-7b", "qwen3-0.6b", "qwen2-1.5b",
+              "mistral-nemo-12b", "gat-cora", "xdeepfm", "din", "deepfm",
+              "two-tower-retrieval"]
+
+
+def load(dirname):
+    recs = {}
+    for p in glob.glob(os.path.join(dirname, "*.json")):
+        with open(p) as f:
+            d = json.load(f)
+        recs[(d["arch"], d["shape"], d["mesh"])] = d
+    return recs
+
+
+def fmt_ms(s):
+    return f"{s*1e3:.2f}"
+
+
+def main():
+    recs = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+
+    print("### Dry-run + roofline table (single pod, 16x16 = 256 chips)\n")
+    print("| arch | shape | mem/dev GiB | compute ms | memory ms | "
+          "collective ms | dominant | useful FLOPs ratio |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, "single"))
+            if not r:
+                continue
+            rf = r["roofline"]
+            ratio = r.get("useful_flops_ratio")
+            print(f"| {arch} | {shape} | "
+                  f"{r['memory']['per_device_total']/2**30:.2f} | "
+                  f"{fmt_ms(rf['compute_s'])} | {fmt_ms(rf['memory_s'])} | "
+                  f"{fmt_ms(rf['collective_s'])} | {rf['dominant']} | "
+                  f"{f'{ratio:.2f}' if ratio else '--'} |")
+
+    print("\n### Multi-pod check (2x16x16 = 512 chips): compile + fit\n")
+    print("| arch | shape | mem/dev GiB | dominant | compile s |")
+    print("|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, "multi"))
+            if not r:
+                continue
+            rf = r["roofline"]
+            print(f"| {arch} | {shape} | "
+                  f"{r['memory']['per_device_total']/2**30:.2f} | "
+                  f"{rf['dominant']} | {r['compile_s']:.1f} |")
+
+
+if __name__ == "__main__":
+    main()

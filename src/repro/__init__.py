@@ -1,0 +1,18 @@
+"""repro: a production-grade JAX framework reproducing and extending
+
+SAH: Shifting-aware Asymmetric Hashing for Reverse k-Maximum Inner Product
+Search (Huang, Wang, Tung; AAAI 2023).
+
+Layers:
+  core/     the paper's contribution (SAT, SA-ALSH, cone blocking, SAH engine)
+  kernels/  Pallas TPU kernels for the compute hot spots (hamming scan, srp hash,
+            fused ip+topk) with jnp oracles
+  models/   LM transformers (dense + MoE), GAT, recsys models
+  data/     synthetic data pipelines, graph sampler
+  train/    optimizer, trainer, checkpointing, compression
+  dist/     sharding policies, distributed decode, collective helpers
+  configs/  assigned architecture configs
+  launch/   mesh, dry-run, train/serve drivers
+"""
+
+__version__ = "1.0.0"

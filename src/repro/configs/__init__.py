@@ -1,0 +1,2 @@
+from repro.configs.base import (ArchSpec, ShapeSpec, all_archs, get,  # noqa
+                                register)

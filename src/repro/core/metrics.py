@@ -1,0 +1,35 @@
+"""Accuracy metrics for RkMIPS / kMIPS results."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def f1_score(pred: jnp.ndarray, truth: jnp.ndarray,
+             mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """F1 of boolean membership predictions against boolean truth.
+
+    pred/truth: (..., m) boolean. mask: optional (..., m) validity mask.
+    Returns F1 per leading batch element. Empty-truth & empty-pred counts as 1.
+    """
+    if mask is not None:
+        pred = pred & mask
+        truth = truth & mask
+    tp = jnp.sum(pred & truth, axis=-1).astype(jnp.float32)
+    np_ = jnp.sum(pred, axis=-1).astype(jnp.float32)
+    nt = jnp.sum(truth, axis=-1).astype(jnp.float32)
+    precision = jnp.where(np_ > 0, tp / jnp.maximum(np_, 1.0), 1.0)
+    recall = jnp.where(nt > 0, tp / jnp.maximum(nt, 1.0), 1.0)
+    denom = precision + recall
+    f1 = jnp.where(denom > 0, 2 * precision * recall / jnp.maximum(denom, 1e-9), 0.0)
+    both_empty = (np_ == 0) & (nt == 0)
+    return jnp.where(both_empty, 1.0, f1)
+
+
+def recall_at_k(pred_idx: jnp.ndarray, true_idx: jnp.ndarray) -> jnp.ndarray:
+    """Set recall of predicted top-k ids vs true top-k ids, per row.
+
+    pred_idx (..., k), true_idx (..., k) -> (...,) in [0, 1].
+    """
+    hits = (pred_idx[..., :, None] == true_idx[..., None, :]).any(axis=-1)
+    return jnp.mean(hits.astype(jnp.float32), axis=-1)

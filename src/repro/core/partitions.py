@@ -1,0 +1,92 @@
+"""Norm-range partitioning of item vectors (SA-ALSH indexing, Algorithm 1).
+
+Items are sorted by descending l2-norm and greedily cut into ranges
+(b*M_j, M_j] where M_j is the first (largest) norm in partition j. The number
+of partitions t is data-dependent; we cap it at a static `max_partitions` and
+keep per-partition stats in padded arrays with a validity count.
+
+The greedy recurrence (M_{j+1} = first norm <= b * M_j) is sequential; it runs
+as a lax.scan over the sorted norms at index-build time. Per-partition
+centroids/radii/max-norms are then computed with segment reductions.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class NormPartitions(NamedTuple):
+    """Partition structure over items sorted by descending norm (all padded).
+
+    Attributes:
+      part_id:   (n,)  int32, partition index of each sorted item.
+      n_parts:   ()    int32, number of valid partitions (<= max_partitions).
+      start:     (T,)  int32, first sorted-item index of each partition.
+      size:      (T,)  int32, item count of each partition (0 for padding).
+      max_norm:  (T,)  f32, M_j = max item norm in partition (0 for padding).
+      centroid:  (T,d) f32, c_j = mean of partition items.
+      radius:    (T,)  f32, R_j = max ||p - c_j|| over partition items.
+    """
+
+    part_id: jnp.ndarray
+    n_parts: jnp.ndarray
+    start: jnp.ndarray
+    size: jnp.ndarray
+    max_norm: jnp.ndarray
+    centroid: jnp.ndarray
+    radius: jnp.ndarray
+
+
+def assign_partitions(sorted_norms: jnp.ndarray, b: float,
+                      max_partitions: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Greedy norm cut. sorted_norms (n,) descending -> (part_id (n,), n_parts).
+
+    Partition j holds items with norm in (b*M_j, M_j]. A new partition opens at
+    item i when ||p_i|| <= b * M_current. Partition ids are clamped to
+    max_partitions - 1 (the tail partition absorbs the rest; with b=0.5 and
+    max_partitions=64 this never triggers in practice since norms would have to
+    span 2^63).
+    """
+
+    def step(carry, norm):
+        cur_max, pid = carry
+        open_new = norm <= b * cur_max
+        pid = jnp.where(open_new, jnp.minimum(pid + 1, max_partitions - 1), pid)
+        cur_max = jnp.where(open_new, norm, cur_max)
+        return (cur_max, pid), pid
+
+    init = (sorted_norms[0], jnp.asarray(0, jnp.int32))
+    (_, last_pid), part_id = jax.lax.scan(step, init, sorted_norms)
+    return part_id.astype(jnp.int32), last_pid + 1
+
+
+def build_partitions(items_sorted: jnp.ndarray, sorted_norms: jnp.ndarray,
+                     b: float, max_partitions: int) -> NormPartitions:
+    """Full partition structure for items already sorted by descending norm."""
+    n, _ = items_sorted.shape
+    part_id, n_parts = assign_partitions(sorted_norms, b, max_partitions)
+
+    ones = jnp.ones((n,), jnp.float32)
+    size_f = jax.ops.segment_sum(ones, part_id, num_segments=max_partitions)
+    size = size_f.astype(jnp.int32)
+    # First index of each partition = exclusive cumsum of sizes.
+    start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(size)[:-1]]).astype(jnp.int32)
+    max_norm = jax.ops.segment_max(
+        sorted_norms, part_id, num_segments=max_partitions)
+    max_norm = jnp.where(size > 0, max_norm, 0.0)
+
+    sums = jax.ops.segment_sum(items_sorted, part_id,
+                               num_segments=max_partitions)
+    centroid = sums / jnp.maximum(size_f, 1.0)[:, None]
+    diff = items_sorted - centroid[part_id]
+    d2 = jnp.sum(diff * diff, axis=-1)
+    radius2 = jax.ops.segment_max(d2, part_id, num_segments=max_partitions)
+    radius = jnp.sqrt(jnp.where(size > 0, radius2, 0.0))
+
+    return NormPartitions(part_id=part_id, n_parts=n_parts, start=start,
+                          size=size, max_norm=max_norm, centroid=centroid,
+                          radius=radius)

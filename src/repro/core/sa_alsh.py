@@ -1,0 +1,298 @@
+"""SA-ALSH: Shifting-Aware Asymmetric LSH index and query scans.
+
+Faithful to Algorithms 1-2 of the paper, adapted to TPU dataflow as described
+in DESIGN.md SS2:
+
+  * items are sorted by descending l2-norm and partitioned into norm ranges
+    (b*M_j, M_j] (Algorithm 1 lines 3-6);
+  * each partition's items are SAT-transformed with its own centroid/radius
+    (lines 7-11) and hashed with SRP; codes are bit-packed uint32 sketches
+    rather than hash-table buckets (Hamming ranking == collision-count
+    ranking in expectation, DESIGN.md SS2);
+  * the query phase walks fixed-size, norm-ordered tiles with the
+    Cauchy-Schwarz bound mu = max_norm_tile * ||u|| for early termination
+    (Algorithm 2 lines 3-4), selecting candidates per tile by Hamming
+    distance and re-ranking them with exact inner products.
+
+Because the user transform U(u) = [lambda*u; 0] has a zero appended coordinate
+and lambda > 0, a user's SRP code is sign(u @ proj[:d]) -- one code per user,
+valid against every partition's item codes. All per-partition state is baked
+into the item codes at indexing time.
+
+Two query entry points:
+  kmips_topk     -- approximate top-k MIPS (paper's Algorithm 2), used for the
+                    kMIPS benchmarks (Fig. 6) and standalone retrieval.
+  decide_count   -- the RkMIPS decision primitive: counts items with
+                    <u, p> > tau until count >= k ("no") or the norm bound
+                    certifies no further item can beat tau ("yes"). This is
+                    Algorithm 2 reformulated as counting, which is exactly the
+                    decision Algorithm 5 needs (see core/sah.py).
+
+Both support scan="sketch" (SA-ALSH) and scan="exact" (Simpfer's linear scan
+with the same early-termination rule), which gives the paper's baselines for
+free.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import partitions as _parts
+from repro.core import srp as _srp
+from repro.core import transforms as _tf
+from repro.kernels import ops as kops
+
+_NEG = -jnp.inf
+_BIG_HAMMING = jnp.int32(1 << 30)
+
+
+class SAALSHIndex(NamedTuple):
+    """Index over items sorted by descending norm, padded to a tile multiple.
+
+    Attributes:
+      items:      (n_pad, d) f32, descending-norm order, zero rows for padding.
+      item_ids:   (n_pad,) int32, original item row; -1 for padding.
+      norms:      (n_pad,) f32, descending; 0 for padding.
+      item_mask:  (n_pad,) bool.
+      codes:      (n_pad, W) uint32 SRP sketch of the per-partition
+                  asymmetric transform of each item.
+      proj:       (d+1, B) f32 shared SRP projection (rows 0..d-1 hash the
+                  shifted item / the user; row d hashes the appended coord).
+      part_id:    (n_pad,) int32 partition of each item.
+      part_max_norm: (T,) f32 M_j per partition (0 padding).
+      part_centroid: (T, d) f32 c_j.
+      part_radius:   (T,) f32 R_j.
+      n_parts:    () int32.
+      tile_max_norm: (n_tiles,) f32 max norm in / after each tile? No:
+                  max norm *within* the tile; since global order is norm
+                  descending, it also upper-bounds every later tile.
+    """
+
+    items: jnp.ndarray
+    item_ids: jnp.ndarray
+    norms: jnp.ndarray
+    item_mask: jnp.ndarray
+    codes: jnp.ndarray
+    proj: jnp.ndarray
+    part_id: jnp.ndarray
+    part_max_norm: jnp.ndarray
+    part_centroid: jnp.ndarray
+    part_radius: jnp.ndarray
+    n_parts: jnp.ndarray
+    tile_max_norm: jnp.ndarray
+
+    @property
+    def tile(self) -> int:
+        return self.items.shape[0] // self.tile_max_norm.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.items.shape[1]
+
+
+def _pad_rows(x: jnp.ndarray, n_pad: int, fill=0):
+    pad = n_pad - x.shape[0]
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("b", "n_bits", "max_partitions", "tile",
+                                    "transform", "n_pad"))
+def _build(items, key, *, b, n_bits, max_partitions, tile, transform, n_pad):
+    n, d = items.shape
+    norms = jnp.linalg.norm(items, axis=-1)
+    order = jnp.argsort(-norms)
+    items_sorted = items[order]
+    norms_sorted = norms[order]
+
+    parts = _parts.build_partitions(items_sorted, norms_sorted, b,
+                                    max_partitions)
+
+    proj = _srp.make_projection(key, d + 1, n_bits)
+
+    # Per-item asymmetric transform using its partition's centroid / scale.
+    if transform == "sat":
+        c = parts.centroid[parts.part_id]                 # (n, d)
+        r = parts.radius[parts.part_id]                   # (n,)
+        shifted = items_sorted - c
+        ext2 = jnp.maximum(r ** 2 - jnp.sum(shifted * shifted, -1), 0.0)
+    elif transform == "qnf":
+        shifted = items_sorted
+        m = parts.max_norm[parts.part_id]
+        ext2 = jnp.maximum(m ** 2 - norms_sorted ** 2, 0.0)
+    else:
+        raise ValueError(f"unknown transform {transform!r}")
+    transformed = jnp.concatenate([shifted, jnp.sqrt(ext2)[:, None]], -1)
+
+    codes = kops.srp_hash(_pad_rows(transformed, n_pad), proj)
+
+    item_mask = _pad_rows(jnp.ones((n,), bool), n_pad)
+    norms_p = _pad_rows(norms_sorted, n_pad)
+    tile_max = jnp.max(norms_p.reshape(-1, tile), axis=-1)
+
+    return SAALSHIndex(
+        items=_pad_rows(items_sorted, n_pad),
+        item_ids=_pad_rows(order.astype(jnp.int32), n_pad, fill=-1),
+        norms=norms_p,
+        item_mask=item_mask,
+        codes=codes,
+        proj=proj,
+        part_id=_pad_rows(parts.part_id, n_pad, fill=max_partitions - 1),
+        part_max_norm=parts.max_norm,
+        part_centroid=parts.centroid,
+        part_radius=parts.radius,
+        n_parts=parts.n_parts,
+        tile_max_norm=tile_max,
+    )
+
+
+def build_index(items: jnp.ndarray, key: jax.Array, *, b: float = 0.5,
+                n_bits: int = 128, max_partitions: int = 64,
+                tile: int = 512, transform: str = "sat") -> SAALSHIndex:
+    """Build an SA-ALSH (transform="sat") or H2-ALSH-style (="qnf") index."""
+    n = items.shape[0]
+    n_pad = -(-n // tile) * tile
+    return _build(items, key, b=b, n_bits=n_bits,
+                  max_partitions=max_partitions, tile=tile,
+                  transform=transform, n_pad=n_pad)
+
+
+def user_codes(index: SAALSHIndex, users: jnp.ndarray) -> jnp.ndarray:
+    """SRP codes of user/query vectors: sign(u @ proj[:d]). (m, d)->(m, W)."""
+    return kops.srp_hash(users, index.proj[:-1])
+
+
+# ---------------------------------------------------------------------------
+# Tile scans.
+# ---------------------------------------------------------------------------
+
+
+def _tile_slice(arr: jnp.ndarray, t: jnp.ndarray, tile: int) -> jnp.ndarray:
+    start = (t * tile,) + (0,) * (arr.ndim - 1)
+    size = (tile,) + arr.shape[1:]
+    return jax.lax.dynamic_slice(arr, start, size)
+
+
+def _tile_candidates(index: SAALSHIndex, ucodes, users, t, *, n_cand: int,
+                     scan: str):
+    """Exact IPs of the top-n_cand sketch candidates in tile t.
+
+    Returns (ips (C, c), valid (C, c) bool, local (C, c) int32 tile-local
+    candidate rows). scan="exact" treats the whole tile as candidates
+    (c == tile).
+    """
+    tile = index.tile
+    items_t = _tile_slice(index.items, t, tile)          # (tile, d)
+    mask_t = _tile_slice(index.item_mask, t, tile)       # (tile,)
+    if scan == "exact":
+        ips = users @ items_t.T                          # (C, tile)
+        local = jnp.broadcast_to(
+            jnp.arange(tile, dtype=jnp.int32)[None, :], ips.shape)
+        return ips, jnp.broadcast_to(mask_t[None, :], ips.shape), local
+    codes_t = _tile_slice(index.codes, t, tile)          # (tile, W)
+    dist = kops.hamming_scores(ucodes, codes_t)          # (C, tile)
+    dist = jnp.where(mask_t[None, :], dist, _BIG_HAMMING)
+    _, cand = jax.lax.top_k(-dist, n_cand)               # (C, n_cand)
+    cand_vecs = jnp.take(items_t, cand, axis=0)          # (C, n_cand, d)
+    ips = jnp.einsum("cnd,cd->cn", cand_vecs, users)
+    valid = jnp.take(mask_t, cand, axis=0)
+    return ips, valid, cand.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_cand", "scan"))
+def decide_count(index: SAALSHIndex, users: jnp.ndarray, taus: jnp.ndarray,
+                 init_count: jnp.ndarray, active: jnp.ndarray, k: int,
+                 *, n_cand: int = 64, scan: str = "sketch",
+                 eps: jnp.ndarray | float = 0.0):
+    """RkMIPS decision for a chunk of users against their thresholds.
+
+    users (C, d) -- unit user vectors; taus (C,) = <u, q>; init_count (C,) --
+    items already known to beat tau (from the Simpfer lower-bound arrays over
+    the top-norm item set P'); active (C,) -- lanes that actually need work;
+    eps -- absolute tie tolerance (see core/exact.py).
+
+    Returns (is_yes (C,), tiles_visited ()) where is_yes[i] means q stays in
+    u_i's top-k. Decision rule (Definition 1, strict-count convention):
+      no  <=> #{p : <u,p> > tau + eps} >= k
+      yes <=> scan exhausted / bound mu_tile <= tau with count < k.
+    """
+    n_tiles = index.tile_max_norm.shape[0]
+    n_cand_eff = index.tile if scan == "exact" else n_cand
+    ucodes = user_codes(index, users) if scan == "sketch" else \
+        jnp.zeros((users.shape[0], index.codes.shape[1]), jnp.uint32)
+
+    def cond(state):
+        t, count, undecided = state
+        return (t < n_tiles) & jnp.any(undecided)
+
+    def body(state):
+        t, count, undecided = state
+        mu = index.tile_max_norm[t]                       # scalar bound
+        # Lanes whose tau already dominates the bound are decided "yes".
+        bound_done = mu <= taus
+        still = undecided & ~bound_done
+        ips, valid, _ = _tile_candidates(index, ucodes, users, t,
+                                         n_cand=n_cand_eff, scan=scan)
+        beat = jnp.sum((ips > taus[:, None] + eps) & valid, axis=-1)
+        count = count + jnp.where(still, beat, 0)
+        undecided = still & (count < k)
+        return t + 1, count, undecided
+
+    count0 = jnp.where(active, init_count, k)             # inactive: decided
+    undecided0 = active & (count0 < k)
+    t_fin, count_fin, _ = jax.lax.while_loop(
+        cond, body, (jnp.asarray(0, jnp.int32), count0, undecided0))
+    is_yes = active & (count_fin < k)
+    return is_yes, t_fin
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_cand", "scan"))
+def kmips_topk(index: SAALSHIndex, queries: jnp.ndarray, k: int,
+               *, n_cand: int = 64, scan: str = "sketch"):
+    """Approximate kMIPS (Algorithm 2) for a batch of query/user vectors.
+
+    queries (Q, d) -- need not be unit (the bound uses ||q||).
+    Returns (vals (Q, k) descending, ids (Q, k) original item rows,
+    tiles_visited ()). Early-terminates when the current kth best phi
+    dominates the Cauchy-Schwarz bound mu_tile * ||q|| for every query.
+    """
+    n_tiles = index.tile_max_norm.shape[0]
+    qn = jnp.linalg.norm(queries, axis=-1)                # (Q,)
+    n_cand_eff = index.tile if scan == "exact" else n_cand
+    ucodes = user_codes(index, queries) if scan == "sketch" else \
+        jnp.zeros((queries.shape[0], index.codes.shape[1]), jnp.uint32)
+
+    nq = queries.shape[0]
+    vals0 = jnp.full((nq, k), _NEG, jnp.float32)
+    ids0 = jnp.full((nq, k), -1, jnp.int32)
+
+    def cond(state):
+        t, vals, _ = state
+        phi = vals[:, -1]                                 # kth best so far
+        mu = index.tile_max_norm[jnp.minimum(t, n_tiles - 1)] * qn
+        return (t < n_tiles) & jnp.any(phi < mu)
+
+    def body(state):
+        t, vals, ids = state
+        tile = index.tile
+        ips, valid, local = _tile_candidates(index, ucodes, queries, t,
+                                             n_cand=n_cand_eff, scan=scan)
+        ips = jnp.where(valid, ips, _NEG)
+        global_ids = jnp.take(
+            index.item_ids, t * tile + local, axis=0)     # (Q, c)
+        merged_v = jnp.concatenate([vals, ips], axis=-1)
+        merged_i = jnp.concatenate([ids, global_ids], axis=-1)
+        best_v, pos = jax.lax.top_k(merged_v, k)
+        best_i = jnp.take_along_axis(merged_i, pos, axis=-1)
+        return t + 1, best_v, best_i
+
+    t_fin, vals, ids = jax.lax.while_loop(cond, body, (jnp.asarray(0, jnp.int32),
+                                                       vals0, ids0))
+    return vals, ids, t_fin

@@ -1,0 +1,244 @@
+"""SAH: Shifting-aware Asymmetric Hashing for RkMIPS (Algorithms 4-5).
+
+Combines SA-ALSH (core/sa_alsh.py) over items with cone blocking
+(core/cone.py) and Simpfer lower bounds (core/simpfer.py) over users.
+
+Indexing (Algorithm 4):
+  1. sort items by descending norm; P' = the n_top highest-norm items;
+  2. exact lower-bound arrays L_u over P' for every user (batched matmul);
+  3. SA-ALSH index over P \\ P';
+  4. cone blocks over unit users; block lower bounds L_B = min over leaf.
+
+Query (Algorithm 5), per query q, fully batched over users:
+  1. node-level bound (Lemma 2) kills whole blocks: ub_B < L_B[k-1];
+  2. vector-level bound (Lemma 3) kills users: ub_u < L_u[k-1];
+  3. tau = <u, q> computed densely (one (m,d) matvec -- on TPU this is
+     cheaper than gathering survivors; the bounds' value is keeping users out
+     of the expensive scan, and we report both pruning stages in the stats);
+     "no" if tau < L_u[k-1]; "yes" if tau >= ||p_k|| (k-th largest item norm);
+  4. survivors are compacted (cone order => chunk locality: users in the same
+     cone have correlated early-exit depths, so chunks finish together) and
+     run through the counting scan decide_count() in fixed-size chunks.
+
+The same engine gives every paper baseline via two switches:
+  user blocking: "cone" (SAH / H2-Cone) or "norm" (Simpfer-style blocks --
+     with unit users, Simpfer's norm blocking degenerates to arbitrary
+     contiguous blocks; see DESIGN.md)
+  item scan: transform "sat" + scan "sketch" (SA-ALSH), transform "qnf"
+     (H2-ALSH), scan "exact" (Simpfer's linear scan).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cone as _cone
+from repro.core import sa_alsh as _alsh
+from repro.core import simpfer as _simpfer
+
+
+class SAHIndex(NamedTuple):
+    """Everything the query phase needs. Users live in cone-leaf order."""
+
+    alsh: _alsh.SAALSHIndex          # over P \ P'
+    users: jnp.ndarray               # (m_pad, d) unit users, leaf order
+    user_ids: jnp.ndarray            # (m_pad,) original user row
+    user_mask: jnp.ndarray           # (m_pad,) real (non-duplicate) users
+    center: jnp.ndarray              # (n_blocks, d)
+    omega: jnp.ndarray               # (n_blocks,)
+    theta: jnp.ndarray               # (m_pad,)
+    user_lb: jnp.ndarray             # (m_pad, kmax)
+    block_lb: jnp.ndarray            # (n_blocks, kmax)
+    top_norms: jnp.ndarray           # (n_top,) norms of P', descending
+    top_items: jnp.ndarray           # (n_top, d) P' item vectors
+    top_ids: jnp.ndarray             # (n_top,) original rows of P'
+
+    @property
+    def n_blocks(self) -> int:
+        return self.center.shape[0]
+
+    @property
+    def kmax(self) -> int:
+        return self.user_lb.shape[1]
+
+    @property
+    def n_users(self) -> int:
+        return self.users.shape[0]
+
+
+def build(items: jnp.ndarray, users: jnp.ndarray, key: jax.Array, *,
+          k_max: int = 50, n_top: int | None = None, leaf_size: int = 32,
+          b: float = 0.5, n_bits: int = 128, tile: int = 512,
+          max_partitions: int = 64, transform: str = "sat",
+          blocking: str = "cone") -> SAHIndex:
+    """Build the SAH index (Algorithm 4). items (n,d), users (m,d)."""
+    if n_top is None:
+        n_top = 2 * k_max
+    k_idx, k_cone = jax.random.split(jax.random.fold_in(key, 0))
+
+    norms = jnp.linalg.norm(items, axis=-1)
+    order = jnp.argsort(-norms)
+    items_sorted = items[order]
+    top_items = items_sorted[:n_top]
+    top_ids = order[:n_top].astype(jnp.int32)
+    top_norms = norms[order][:n_top]
+    rest = items_sorted[n_top:]
+
+    alsh = _alsh.build_index(rest, k_idx, b=b, n_bits=n_bits, tile=tile,
+                             max_partitions=max_partitions,
+                             transform=transform)
+    # alsh.item_ids index `rest`; shift them back to original rows.
+    alsh = alsh._replace(item_ids=jnp.where(
+        alsh.item_ids >= 0,
+        jnp.take(order.astype(jnp.int32),
+                 jnp.clip(alsh.item_ids, 0, None) + n_top),
+        -1))
+
+    unorm = jnp.linalg.norm(users, axis=-1, keepdims=True)
+    users_unit = users / jnp.maximum(unorm, 1e-12)
+
+    if blocking == "cone":
+        blocks, padded, mask = _cone.build_cone_blocks(users_unit, k_cone,
+                                                       leaf_size)
+        perm = blocks.perm
+        center, omega, theta = blocks.center, blocks.omega, blocks.theta
+    elif blocking == "norm":
+        # Simpfer-style blocking: contiguous chunks (unit users degenerate
+        # Simpfer's norm intervals to a single interval; see DESIGN.md).
+        padded, mask, n_leaves = _cone.pad_users(users_unit, leaf_size)
+        perm = jnp.arange(padded.shape[0], dtype=jnp.int32)
+        xl = padded.reshape(n_leaves, leaf_size, -1)
+        center = jnp.mean(xl, axis=1)
+        cnorm = jnp.linalg.norm(center, axis=-1, keepdims=True)
+        cos = jnp.einsum("bld,bd->bl", xl, center) / jnp.maximum(cnorm, 1e-12)
+        theta_2d = jnp.arccos(jnp.clip(cos, -1.0, 1.0))
+        omega = jnp.max(theta_2d, axis=-1)
+        theta = theta_2d.reshape(-1)
+    else:
+        raise ValueError(f"unknown blocking {blocking!r}")
+
+    users_leaf = padded[perm]
+    m = users.shape[0]
+    user_ids = (perm % m).astype(jnp.int32)
+    user_mask = mask[perm]
+
+    lb = _simpfer.user_lower_bounds(users_leaf, top_items, k_max)
+    n_blocks = center.shape[0]
+    block_lb = _simpfer.block_lower_bounds(
+        jnp.where(user_mask[:, None], lb, jnp.inf), n_blocks)
+    # All-padding blocks (impossible with cyclic padding, but be safe):
+    block_lb = jnp.where(jnp.isfinite(block_lb), block_lb, -jnp.inf)
+
+    return SAHIndex(alsh=alsh, users=users_leaf, user_ids=user_ids,
+                    user_mask=user_mask, center=center, omega=omega,
+                    theta=theta, user_lb=lb, block_lb=block_lb,
+                    top_norms=top_norms, top_items=top_items, top_ids=top_ids)
+
+
+class QueryStats(NamedTuple):
+    blocks_alive: jnp.ndarray    # after Lemma 2
+    users_alive: jnp.ndarray     # after Lemma 3
+    n_no_lb: jnp.ndarray         # decided no by tau < L[k-1]
+    n_yes_norm: jnp.ndarray      # decided yes by tau >= ||p_k||
+    n_scan: jnp.ndarray          # users that needed the item scan
+    tiles_scanned: jnp.ndarray   # total tile-visits across chunks
+    chunks: jnp.ndarray
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "n_cand", "scan", "chunk", "tie_eps"))
+def rkmips(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
+           scan: str = "sketch", chunk: int = 256, tie_eps: float = 0.0):
+    """Algorithm 5 for one query. Returns (pred (m_pad,), QueryStats).
+
+    pred is in cone-leaf order; use predictions_to_original() to map back.
+    tie_eps: relative tie tolerance, must match the oracle (core/exact.py).
+    """
+    m_pad = index.n_users
+    chunk = min(chunk, m_pad)
+    leaf = m_pad // index.n_blocks
+    qn = jnp.linalg.norm(q)
+    eps = tie_eps * qn
+    # f32 slack: the cone bounds go through arccos/cos roundtrips whose
+    # relative error is ~1e-4; without slack a mathematically-tight bound
+    # can flip a pruning decision (caught by the property tests).
+    slack = 2e-4 * qn + eps
+
+    # --- Lemma 2: block-level pruning -------------------------------------
+    node_ub, phi = _cone.node_upper_bound(q, _cone.ConeBlocks(
+        perm=jnp.arange(m_pad, dtype=jnp.int32), center=index.center,
+        omega=index.omega, theta=index.theta))
+    block_alive = node_ub >= index.block_lb[:, k - 1] - slack
+    # --- Lemma 3: vector-level pruning ------------------------------------
+    phi_u = jnp.repeat(phi, leaf)
+    vec_ub = qn * jnp.cos(jnp.abs(phi_u - index.theta))
+    user_alive = (index.user_mask & jnp.repeat(block_alive, leaf)
+                  & (vec_ub >= index.user_lb[:, k - 1] - slack))
+
+    # --- exact tau + O(1) decisions ---------------------------------------
+    tau = index.users @ q
+    no_lb = index.user_lb[:, k - 1] > tau + eps
+    yes_norm = tau >= index.top_norms[k - 1]
+    undecided = user_alive & ~no_lb & ~yes_norm
+    count0 = _simpfer.init_count(index.user_lb, tau + eps)
+
+    # --- compact survivors (cone order preserved) and scan in chunks ------
+    und_ids = jnp.argsort(~undecided)                     # undecided first
+    n_und = jnp.sum(undecided)
+    n_chunks_max = m_pad // chunk + 1
+    pred0 = yes_norm & index.user_mask
+
+    def cond(state):
+        ci, _, _ = state
+        return (ci * chunk) < n_und
+
+    def body(state):
+        ci, pred, tiles = state
+        ids = jax.lax.dynamic_slice(und_ids, (ci * chunk,), (chunk,))
+        active = (ci * chunk + jnp.arange(chunk)) < n_und
+        users_c = jnp.take(index.users, ids, axis=0)
+        taus_c = jnp.take(tau, ids)
+        counts_c = jnp.take(count0, ids)
+        is_yes, t_vis = _alsh.decide_count(index.alsh, users_c, taus_c,
+                                           counts_c, active, k,
+                                           n_cand=n_cand, scan=scan, eps=eps)
+        pred = pred.at[ids].set(jnp.where(active, is_yes, pred[ids]))
+        return ci + 1, pred, tiles + t_vis
+
+    n_chunks, pred, tiles = jax.lax.while_loop(
+        cond, body, (jnp.asarray(0, jnp.int32), pred0,
+                     jnp.asarray(0, jnp.int32)))
+    del n_chunks_max
+
+    stats = QueryStats(
+        blocks_alive=jnp.sum(block_alive),
+        users_alive=jnp.sum(user_alive),
+        n_no_lb=jnp.sum(no_lb & index.user_mask),
+        n_yes_norm=jnp.sum(yes_norm & index.user_mask),
+        n_scan=n_und,
+        tiles_scanned=tiles,
+        chunks=n_chunks,
+    )
+    return pred, stats
+
+
+def rkmips_batch(index: SAHIndex, queries: jnp.ndarray, k: int, *,
+                 n_cand: int = 64, scan: str = "sketch", chunk: int = 256,
+                 tie_eps: float = 0.0):
+    """Batch driver: (nq, d) queries -> (pred (nq, m_pad), stats stacked)."""
+    fn = functools.partial(rkmips, index, k=k, n_cand=n_cand, scan=scan,
+                           chunk=chunk, tie_eps=tie_eps)
+    return jax.lax.map(lambda q: fn(q), queries)
+
+
+def predictions_to_original(index: SAHIndex, pred: jnp.ndarray,
+                            n_users: int) -> jnp.ndarray:
+    """Map leaf-order predictions (..., m_pad) back to original rows (..., m)."""
+    masked = (pred & index.user_mask).astype(jnp.int32)
+    out = jnp.zeros(pred.shape[:-1] + (n_users,), jnp.int32)
+    out = out.at[..., index.user_ids].max(masked)
+    return out > 0

@@ -1,0 +1,47 @@
+"""Simpfer-style lower bounds (Amagata & Hara 2021), used by SAH Algorithm 4-5.
+
+For each user u we store L_u[j] = (j+1)-th largest <u, p> over the top-norm
+item prefix P' (the first n_top items in descending-norm order), j < k_max.
+Because users are unit vectors here (Fact 2), a single sorted item order
+serves every user.
+
+Decision uses (strict-count convention of core/exact.py):
+  * "no"  if tau < L_u[k-1]           (P' alone already has k items beating tau)
+  * init_count(tau) = #{j : L_u[j] > tau} is EXACT whenever tau >= L_u[kmax-1]
+    (any P' item outside the stored top-kmax has IP <= L_u[kmax-1] <= tau);
+    when tau < L_u[kmax-1] the count is >= kmax >= k so the "no" rule already
+    fired. Hence the scan over P \\ P' can start from init_count.
+  * "yes" if tau >= ||p_k|| (the k-th largest item norm): at most k-1 items
+    can have IP > tau since <u, p> <= ||p|| for unit u.
+
+Block-level bounds L_B[j] = min_{u in B} L_u[j] (Algorithm 4 lines 11-14)
+enable whole-block pruning against the node upper bound of Lemma 2.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("kmax",))
+def user_lower_bounds(users_unit: jnp.ndarray, top_items: jnp.ndarray,
+                      kmax: int) -> jnp.ndarray:
+    """L (m, kmax) descending: top-kmax IPs of each user over P'."""
+    ips = users_unit @ top_items.T                       # (m, n_top)
+    vals, _ = jax.lax.top_k(ips, kmax)
+    return vals
+
+
+def block_lower_bounds(user_lb_perm: jnp.ndarray, n_blocks: int
+                       ) -> jnp.ndarray:
+    """L_B (n_blocks, kmax) = min over each leaf's users (perm order)."""
+    m_pad, kmax = user_lb_perm.shape
+    return jnp.min(user_lb_perm.reshape(n_blocks, -1, kmax), axis=1)
+
+
+def init_count(user_lb: jnp.ndarray, tau: jnp.ndarray) -> jnp.ndarray:
+    """#{j : L_u[j] > tau} per user. user_lb (..., kmax), tau (...) -> int32."""
+    return jnp.sum(user_lb > tau[..., None], axis=-1).astype(jnp.int32)

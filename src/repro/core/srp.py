@@ -1,0 +1,55 @@
+"""Sign Random Projection (SimHash) sketches, bit-packed for Hamming scanning.
+
+The paper uses K SimHash tables with bucket probing. On TPU we keep the same
+hash family (SRP, Eq. 1) but replace bucket indirection with a bit-packed code
++ Hamming-distance ranking: for B independent SRP bits,
+
+    E[hamming(code(p), code(u))] = B * theta(p, u) / pi        (from Eq. 2)
+
+so ranking items by Hamming distance to the query code is an unbiased ranking
+by estimated angular distance -- exactly the quantity SA-ALSH's NNS needs.
+Candidates are then re-ranked with exact inner products.
+
+Codes are packed 32 bits / uint32 lane; all shapes padded to multiples of 32.
+The heavy scan (XOR + popcount over (users x items x words)) has a Pallas
+kernel in repro.kernels.hamming_topk; this module holds the jnp reference path
+used on CPU and for index building.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_BITS_PER_WORD = 32
+# Powers of two for packing: bit j of a word is set iff sign bit j is positive.
+_POW2 = (2 ** jnp.arange(_BITS_PER_WORD, dtype=jnp.uint32)).astype(jnp.uint32)
+
+
+def make_projection(key: jax.Array, dim: int, n_bits: int) -> jnp.ndarray:
+    """Gaussian projection matrix A (dim, n_bits), entries ~ N(0, 1)."""
+    if n_bits % _BITS_PER_WORD != 0:
+        raise ValueError(f"n_bits must be a multiple of 32, got {n_bits}")
+    return jax.random.normal(key, (dim, n_bits), dtype=jnp.float32)
+
+
+def pack_signs(signs: jnp.ndarray) -> jnp.ndarray:
+    """Pack a boolean sign matrix (n, B) into uint32 codes (n, B//32)."""
+    n, b = signs.shape
+    w = b // _BITS_PER_WORD
+    grouped = signs.reshape(n, w, _BITS_PER_WORD).astype(jnp.uint32)
+    return jnp.sum(grouped * _POW2[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def srp_codes(x: jnp.ndarray, proj: jnp.ndarray) -> jnp.ndarray:
+    """SRP codes of rows of x (n, dim) under proj (dim, B) -> uint32 (n, B//32)."""
+    return pack_signs(x @ proj >= 0.0)
+
+
+def hamming_distance(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs Hamming distance between packed codes.
+
+    a (na, W) uint32, b (nb, W) uint32 -> (na, nb) int32.
+    """
+    x = jnp.bitwise_xor(a[:, None, :], b[None, :, :])
+    return jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.int32)

@@ -1,0 +1,62 @@
+"""Asymmetric MIPS->NNS transformations.
+
+SAT (this paper, Eq. 6-7):
+    I(p, c) = [p - c ; sqrt(R^2 - ||p - c||^2)]     (item side, R^{d+1})
+    U(u)    = [lambda * u ; 0],  lambda = R/||u||    (user side, R^{d+1})
+  Both land on the radius-R sphere, so  cos(I(p,c), U(u)) = <p - c, u> / (R ||u||)
+  and MIPS over a shifted partition becomes angular NNS (Fact 1: shifting by the
+  partition centroid does not change the MIPS argmax).
+
+QNF (H2-ALSH baseline, Eq. 3-4):
+    I(p) = [p ; sqrt(M^2 - ||p||^2)],  U(u) = [lambda u; 0], lambda = M/||u||
+  cos(I(p), U(u)) = <p, u> / (M ||u||) -- no shifting, hence larger distortion.
+
+Note that on the user/query side the appended coordinate is 0 and lambda > 0, so
+the SRP hash sign(<a, U(u)>) = sign(<a[:d], u>): queries are hashed with the
+first d rows of the projection only, identically for SAT and QNF.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sat_item_transform(items: jnp.ndarray, centroid: jnp.ndarray,
+                       radius: jnp.ndarray) -> jnp.ndarray:
+    """SAT item transform. items (n, d), centroid (d,), radius scalar -> (n, d+1).
+
+    The appended coordinate is sqrt(max(R^2 - ||p - c||^2, 0)); the clamp guards
+    numerical round-off for the farthest point (where the argument is ~0).
+    """
+    shifted = items - centroid[None, :]
+    sq = jnp.maximum(radius ** 2 - jnp.sum(shifted * shifted, axis=-1), 0.0)
+    return jnp.concatenate([shifted, jnp.sqrt(sq)[:, None]], axis=-1)
+
+
+def qnf_item_transform(items: jnp.ndarray, max_norm: jnp.ndarray) -> jnp.ndarray:
+    """QNF item transform of H2-ALSH. items (n, d), max_norm scalar -> (n, d+1)."""
+    sq = jnp.maximum(max_norm ** 2 - jnp.sum(items * items, axis=-1), 0.0)
+    return jnp.concatenate([items, jnp.sqrt(sq)[:, None]], axis=-1)
+
+
+def user_transform(users: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """U(u) = [scale*u ; 0]. users (m, d) -> (m, d+1). Shared by SAT and QNF."""
+    scaled = users * scale[..., None]
+    zeros = jnp.zeros(users.shape[:-1] + (1,), users.dtype)
+    return jnp.concatenate([scaled, zeros], axis=-1)
+
+
+def centroid_and_radius(items: jnp.ndarray,
+                        mask: jnp.ndarray | None = None
+                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Centroid c = mean(items) and radius R = max ||p - c|| (masked)."""
+    if mask is None:
+        c = jnp.mean(items, axis=0)
+        r = jnp.sqrt(jnp.max(jnp.sum((items - c) ** 2, axis=-1)))
+        return c, r
+    w = mask.astype(items.dtype)
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    c = jnp.sum(items * w[:, None], axis=0) / denom
+    d2 = jnp.sum((items - c) ** 2, axis=-1)
+    r = jnp.sqrt(jnp.max(jnp.where(mask, d2, 0.0)))
+    return c, r

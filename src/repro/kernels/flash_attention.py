@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: fused causal flash attention (forward).
+
+The roofline table (EXPERIMENTS.md SSRoofline) shows every LM train/prefill
+cell memory-bound, dominated by attention-chunk HBM round-trips: the pure-JAX
+chunked attention materializes each (block_q, block_k) score tile in HBM
+between the QK matmul and the softmax/PV stages. This kernel keeps the tile
+in VMEM across QK -> online-softmax -> PV, so HBM traffic per layer drops
+from O(S^2/chunk * passes) score-tile bytes to just Q/K/V/O.
+
+Grid: (batch*heads, q_blocks, k_blocks) with the k axis innermost
+(sequential): the (m, l, acc) running stats live in VMEM scratch across the
+k-block sweep and are flushed to the output on the last block. Causal
+masking skips fully-masked tiles via pl.when.
+
+VMEM at block_q=block_k=512, dh=128: q/k/v tiles 3*512*128*4 = 768 KB,
+scores 512*512*4 = 1 MB, acc 256 KB -- well inside 16 MB.
+
+Backward runs through the jnp reference (jax.custom_vjp with ref recompute):
+the forward kernel is where the dry-run's dominant term lives; a fused
+backward is the next iteration (EXPERIMENTS SSPerf next-levers).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+                  *, block_q: int, block_k: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale        # (bq, dh)
+        k = k_ref[0].astype(jnp.float32)                # (bk, dh)
+        v = v_ref[0].astype(jnp.float32)
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        if causal:
+            q_pos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 0)
+            k_pos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, _NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if causal:
+        # skip tiles that are entirely above the diagonal
+        pl.when((ki * block_k) <= (qi * block_q + block_q - 1))(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool = False
+                    ) -> jnp.ndarray:
+    """q/k/v (B, H, S, Dh) -> (B, H, S, Dh). S % block == 0 (callers pad)."""
+    b, h, s, dh = q.shape
+    assert k.shape == v.shape == (b, h, s, dh), (q.shape, k.shape)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    assert s % block_q == 0 and s % block_k == 0
+    bh = b * h
+    qr = q.reshape(bh, s, dh)
+    kr = k.reshape(bh, s, dh)
+    vr = v.reshape(bh, s, dh)
+    kernel = functools.partial(_flash_kernel, block_q=block_q,
+                               block_k=block_k, causal=causal,
+                               scale=dh ** -0.5)
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, s // block_q, s // block_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda g, i, j: (g, i, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda g, i, j: (g, j, 0)),
+            pl.BlockSpec((1, block_k, dh), lambda g, i, j: (g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), lambda g, i, j: (g, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        scratch_shapes=[
+            # (block_q, 1) running max / denom, (block_q, dh) accumulator
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, dh)

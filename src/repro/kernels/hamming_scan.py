@@ -1,0 +1,59 @@
+"""Pallas TPU kernel: all-pairs Hamming distance between bit-packed SRP codes.
+
+This is the hot inner loop of SA-ALSH on TPU: for a chunk of users (queries)
+and a norm-ordered tile of items, score every pair by popcount(xor(codes)).
+Compared to the exact float scan it moves 32x fewer bytes per item
+(B bits vs d floats) and runs entirely on the VPU.
+
+Tiling: grid (q_tiles, n_tiles). Each program instance loads a
+(block_q, W) query-code tile and a (block_n, W) item-code tile into VMEM and
+writes a (block_q, block_n) int32 distance tile. The (block_q, block_n, W)
+XOR intermediate lives only in VREGs/VMEM.
+
+VMEM budget at defaults (block_q=128, block_n=512, W<=8):
+  in: 128*8*4 + 512*8*4 = 20 KB, intermediate 128*512*8*4 = 2 MB, out 256 KB
+  -- comfortably inside the ~16 MB v5e VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hamming_kernel(q_ref, n_ref, out_ref):
+    q = q_ref[...]                       # (bq, W) uint32
+    n = n_ref[...]                       # (bn, W) uint32
+    x = jnp.bitwise_xor(q[:, None, :], n[None, :, :])   # (bq, bn, W)
+    pc = jax.lax.population_count(x)
+    out_ref[...] = jnp.sum(pc, axis=-1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_n", "interpret"))
+def hamming_scores(query_codes: jnp.ndarray, item_codes: jnp.ndarray,
+                   *, block_q: int = 128, block_n: int = 512,
+                   interpret: bool = False) -> jnp.ndarray:
+    """query_codes (q, W) uint32, item_codes (n, W) uint32 -> (q, n) int32.
+
+    q and n must be multiples of block_q / block_n (callers pad; the core
+    library always presents tile-aligned code arrays).
+    """
+    q, w = query_codes.shape
+    n, w2 = item_codes.shape
+    assert w == w2, (w, w2)
+    assert q % block_q == 0 and n % block_n == 0, (q, n, block_q, block_n)
+    grid = (q // block_q, n // block_n)
+    return pl.pallas_call(
+        _hamming_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, n), jnp.int32),
+        interpret=interpret,
+    )(query_codes, item_codes)

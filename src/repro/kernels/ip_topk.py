@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: fused inner-product scoring + per-tile top-k.
+
+Hot path of `retrieval_cand` (one query against 10^6 candidates) and of the
+exact re-ranking step inside SAH: scores = Q @ C^T immediately reduced to the
+k best per candidate tile, so the (q, n) score matrix never reaches HBM --
+only (q, n_tiles, k) survives (a n/(tiles*k) ~ 64x output-byte reduction at
+tile=2048, k=32). A cheap jnp merge of the per-tile winners produces the
+global top-k (done in ops.ip_topk).
+
+Per-tile top-k is a k-step select loop (argmax + mask) on the VPU; the matmul
+runs on the MXU. k is a compile-time constant (<= 128 in all our uses).
+
+Tiling: grid (q_blocks, n_tiles); block (bq, d) x (bn, d) -> out (bq, 1, k).
+VMEM at bq=128, bn=2048, d=256: inputs 128*256*4 + 2048*256*4 = 2.2 MB,
+scores 128*2048*4 = 1 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ip_topk_kernel(q_ref, c_ref, vals_ref, ids_ref, *, k: int, block_n: int):
+    j = pl.program_id(1)
+    q = q_ref[...]                          # (bq, d)
+    c = c_ref[...]                          # (bn, d)
+    scores = jnp.dot(q, c.T, preferred_element_type=jnp.float32)  # (bq, bn)
+    base = (j * block_n).astype(jnp.int32)
+
+    def body(i, carry):
+        s, vals, ids = carry
+        arg = jnp.argmax(s, axis=-1)                       # (bq,)
+        best = jnp.max(s, axis=-1)                         # (bq,)
+        vals = vals.at[:, i].set(best)
+        ids = ids.at[:, i].set(arg.astype(jnp.int32) + base)
+        # Mask the selected column out for the next round.
+        onehot = jax.nn.one_hot(arg, s.shape[-1], dtype=jnp.bool_)
+        s = jnp.where(onehot, -jnp.inf, s)
+        return s, vals, ids
+
+    bq = scores.shape[0]
+    vals0 = jnp.full((bq, k), -jnp.inf, jnp.float32)
+    ids0 = jnp.zeros((bq, k), jnp.int32)
+    _, vals, ids = jax.lax.fori_loop(0, k, body, (scores, vals0, ids0))
+    vals_ref[...] = vals[:, None, :]
+    ids_ref[...] = ids[:, None, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "block_q", "block_n", "interpret"))
+def ip_topk_tiles(queries: jnp.ndarray, items: jnp.ndarray, k: int,
+                  *, block_q: int = 128, block_n: int = 2048,
+                  interpret: bool = False
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-tile top-k inner products.
+
+    queries (q, d) f32, items (n, d) f32 -> (vals, ids) each (q, n_tiles, k);
+    ids are global row indices into items. Requires q % block_q == 0,
+    n % block_n == 0 and block_n >= k.
+    """
+    q, d = queries.shape
+    n, d2 = items.shape
+    assert d == d2, (d, d2)
+    assert q % block_q == 0 and n % block_n == 0 and block_n >= k
+    n_tiles = n // block_n
+    kernel = functools.partial(_ip_topk_kernel, k=k, block_n=block_n)
+    return pl.pallas_call(
+        kernel,
+        grid=(q // block_q, n_tiles),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, 1, k), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_q, 1, k), lambda i, j: (i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, n_tiles, k), jnp.float32),
+            jax.ShapeDtypeStruct((q, n_tiles, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, items)

@@ -1,0 +1,93 @@
+"""Jit'd public entry points for the Pallas kernels with CPU dispatch.
+
+On TPU backends the Pallas kernels run compiled; on CPU (this container) the
+vectorized jnp oracles from ref.py are used instead -- interpret=True Pallas
+execution is reserved for the correctness tests (it runs the kernel body in
+Python per grid step, which is far too slow for benchmark workloads).
+
+Set REPRO_FORCE_INTERPRET=1 to route ops through the interpret-mode kernels
+(used by integration tests to prove the kernels compose with the full system).
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _flash
+from repro.kernels import hamming_scan as _hamming
+from repro.kernels import ip_topk as _ip_topk
+from repro.kernels import ref as _ref
+from repro.kernels import srp_hash as _srp
+
+
+def _use_pallas() -> bool:
+    if os.environ.get("REPRO_FORCE_INTERPRET"):
+        return True
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def hamming_scores(query_codes: jnp.ndarray,
+                   item_codes: jnp.ndarray) -> jnp.ndarray:
+    """(q, W) x (n, W) uint32 codes -> (q, n) int32 Hamming distances."""
+    if _use_pallas():
+        q, n = query_codes.shape[0], item_codes.shape[0]
+        bq = min(128, q) if q % min(128, q) == 0 else 1
+        bn = min(512, n) if n % min(512, n) == 0 else 1
+        return _hamming.hamming_scores(query_codes, item_codes, block_q=bq,
+                                       block_n=bn, interpret=_interpret())
+    return _ref.hamming_scores(query_codes, item_codes)
+
+
+def srp_hash(x: jnp.ndarray, proj: jnp.ndarray) -> jnp.ndarray:
+    """(n, d) f32 through (d, B) projection -> (n, B//32) uint32 codes."""
+    if _use_pallas():
+        n = x.shape[0]
+        bn = min(256, n) if n % min(256, n) == 0 else 1
+        return _srp.srp_hash(x, proj, block_n=bn, interpret=_interpret())
+    return _ref.srp_hash(x, proj)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _merge_topk(vals: jnp.ndarray, ids: jnp.ndarray, k: int):
+    q = vals.shape[0]
+    flat_v = vals.reshape(q, -1)
+    flat_i = ids.reshape(q, -1)
+    best_v, pos = jax.lax.top_k(flat_v, k)
+    best_i = jnp.take_along_axis(flat_i, pos, axis=-1)
+    return best_v, best_i
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    *, causal: bool = True) -> jnp.ndarray:
+    """Fused causal attention: Pallas on TPU, jnp oracle elsewhere.
+
+    The CPU fallback is the O(S^2)-memory oracle -- only smoke-scale shapes
+    should take it (the transformer's default stays chunked attention;
+    attn_impl='flash' is the TPU deployment path, see models/transformer)."""
+    if _use_pallas():
+        return _flash.flash_attention(q, k, v, causal=causal,
+                                      interpret=_interpret())
+    return _ref.flash_attention(q, k, v, causal=causal)
+
+
+def ip_topk(queries: jnp.ndarray, items: jnp.ndarray, k: int,
+            *, block_n: int = 2048) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact top-k inner products: (q, d) x (n, d) -> (vals, ids) (q, k)."""
+    if _use_pallas():
+        q, n = queries.shape[0], items.shape[0]
+        bq = min(128, q) if q % min(128, q) == 0 else 1
+        bn = block_n if n % block_n == 0 else (n if n <= block_n else 1)
+        if bn >= k and n % bn == 0:
+            vals, ids = _ip_topk.ip_topk_tiles(queries, items, k, block_q=bq,
+                                               block_n=bn,
+                                               interpret=_interpret())
+            return _merge_topk(vals, ids, k)
+    return _ref.ip_topk(queries, items, k)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth used by tests (assert_allclose /
+exact equality for integer outputs) and by the CPU fallback path in ops.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_POW2 = (2 ** jnp.arange(32, dtype=jnp.uint32)).astype(jnp.uint32)
+
+
+def hamming_scores(query_codes: jnp.ndarray,
+                   item_codes: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs Hamming distances.
+
+    query_codes (q, W) uint32, item_codes (n, W) uint32 -> (q, n) int32.
+    """
+    x = jnp.bitwise_xor(query_codes[:, None, :], item_codes[None, :, :])
+    return jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.int32)
+
+
+def srp_hash(x: jnp.ndarray, proj: jnp.ndarray) -> jnp.ndarray:
+    """SRP sign codes, bit packed. x (n, d), proj (d, B) -> (n, B//32) uint32.
+
+    Bit j of word w is set iff <x, proj[:, 32*w + j]> >= 0.
+    """
+    signs = (x @ proj) >= 0.0
+    n, b = signs.shape
+    grouped = signs.reshape(n, b // 32, 32).astype(jnp.uint32)
+    return jnp.sum(grouped * _POW2[None, None, :], axis=-1, dtype=jnp.uint32)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True) -> jnp.ndarray:
+    """O(S^2)-memory oracle for the flash attention kernel."""
+    dh = q.shape[-1]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * dh ** -0.5
+    if causal:
+        sq, skv = q.shape[2], k.shape[2]
+        q_pos = jnp.arange(sq) + (skv - sq)
+        mask = q_pos[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ip_topk(queries: jnp.ndarray, items: jnp.ndarray,
+            k: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact top-k inner products. queries (q, d), items (n, d) -> (q,k)x2.
+
+    Returns (values f32 descending, indices int32). Ties broken by lower index
+    (jax.lax.top_k convention).
+    """
+    scores = queries @ items.T
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx.astype(jnp.int32)

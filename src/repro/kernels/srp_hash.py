@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: fused SRP hashing -- projection matmul + sign + bitpack.
+
+Computes uint32-packed SimHash codes for a batch of (already transformed)
+vectors:  code[i, w] bit j = (x[i] . proj[:, 32w+j] >= 0).
+
+Fusion rationale (memory roofline): the naive composition materializes the
+(n, B) sign/projection matrix in HBM (n*B*4 bytes with f32 projections) before
+packing. Fused, only the (n, B/32) uint32 codes leave the chip: a 128x
+reduction in output bytes. The matmul itself runs on the MXU; sign+pack on the
+VPU, all within one VMEM residency.
+
+Tiling: grid over row blocks; each instance handles (block_n, d) x (d, B).
+d (the vector dim, <= a few hundred here) and B (128-512 bits) are kept whole
+per block: VMEM at block_n=256, d=512, B=256: in 256*512*4 = 512 KB,
+proj 512*256*4 = 512 KB, scores 256*256*4 = 256 KB -- fine.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+def _srp_kernel(x_ref, p_ref, out_ref):
+    x = x_ref[...]                         # (bn, d) f32
+    p = p_ref[...]                         # (d, B) f32
+    scores = jnp.dot(x, p, preferred_element_type=jnp.float32)   # MXU
+    signs = (scores >= 0.0).astype(jnp.uint32)                   # (bn, B)
+    bn, b = signs.shape
+    grouped = signs.reshape(bn, b // 32, 32)
+    # 2^j weights built in-kernel (TPU needs >= 2D iota; constants cannot be
+    # captured from the enclosing module).
+    bit = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    pow2 = jnp.left_shift(jnp.uint32(1), bit)
+    out_ref[...] = jnp.sum(grouped * pow2, axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def srp_hash(x: jnp.ndarray, proj: jnp.ndarray, *, block_n: int = 256,
+             interpret: bool = False) -> jnp.ndarray:
+    """x (n, d) f32, proj (d, B) f32, B % 32 == 0 -> (n, B//32) uint32 codes."""
+    n, d = x.shape
+    d2, b = proj.shape
+    assert d == d2 and b % 32 == 0, (d, d2, b)
+    assert n % block_n == 0, (n, block_n)
+    return pl.pallas_call(
+        _srp_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, b), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, b // 32), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b // 32), jnp.uint32),
+        interpret=interpret,
+    )(x, proj)

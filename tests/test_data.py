@@ -1,0 +1,76 @@
+"""Data pipeline tests: samplers, generators."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import graph as graph_data
+from repro.data import synthetic
+
+
+def test_power_law_graph_csr_valid():
+    rng = np.random.default_rng(0)
+    g = graph_data.random_power_law_graph(rng, 200, 8, 16, 5)
+    assert g.indptr.shape == (201,)
+    assert g.indptr[-1] == g.indices.shape[0]
+    assert (np.diff(g.indptr) >= 0).all()
+    assert (g.indices < 200).all() and (g.indices >= 0).all()
+
+
+def test_neighbor_sampler_invariants():
+    rng = np.random.default_rng(1)
+    g = graph_data.random_power_law_graph(rng, 500, 10, 8, 3)
+    seeds = np.arange(16)
+    sub = graph_data.sample_subgraph(rng, g, seeds, (5, 3),
+                                     pad_nodes=256, pad_edges=512)
+    e = sub["edge_mask"].sum()
+    assert e > 0
+    # all real edges reference in-subgraph nodes
+    assert (sub["src"][sub["edge_mask"]] < 256).all()
+    assert (sub["dst"][sub["edge_mask"]] < 256).all()
+    # fanout bound: each seed receives at most fanout[0] hop-1 edges
+    hop1 = sub["dst"][sub["edge_mask"]]
+    for s in range(16):
+        assert (hop1 == s).sum() <= 5
+    # supervision restricted to seeds
+    assert sub["label_mask"][:16].all()
+    assert not sub["label_mask"][16:].any()
+
+
+def test_molecule_batch_block_diagonal():
+    rng = np.random.default_rng(2)
+    b = graph_data.molecule_batch(rng, 4, 6, 10, 8, 2, pad_edges=64)
+    em = b["edge_mask"]
+    gid_src = b["graph_id"][b["src"][em]]
+    gid_dst = b["graph_id"][b["dst"][em]]
+    np.testing.assert_array_equal(gid_src, gid_dst)  # no cross-graph edges
+
+
+def test_recommendation_data_properties():
+    items, users = synthetic.recommendation_data(
+        jax.random.PRNGKey(0), 512, 1024, 32)
+    assert items.shape == (512, 32) and users.shape == (1024, 32)
+    # nmf-like: predominantly positive inner products
+    ips = items[:64] @ users[:64].T
+    assert float(jnp.mean(ips > 0)) > 0.95
+
+
+def test_lm_token_batches():
+    it = synthetic.lm_token_batches(jax.random.PRNGKey(0), 4, 16, 100,
+                                    n_batches=3)
+    batches = list(it)
+    assert len(batches) == 3
+    for b in batches:
+        assert b["tokens"].shape == (4, 16)
+        assert int(b["tokens"].max()) < 100
+        np.testing.assert_array_equal(np.asarray(b["tokens"][:, 1:]),
+                                      np.asarray(b["labels"][:, :-1]))
+
+
+def test_queries_from_items_top_band():
+    items, _ = synthetic.recommendation_data(jax.random.PRNGKey(1), 256, 8,
+                                             16)
+    q = synthetic.queries_from_items(jax.random.PRNGKey(2), items, 8)
+    norms = jnp.linalg.norm(items, axis=-1)
+    thresh = jnp.sort(norms)[int(0.5 * 256)]
+    assert float(jnp.min(jnp.linalg.norm(q, axis=-1))) >= float(thresh) * 0.5

@@ -1,0 +1,128 @@
+"""Pallas kernel correctness: interpret-mode vs jnp oracle over shape/dtype
+sweeps (per-kernel allclose, exact equality for integer outputs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import hamming_scan, ip_topk, ref, srp_hash
+from repro.kernels.ops import _merge_topk
+
+
+def _codes(key, n, w):
+    return jax.random.randint(key, (n, w), 0, 2**31 - 1,
+                              dtype=jnp.int32).astype(jnp.uint32)
+
+
+@pytest.mark.parametrize("q,n,w,bq,bn", [
+    (64, 256, 4, 32, 128),
+    (128, 512, 8, 128, 512),
+    (32, 1024, 1, 32, 256),
+    (256, 256, 16, 64, 64),
+])
+def test_hamming_matches_ref(q, n, w, bq, bn):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(q + n + w))
+    qc, ic = _codes(k1, q, w), _codes(k2, n, w)
+    out = hamming_scan.hamming_scores(qc, ic, block_q=bq, block_n=bn,
+                                      interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.hamming_scores(qc, ic)))
+
+
+def test_hamming_identity_and_complement():
+    k = jax.random.PRNGKey(0)
+    c = _codes(k, 64, 4)
+    d = hamming_scan.hamming_scores(c, c, block_q=64, block_n=64,
+                                    interpret=True)
+    assert (np.diag(np.asarray(d)) == 0).all()
+    comp = jnp.bitwise_xor(c, jnp.uint32(0xFFFFFFFF))
+    d2 = hamming_scan.hamming_scores(c, comp, block_q=64, block_n=64,
+                                     interpret=True)
+    assert (np.diag(np.asarray(d2)) == 32 * 4).all()
+
+
+@pytest.mark.parametrize("n,d,bits,bn", [
+    (256, 64, 128, 128),
+    (512, 101, 256, 256),
+    (128, 17, 32, 64),
+])
+def test_srp_hash_matches_ref(n, d, bits, bn):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n + d))
+    x = jax.random.normal(k1, (n, d))
+    proj = jax.random.normal(k2, (d, bits))
+    out = srp_hash.srp_hash(x, proj, block_n=min(bn, n), interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.srp_hash(x, proj)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_srp_hash_dtypes(dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(5))
+    x = jax.random.normal(k1, (128, 32)).astype(dtype)
+    proj = jax.random.normal(k2, (32, 64)).astype(dtype)
+    out = srp_hash.srp_hash(x.astype(jnp.float32),
+                            proj.astype(jnp.float32), block_n=128,
+                            interpret=True)
+    assert out.dtype == jnp.uint32
+
+
+@pytest.mark.parametrize("q,n,d,k,bq,bn", [
+    (8, 1024, 32, 8, 8, 256),
+    (16, 2048, 64, 32, 16, 512),
+    (4, 512, 128, 100, 4, 512),
+])
+def test_ip_topk_matches_ref(q, n, d, k, bq, bn):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(q * n))
+    queries = jax.random.normal(k1, (q, d))
+    items = jax.random.normal(k2, (n, d))
+    vals, ids = ip_topk.ip_topk_tiles(queries, items, k, block_q=bq,
+                                      block_n=bn, interpret=True)
+    bv, bi = _merge_topk(vals, ids, k)
+    rv, ri = ref.ip_topk(queries, items, k)
+    np.testing.assert_allclose(np.asarray(bv), np.asarray(rv), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(bi), np.asarray(ri))
+
+
+@pytest.mark.parametrize("b,h,s,dh,bq,bk,causal", [
+    (2, 3, 128, 32, 32, 32, True),
+    (1, 2, 256, 64, 64, 128, True),
+    (2, 2, 64, 16, 64, 16, False),
+    (1, 1, 128, 128, 128, 32, True),
+])
+def test_flash_attention_matches_ref(b, h, s, dh, bq, bk, causal):
+    key = jax.random.PRNGKey(b * s + dh)
+    q = jax.random.normal(key, (b, h, s, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, h, s, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, h, s, dh))
+    out = fa.flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                             interpret=True)
+    want = ref.flash_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=5e-5)
+
+
+def test_flash_attention_bf16():
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (1, 2, 64, 32)).astype(jnp.bfloat16)
+    k = jax.random.normal(jax.random.fold_in(key, 1),
+                          (1, 2, 64, 32)).astype(jnp.bfloat16)
+    v = jax.random.normal(jax.random.fold_in(key, 2),
+                          (1, 2, 64, 32)).astype(jnp.bfloat16)
+    out = fa.flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    want = ref.flash_attention(q, k, v)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=3e-2)
+
+
+def test_ip_topk_with_duplicate_scores():
+    # tie-breaking: top_k prefers lower index; the tiled kernel must agree
+    queries = jnp.ones((4, 16))
+    items = jnp.concatenate([jnp.ones((64, 16)), jnp.zeros((64, 16))])
+    vals, ids = ip_topk.ip_topk_tiles(queries, items, 8, block_q=4,
+                                      block_n=32, interpret=True)
+    bv, bi = _merge_topk(vals, ids, 8)
+    rv, ri = ref.ip_topk(queries, items, 8)
+    np.testing.assert_allclose(np.asarray(bv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(bi), np.asarray(ri))

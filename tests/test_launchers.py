@@ -1,0 +1,23 @@
+"""Launcher-level tests: the failure-recovery restart loop end to end."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_train_launcher_recovers_from_failure(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    repo = os.path.dirname(os.path.dirname(__file__))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--arch", "qwen3-0.6b",
+         "--smoke", "--steps", "12", "--ckpt-dir", str(tmp_path / "ck"),
+         "--ckpt-every", "4", "--simulate-failure", "6"],
+        env=env, capture_output=True, text=True, timeout=600, cwd=repo)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "worker failure" in out.stdout
+    assert "restored step 4" in out.stdout
+    assert "training complete at step 12" in out.stdout

@@ -1,0 +1,83 @@
+"""End-to-end behaviour tests: the SAH engine against the exact oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import exact, metrics, sah
+from repro.data import synthetic
+
+EPS = 1e-5
+
+
+@pytest.fixture(scope="module")
+def workload():
+    key = jax.random.PRNGKey(11)
+    ki, kq, kb = jax.random.split(key, 3)
+    items, users = synthetic.recommendation_data(ki, 2048, 4096, 48)
+    norms = jnp.linalg.norm(items, axis=-1)
+    order = jnp.argsort(-norms)
+    queries = items[order[jax.random.choice(kq, 400, (6,), replace=False)]]
+    uu = users / jnp.linalg.norm(users, axis=-1, keepdims=True)
+    idx = sah.build(items, users, kb, k_max=50, n_bits=128, tile=256,
+                    leaf_size=32)
+    return items, users, uu, queries, idx
+
+
+@pytest.mark.parametrize("k", [1, 10, 50])
+def test_exact_scan_matches_oracle(workload, k):
+    """scan='exact' is Simpfer's linear scan: must reproduce the oracle."""
+    items, users, uu, queries, idx = workload
+    truth = exact.rkmips_batch_chunked(items, uu, queries, k, tie_eps=EPS)
+    pred, _ = sah.rkmips_batch(idx, queries, k, scan="exact", tie_eps=EPS)
+    po = sah.predictions_to_original(idx, pred, users.shape[0])
+    np.testing.assert_array_equal(np.asarray(po), np.asarray(truth))
+
+
+@pytest.mark.parametrize("k", [1, 10])
+def test_sketch_scan_f1(workload, k):
+    """SA-ALSH sketch scan: approximate, F1 must stay high (paper: >0.9)."""
+    items, users, uu, queries, idx = workload
+    truth = exact.rkmips_batch_chunked(items, uu, queries, k, tie_eps=EPS)
+    pred, _ = sah.rkmips_batch(idx, queries, k, scan="sketch", n_cand=64,
+                               tie_eps=EPS)
+    po = sah.predictions_to_original(idx, pred, users.shape[0])
+    f1 = float(jnp.mean(metrics.f1_score(po, truth)))
+    assert f1 > 0.9, f1
+
+
+def test_sketch_error_is_one_sided(workload):
+    """Sketch candidate misses can only under-count beating items, which can
+    only flip a correct 'no' into a false 'yes' -- never the reverse. So the
+    sketch prediction set must contain every true positive."""
+    items, users, uu, queries, idx = workload
+    k = 10
+    truth = exact.rkmips_batch_chunked(items, uu, queries, k, tie_eps=EPS)
+    pred, _ = sah.rkmips_batch(idx, queries, k, scan="sketch", n_cand=64,
+                               tie_eps=EPS)
+    po = sah.predictions_to_original(idx, pred, users.shape[0])
+    assert bool(jnp.all(~truth | po))
+
+
+def test_batch_matches_single(workload):
+    items, users, uu, queries, idx = workload
+    k = 10
+    batch_pred, _ = sah.rkmips_batch(idx, queries, k, scan="exact",
+                                     tie_eps=EPS)
+    for i in range(2):
+        single, _ = sah.rkmips(idx, queries[i], k, scan="exact", tie_eps=EPS)
+        np.testing.assert_array_equal(np.asarray(single),
+                                      np.asarray(batch_pred[i]))
+
+
+def test_query_stats_consistent(workload):
+    items, users, uu, queries, idx = workload
+    pred, stats = sah.rkmips_batch(idx, queries, 10, scan="exact",
+                                   tie_eps=EPS)
+    m_real = int(jnp.sum(idx.user_mask))
+    assert m_real == users.shape[0]
+    s = jax.tree.map(np.asarray, stats)
+    assert (s.blocks_alive <= idx.n_blocks).all()
+    assert (s.n_scan <= s.users_alive).all()
+    assert (s.n_yes_norm + s.n_no_lb <= m_real).all()

@@ -1,0 +1,191 @@
+"""Optimizer, trainer, checkpoint, fault-tolerance, compression tests."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as ckpt
+from repro.train import compression as comp
+from repro.train import optimizer as opt_lib
+from repro.train.trainer import TrainState, make_train_step, train_loop
+
+
+def _quadratic_problem():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+
+    def loss(params, batch):
+        del batch
+        return jnp.sum((params["w"] - target) ** 2)
+
+    params = {"w": jnp.zeros(3)}
+    return loss, params, target
+
+
+@pytest.mark.parametrize("make_opt", [
+    lambda: opt_lib.adamw(0.1),
+    lambda: opt_lib.sgd(0.1, momentum=0.5),
+    lambda: opt_lib.adafactor(0.5),
+    lambda: opt_lib.chain(opt_lib.clip_by_global_norm(1.0),
+                          opt_lib.adamw(0.1)),
+    lambda: comp.error_feedback(opt_lib.adamw(0.1)),
+])
+def test_optimizers_converge(make_opt):
+    loss, params, target = _quadratic_problem()
+    opt = make_opt()
+    step = make_train_step(loss, opt)
+    state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+    sj = jax.jit(step)
+    for _ in range(300):
+        state, metrics = sj(state, None)
+    np.testing.assert_allclose(np.asarray(state.params["w"]),
+                               np.asarray(target), atol=0.05)
+
+
+def test_adamw_first_step_is_lr_sized():
+    opt = opt_lib.adamw(0.1)
+    params = {"w": jnp.asarray([1.0])}
+    grads = {"w": jnp.asarray([0.5])}
+    updates, _ = opt.update(grads, opt.init(params), params)
+    # bias-corrected first step = -lr * g/|g| = -0.1
+    np.testing.assert_allclose(np.asarray(updates["w"]), [-0.1], rtol=1e-4)
+
+
+def test_adafactor_state_is_factored():
+    opt = opt_lib.adafactor(0.1)
+    params = {"w": jnp.zeros((32, 16)), "b": jnp.zeros((16,))}
+    st = opt.init(params)
+    assert st["v"]["w"]["r"].shape == (32,)
+    assert st["v"]["w"]["c"].shape == (16,)
+    assert st["v"]["b"]["full"].shape == (16,)
+
+
+def test_grad_accum_matches_full_batch():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (4, 4))
+
+    def loss(params, batch):
+        return jnp.mean((batch["x"] @ params["w"] - batch["y"]) ** 2)
+
+    params = {"w": w}
+    opt = opt_lib.sgd(0.1, momentum=0.0)
+    batch = {"x": jax.random.normal(key, (8, 4)),
+             "y": jax.random.normal(jax.random.fold_in(key, 1), (8, 4))}
+    s1 = make_train_step(loss, opt)
+    s2 = make_train_step(loss, opt, grad_accum=4)
+    st = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+    out1, m1 = jax.jit(s1)(st, batch)
+    out2, m2 = jax.jit(s2)(st, batch)
+    np.testing.assert_allclose(np.asarray(out1.params["w"]),
+                               np.asarray(out2.params["w"]), rtol=1e-5)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2], jnp.int32)},
+            "d": jnp.asarray(3.5, jnp.bfloat16)}
+    ckpt.save(str(tmp_path), 7, tree, {"note": "x"})
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, meta = ckpt.restore(str(tmp_path), 7, like)
+    assert meta["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_incomplete_not_visible(tmp_path):
+    # a tmp dir (simulated crash mid-write) must be invisible to latest_step
+    os.makedirs(tmp_path / ".tmp_step_00000009")
+    assert ckpt.latest_step(str(tmp_path)) is None
+    ckpt.save(str(tmp_path), 3, {"a": jnp.zeros(1)})
+    assert ckpt.latest_step(str(tmp_path)) == 3
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError, match="shape"):
+        ckpt.restore(str(tmp_path), 1, {"a": jnp.zeros((3, 2))})
+
+
+def test_checkpoint_prune(tmp_path):
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, {"a": jnp.zeros(1)})
+    ckpt.prune(str(tmp_path), keep=2)
+    steps = sorted(int(n[5:]) for n in os.listdir(tmp_path)
+                   if n.startswith("step_"))
+    assert steps == [4, 5]
+
+
+def test_failure_recovery_resumes_identically(tmp_path):
+    """Train 10 steps with a crash at step 6 + restart == uninterrupted."""
+    loss, params_proto, _ = _quadratic_problem()
+    opt = opt_lib.adamw(0.05)
+    step = make_train_step(loss, opt)
+
+    def fresh_params():
+        # train_loop donates the state; each run needs its own buffers
+        return jax.tree.map(lambda x: jnp.array(x, copy=True), params_proto)
+
+    def data():
+        while True:
+            yield None
+
+    # uninterrupted reference
+    params = fresh_params()
+    ref = train_loop(
+        TrainState(params, opt.init(params), jnp.zeros((), jnp.int32)),
+        step, data(), n_steps=10, log_every=100, log_fn=lambda s: None)
+
+    # crash at step 6, recover from checkpoint (every 2 steps)
+    cdir = str(tmp_path / "ck")
+    params = fresh_params()
+    state = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+    with pytest.raises(RuntimeError, match="simulated"):
+        train_loop(state, step, data(), n_steps=10, ckpt_dir=cdir,
+                   ckpt_every=2, fail_at_step=6, log_every=100,
+                   log_fn=lambda s: None)
+    last = ckpt.latest_step(cdir)
+    assert last == 6
+    params = fresh_params()
+    like = TrainState(params, opt.init(params), jnp.zeros((), jnp.int32))
+    state, _ = ckpt.restore(cdir, last, like)
+    resumed = train_loop(state, step, data(), n_steps=10, log_every=100,
+                         log_fn=lambda s: None)
+    np.testing.assert_allclose(np.asarray(resumed.params["w"]),
+                               np.asarray(ref.params["w"]), rtol=1e-6)
+
+
+def test_int8_quantization_error_bound():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (256,)) * 3.0
+    q, s = comp.quantize_int8(x)
+    err = jnp.max(jnp.abs(comp.dequantize_int8(q, s) - x))
+    assert float(err) <= float(s) / 2 + 1e-6
+
+
+def test_error_feedback_preserves_signal():
+    """With EF, repeated identical gradients must not lose mass: the sum of
+    compressed updates converges to the sum of true gradients."""
+    inner = opt_lib.sgd(1.0, momentum=0.0)
+    opt = comp.error_feedback(inner)
+    params = {"w": jnp.zeros(4)}
+    st = opt.init(params)
+    g = {"w": jnp.asarray([1e-4, 1.0, -0.5, 2.0])}
+    total = jnp.zeros(4)
+    for _ in range(50):
+        upd, st = opt.update(g, st, params)
+        total = total + upd["w"]
+    np.testing.assert_allclose(np.asarray(-total / 50),
+                               np.asarray(g["w"]), rtol=0.02, atol=1e-4)
+
+
+def test_watchdog_flags_stragglers():
+    from repro.train.trainer import Watchdog
+    wd = Watchdog(threshold=3.0)
+    for _ in range(10):
+        assert not wd.observe(0.1)
+    assert wd.observe(1.0)
+    assert wd.slow_steps == 1
