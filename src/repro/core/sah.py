@@ -189,7 +189,6 @@ def rkmips(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
     # --- compact survivors (cone order preserved) and scan in chunks ------
     und_ids = jnp.argsort(~undecided)                     # undecided first
     n_und = jnp.sum(undecided)
-    n_chunks_max = m_pad // chunk + 1
     pred0 = yes_norm & index.user_mask
 
     def cond(state):
@@ -212,7 +211,6 @@ def rkmips(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
     n_chunks, pred, tiles = jax.lax.while_loop(
         cond, body, (jnp.asarray(0, jnp.int32), pred0,
                      jnp.asarray(0, jnp.int32)))
-    del n_chunks_max
 
     stats = QueryStats(
         blocks_alive=jnp.sum(block_alive),

@@ -1,0 +1,89 @@
+"""Forward-compat shims for the distributed API surface.
+
+Every sharded call site in this repo (models/, launch/, tests/) targets the
+modern public API: ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=...,
+check_vma=...)`` and ``jax.make_mesh``. On the pinned 0.4.x toolchain,
+shard_map still lives under ``jax.experimental.shard_map`` and its residual
+check is spelled ``check_rep``. This module resolves whichever implementation
+the installed jax provides and exposes one stable ``shard_map`` callable;
+``install()`` additionally aliases it onto the ``jax`` namespace so code (and
+subprocess test scripts) written against the modern API run unchanged.
+
+install() is idempotent, never overrides a native implementation, and touches
+no device state -- safe to run at import time (see launch/mesh.py's
+constraint that imports must not initialize the jax backend).
+"""
+
+from __future__ import annotations
+
+import jax
+
+_NATIVE_SHARD_MAP = getattr(jax, "shard_map", None)
+if _NATIVE_SHARD_MAP is None:
+    from jax.experimental.shard_map import shard_map as _EXPERIMENTAL_SHARD_MAP
+else:
+    _EXPERIMENTAL_SHARD_MAP = None
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None, *,
+              check_vma=None, check_rep=None, **kwargs):
+    """jax.shard_map with both spellings of the replication-check kwarg.
+
+    ``check_vma`` (jax >= 0.6) and ``check_rep`` (jax 0.4/0.5) are the same
+    knob; whichever is passed is forwarded under the name the installed jax
+    understands. All other arguments pass through untouched.
+    """
+    check = check_vma if check_vma is not None else check_rep
+    if check is None:
+        check = True
+    if _NATIVE_SHARD_MAP is not None:
+        return _NATIVE_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=check,
+                                 **kwargs)
+    return _EXPERIMENTAL_SHARD_MAP(f, mesh=mesh, in_specs=in_specs,
+                                   out_specs=out_specs, check_rep=check,
+                                   **kwargs)
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """jax.make_mesh fallback for jax versions that predate it."""
+    native = getattr(jax, "make_mesh", None)
+    if native is not None and native is not make_mesh:
+        try:
+            return native(axis_shapes, axis_names, devices=devices)
+        except TypeError:       # older signature without devices kwarg
+            if devices is None:
+                return native(axis_shapes, axis_names)
+            raise
+    import numpy as np
+    devs = list(devices) if devices is not None else jax.devices()
+    n = int(np.prod(axis_shapes))
+    return jax.sharding.Mesh(
+        np.asarray(devs[:n]).reshape(axis_shapes), axis_names)
+
+
+@jax.custom_jvp
+def optimization_barrier(x):
+    """Differentiable jax.lax.optimization_barrier.
+
+    jax 0.4.x has no differentiation rule for the barrier primitive; newer
+    jax does. The barrier exists to pin layout/scheduling decisions on the
+    *primal* value (e.g. stop XLA folding an f32 upcast into a scan carry),
+    so the tangent passes through unbarriered -- gradients are unaffected
+    either way.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+@optimization_barrier.defjvp
+def _optimization_barrier_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return jax.lax.optimization_barrier(x), t
+
+
+def install() -> None:
+    """Alias the modern distributed API onto ``jax`` if it is missing."""
+    if getattr(jax, "shard_map", None) is None:
+        jax.shard_map = shard_map
+    if getattr(jax, "make_mesh", None) is None:
+        jax.make_mesh = make_mesh

@@ -71,6 +71,57 @@ def test_batch_matches_single(workload):
                                       np.asarray(batch_pred[i]))
 
 
+def test_batch_matches_single_sketch(workload):
+    """rkmips_batch is a lax.map over rkmips: predictions must be identical
+    per query under the sketch scan too (regression for the chunked
+    while-loop driver in core/sah.py::rkmips)."""
+    items, users, uu, queries, idx = workload
+    k = 10
+    batch_pred, batch_stats = sah.rkmips_batch(idx, queries, k,
+                                               scan="sketch", n_cand=64,
+                                               tie_eps=EPS)
+    for i in range(queries.shape[0]):
+        single, stats = sah.rkmips(idx, queries[i], k, scan="sketch",
+                                   n_cand=64, tie_eps=EPS)
+        np.testing.assert_array_equal(np.asarray(single),
+                                      np.asarray(batch_pred[i]))
+        assert int(stats.chunks) == int(batch_stats.chunks[i])
+
+
+def test_predictions_to_original_roundtrip():
+    """Leaf-order -> original-row mapping: row u is True iff any real
+    (non-padding) leaf slot of u is True; padding duplicates (user_mask
+    False) never leak into the original rows. m=50 with leaf_size=16 pads
+    to 64 slots, so 14 slots are cyclic duplicates of real users."""
+    key = jax.random.PRNGKey(3)
+    ki, ku = jax.random.split(key)
+    items = jax.random.normal(ki, (256, 12))
+    users = jax.random.normal(ku, (50, 12))
+    idx = sah.build(items, users, key, k_max=5, n_bits=32, tile=64,
+                    leaf_size=16)
+    m = users.shape[0]
+    user_ids = np.asarray(idx.user_ids)
+    mask = np.asarray(idx.user_mask)
+    assert not mask.all()                     # padding duplicates exist
+
+    rng = np.random.default_rng(7)
+    pred = jnp.asarray(rng.random(idx.n_users) < 0.3)
+    po = np.asarray(sah.predictions_to_original(idx, pred, m))
+    expect = np.zeros(m, bool)
+    np.logical_or.at(expect, user_ids, np.asarray(pred) & mask)
+    np.testing.assert_array_equal(po, expect)
+
+    # Padding-only positives must collapse to an all-False original view.
+    pad_only = jnp.asarray(~mask)
+    po_pad = np.asarray(sah.predictions_to_original(idx, pad_only, m))
+    assert not po_pad.any()
+
+    # Batched leading dims map row-wise.
+    pred2 = jnp.stack([pred, ~pred])
+    po2 = np.asarray(sah.predictions_to_original(idx, pred2, m))
+    np.testing.assert_array_equal(po2[0], po)
+
+
 def test_query_stats_consistent(workload):
     items, users, uu, queries, idx = workload
     pred, stats = sah.rkmips_batch(idx, queries, 10, scan="exact",
