@@ -5,13 +5,12 @@ problems -- the paper's motivation table).
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import exact, metrics, sa_alsh
+from repro import RkMIPSEngine, get_config
+from repro.core import exact, metrics
 
 
 def run(n=16384, m=16384, d=64, nq=32, ks=(1, 5, 10, 20, 30, 40, 50)):
@@ -21,26 +20,19 @@ def run(n=16384, m=16384, d=64, nq=32, ks=(1, 5, 10, 20, 30, 40, 50)):
 
     for transform in ("sat", "qnf"):
         name = "SA-ALSH" if transform == "sat" else "H2-ALSH"
-        key = jax.random.PRNGKey(2)
-        t0 = time.perf_counter()
-        idx = sa_alsh.build_index(wl.items, key, transform=transform)
-        jax.block_until_ready(idx.codes)
+        eng = RkMIPSEngine(get_config("sah").replace(transform=transform))
+        eng.build(wl.items, None, jax.random.PRNGKey(2))   # kMIPS-only
         rows.append(common.fmt_row(f"fig6/index/{name}",
-                                   (time.perf_counter() - t0) * 1e6, ""))
+                                   eng.build_seconds * 1e6, ""))
         for k in ks:
             n_cand = max(64, 4 * k)       # candidate depth scales with k
-            vals, ids, _ = sa_alsh.kmips_topk(idx, wl.queries, k,
-                                              n_cand=n_cand)
-            jax.block_until_ready(vals)
-            t0 = time.perf_counter()
-            vals, ids, tiles = sa_alsh.kmips_topk(idx, wl.queries, k,
-                                                  n_cand=n_cand)
-            jax.block_until_ready(vals)
-            dt = (time.perf_counter() - t0) / nq
-            rec = float(jnp.mean(metrics.recall_at_k(ids, ti[:, :k])))
+            eng.kmips(wl.queries, k, n_cand=n_cand)        # warm (compile)
+            res = eng.kmips(wl.queries, k, n_cand=n_cand)
+            dt = res.seconds / nq
+            rec = float(jnp.mean(metrics.recall_at_k(res.ids, ti[:, :k])))
             rows.append(common.fmt_row(
                 f"fig6/kmips/{name}/k={k}", dt * 1e6,
-                f"recall={rec:.3f};tiles={int(tiles)}"))
+                f"recall={rec:.3f};tiles={res.tiles_visited}"))
 
     # Table 2: use top-k users by <u, q> as a (bad) RkMIPS answer.
     for k in (1, 10, 50):

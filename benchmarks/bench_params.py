@@ -8,29 +8,21 @@ saturates around K=128 while time grows (Fig. 4); N0 is insensitive
 
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
 from benchmarks import common
-from repro.core import metrics, sah
+from repro import RkMIPSEngine, get_config
+from repro.core import metrics
 
 
-def _measure(wl, k, **build_kwargs):
-    idx = sah.build(wl.items, wl.users, jax.random.PRNGKey(3),
-                    k_max=50, **build_kwargs)
-    jax.block_until_ready(idx.users)
-    pred, _ = sah.rkmips_batch(idx, wl.queries, k, scan="sketch",
-                               n_cand=64, tie_eps=common.TIE_EPS)
-    jax.block_until_ready(pred)
-    t0 = time.perf_counter()
-    pred, _ = sah.rkmips_batch(idx, wl.queries, k, scan="sketch",
-                               n_cand=64, tie_eps=common.TIE_EPS)
-    jax.block_until_ready(pred)
-    dt = (time.perf_counter() - t0) / wl.queries.shape[0]
-    po = sah.predictions_to_original(idx, pred, wl.users.shape[0])
-    f1 = float(jnp.mean(metrics.f1_score(po, wl.truth[k])))
+def _measure(wl, k, **overrides):
+    cfg = get_config("sah").replace(k_max=50, **overrides)
+    eng = RkMIPSEngine(cfg).build(wl.items, wl.users, jax.random.PRNGKey(3))
+    eng.query_batch(wl.queries, k)                       # warm (compile)
+    res = eng.query_batch(wl.queries, k)
+    dt = res.seconds / wl.queries.shape[0]
+    f1 = float(jnp.mean(metrics.f1_score(res.predictions, wl.truth[k])))
     return dt, f1
 
 

@@ -17,12 +17,12 @@ def run(n=8192, m=16384, d=64, nq=16, ks=(1, 5, 10, 20, 30, 40, 50)):
     wl = common.make_workload("nmf", n, m, d, nq, ks)
     rows = []
     for method in common.METHODS:
-        idx, t_build = common.build_method(wl, method)
+        eng, t_build = common.build_method(wl, method)
         rows.append(common.fmt_row(
             f"table1/index_time/{method}", t_build * 1e6,
             f"n={n};m={m}"))
         for k in ks:
-            dt, f1, stats = common.run_method(wl, idx, method, k)
+            dt, f1, stats = common.run_method(wl, eng, k)
             rows.append(common.fmt_row(
                 f"fig1/query/{method}/k={k}", dt * 1e6,
                 f"f1={f1:.3f};scanned={int(stats.n_scan.mean())}"))

@@ -1,21 +1,23 @@
-"""Quickstart: build a SAH index and answer RkMIPS queries.
+"""Quickstart: build a SAH engine and answer RkMIPS queries.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Generates an MF-like synthetic recommendation dataset (the paper's data
-regime), builds the SAH index (SAT + SRP sketches + cone blocking + Simpfer
-lower bounds), answers reverse queries for a handful of promoted items, and
-reports F1 against the exact oracle plus pruning statistics.
+regime), builds the SAH engine from its registry preset (SAT + SRP sketches
++ cone blocking + Simpfer lower bounds), answers reverse queries for a
+handful of promoted items, and reports F1 against the exact oracle plus
+pruning statistics. Predictions and the oracle share one EngineConfig, so
+the tie tolerance can never drift between the two.
 """
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import exact, metrics, sah
+from repro import RkMIPSEngine, get_config
+from repro.core import metrics
 from repro.data import synthetic
 
 
@@ -26,6 +28,8 @@ def main():
     ap.add_argument("--dim", type=int, default=64)
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--queries", type=int, default=8)
+    ap.add_argument("--method", default="sah",
+                    help="engine registry preset (sah, sa-simpfer, ...)")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -35,37 +39,30 @@ def main():
     queries = synthetic.queries_from_items(kq, items, args.queries)
 
     print(f"items={args.n_items} users={args.m_users} d={args.dim} "
-          f"k={args.k}")
-    t0 = time.time()
-    index = sah.build(items, users, kb, k_max=50, n_bits=128)
-    jax.block_until_ready(index.users)
-    print(f"SAH index built in {time.time()-t0:.2f}s "
-          f"(partitions={int(index.alsh.n_parts)}, "
-          f"cone blocks={index.n_blocks})")
+          f"k={args.k} method={args.method}")
+    eng = RkMIPSEngine(get_config(args.method)).build(items, users, kb)
+    print(f"SAH index built in {eng.build_seconds:.2f}s "
+          f"(partitions={int(eng.index.alsh.n_parts)}, "
+          f"cone blocks={eng.index.n_blocks})")
 
-    t0 = time.time()
-    pred, stats = sah.rkmips_batch(index, queries, args.k, scan="sketch",
-                                   tie_eps=1e-5)
-    pred_orig = sah.predictions_to_original(index, pred, args.m_users)
-    jax.block_until_ready(pred_orig)
-    dt = (time.time() - t0) / args.queries
+    res = eng.query_batch(queries, args.k)
+    dt = res.seconds / args.queries
 
-    uu = users / jnp.linalg.norm(users, axis=-1, keepdims=True)
-    truth = exact.rkmips_batch_chunked(items, uu, queries, args.k,
-                                       tie_eps=1e-5)
-    f1 = metrics.f1_score(pred_orig, truth)
+    truth = eng.oracle(queries, args.k)
+    f1 = metrics.f1_score(res.predictions, truth)
     print(f"\nper-query time: {dt*1e3:.1f} ms   mean F1: "
           f"{float(jnp.mean(f1)):.3f}")
-    s = jax.tree.map(lambda x: np.asarray(x).mean(), stats)
-    print(f"pruning: blocks alive {s.blocks_alive:.0f}/{index.n_blocks}, "
+    s = jax.tree.map(lambda x: np.asarray(x).mean(), res.stats)
+    print(f"pruning: blocks alive {s.blocks_alive:.0f}/{eng.index.n_blocks}, "
           f"decided-no by bounds {s.n_no_lb:.0f}, "
           f"decided-yes by norm {s.n_yes_norm:.0f}, "
           f"scanned {s.n_scan:.0f}/{args.m_users} users, "
           f"{s.tiles_scanned:.0f} tile-visits")
     for i in range(min(4, args.queries)):
-        res = np.where(np.asarray(pred_orig[i]))[0]
-        print(f"query {i}: {len(res)} users would see this item in their "
-              f"top-{args.k}: {res[:8].tolist()}{'...' if len(res) > 8 else ''}")
+        res_i = np.where(np.asarray(res.predictions[i]))[0]
+        print(f"query {i}: {len(res_i)} users would see this item in their "
+              f"top-{args.k}: {res_i[:8].tolist()}"
+              f"{'...' if len(res_i) > 8 else ''}")
 
 
 if __name__ == "__main__":

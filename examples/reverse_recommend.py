@@ -12,14 +12,14 @@ the two problems' answers barely overlap).
 """
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import RkMIPSEngine
 from repro.configs import base as cfg_base
-from repro.core import exact, metrics, sah
+from repro.core import metrics
 from repro.models import recsys as rec_lib
 from repro.train import optimizer as opt_lib
 from repro.train.trainer import TrainState, make_train_step
@@ -66,24 +66,21 @@ def main():
     items = rec_lib.item_tower(state.params, item_feats, cfg)
     users = rec_lib.user_tower(state.params, user_feats, cfg)
 
-    t0 = time.time()
-    index = sah.build(items, users, jax.random.fold_in(key, 7))
-    jax.block_until_ready(index.users)
-    print(f"SAH index over embeddings built in {time.time()-t0:.2f}s")
+    eng = RkMIPSEngine("sah").build(items, users, jax.random.fold_in(key, 7))
+    print(f"SAH index over embeddings built in {eng.build_seconds:.2f}s")
 
     # promote the 4 highest-norm items
     norms = jnp.linalg.norm(items, axis=-1)
     promoted = jnp.argsort(-norms)[:4]
     queries = items[promoted]
 
-    pred, _ = sah.rkmips_batch(index, queries, args.k, tie_eps=1e-5)
-    po = sah.predictions_to_original(index, pred, args.m_users)
-    uu = users / jnp.linalg.norm(users, axis=-1, keepdims=True)
-    truth = exact.rkmips_batch_chunked(items, uu, queries, args.k,
-                                       tie_eps=1e-5)
+    res = eng.query_batch(queries, args.k)
+    po = res.predictions
+    truth = eng.oracle(queries, args.k)
     f1 = metrics.f1_score(po, truth)
 
     # forward kMIPS top-k users by raw inner product (the wrong tool)
+    uu = users / jnp.linalg.norm(users, axis=-1, keepdims=True)
     fwd_scores = queries @ uu.T
     _, fwd_top = jax.lax.top_k(fwd_scores, args.k)
     for i, item_id in enumerate(np.asarray(promoted)):

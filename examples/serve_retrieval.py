@@ -17,8 +17,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import RkMIPSEngine, get_config
 from repro.configs import base as cfg_base
-from repro.core import metrics, sa_alsh
+from repro.core import metrics
 from repro.kernels import ops as kops
 from repro.models import recsys as rec_lib
 from repro.train import optimizer as opt_lib
@@ -68,12 +69,10 @@ def main():
         [jax.random.randint(jax.random.fold_in(kc, j), (args.corpus,), 0, v)
          for j, v in enumerate(cfg.item_embedding.vocab_sizes)], -1)
     cand_vecs = rec_lib.item_tower(state.params, corpus_feats, cfg)
-    t0 = time.time()
-    index = sa_alsh.build_index(cand_vecs, jax.random.fold_in(key, 5),
-                                n_bits=256)
-    jax.block_until_ready(index.codes)
-    print(f"SAH candidate index built in {time.time()-t0:.2f}s "
-          f"({int(index.n_parts)} norm partitions)")
+    eng = RkMIPSEngine(get_config("sah").replace(n_bits=256))
+    eng.build(cand_vecs, None, jax.random.fold_in(key, 5))
+    print(f"SAH candidate index built in {eng.build_seconds:.2f}s "
+          f"({int(eng.kmips_index.n_parts)} norm partitions)")
 
     # --- online: batched requests ---------------------------------------
     kr = jax.random.fold_in(key, 1234)
@@ -90,18 +89,15 @@ def main():
     jax.block_until_ready(ev)
     t_exact = time.time() - t0
 
-    sv, si, tiles = sa_alsh.kmips_topk(index, u, args.k, n_cand=64)
-    jax.block_until_ready(sv)
-    t0 = time.time()
-    sv, si, tiles = sa_alsh.kmips_topk(index, u, args.k, n_cand=64)
-    jax.block_until_ready(sv)
-    t_sah = time.time() - t0
+    eng.kmips(u, args.k, n_cand=64)                      # warm (compile)
+    sres = eng.kmips(u, args.k, n_cand=64)
+    t_sah = sres.seconds
 
-    rec = float(jnp.mean(metrics.recall_at_k(si, ei)))
-    n_tiles = index.tile_max_norm.shape[0]
+    rec = float(jnp.mean(metrics.recall_at_k(sres.ids, ei)))
+    n_tiles = eng.kmips_index.tile_max_norm.shape[0]
     print(f"\nexact : {args.requests/t_exact:8.0f} QPS")
     print(f"SAH   : {args.requests/t_sah:8.0f} QPS  recall@{args.k}={rec:.3f}"
-          f"  (scanned {int(tiles)}/{n_tiles} norm tiles)")
+          f"  (scanned {sres.tiles_visited}/{n_tiles} norm tiles)")
 
 
 if __name__ == "__main__":

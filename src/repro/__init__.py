@@ -25,3 +25,30 @@ from repro.dist import compat as _dist_compat
 
 _dist_compat.install()
 del _dist_compat
+
+# The engine registry is the package's front door (DESIGN.md SS7): every
+# paper baseline is a named preset config of one RkMIPSEngine. Re-exported
+# lazily (PEP 562): the engine pulls in repro.core, whose module-level jnp
+# constants initialize the jax backend — and `python -m repro.launch.dryrun`
+# runs this package init BEFORE it can set the fake-device-count flag, so
+# `import repro` must stay backend-free (SS1).
+__all__ = [
+    "EngineConfig",
+    "PAPER_BASELINES",
+    "RkMIPSEngine",
+    "display_name",
+    "get_config",
+    "method_names",
+    "register",
+]
+
+
+def __getattr__(name):
+    if name in __all__:
+        from repro import engine as _engine
+        return getattr(_engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,3 +1,33 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""repro.core — the paper's algorithms as pure functions (DESIGN.md SS1).
+
+Modules (no state, no meshes, no device binding — those live in
+``repro.engine`` and ``repro.launch``):
+
+  transforms   SAT / QNF asymmetric item transforms
+  srp          sign-random-projection hashing helpers
+  partitions   norm-range partitioning (Algorithm 1 lines 3-6)
+  sa_alsh      SA-ALSH index build + sketch/exact scans (Algorithms 1-2)
+  cone         cone blocking of users (Algorithm 3, balanced TPU variant)
+  simpfer      Simpfer lower-bound arrays and O(1) decisions
+  sah          the SAH index and query (Algorithms 4-5)
+  exact        brute-force kMIPS / RkMIPS oracles
+  metrics      F1 / recall scoring
+
+Application code should normally go through ``repro.engine`` — the
+config-driven facade that wraps these into one build/query surface.
+"""
+
+from repro.core import (cone, exact, metrics, partitions, sa_alsh, sah,
+                        simpfer, srp, transforms)
+
+__all__ = [
+    "cone",
+    "exact",
+    "metrics",
+    "partitions",
+    "sa_alsh",
+    "sah",
+    "simpfer",
+    "srp",
+    "transforms",
+]

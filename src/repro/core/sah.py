@@ -149,14 +149,19 @@ class QueryStats(NamedTuple):
     chunks: jnp.ndarray
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("k", "n_cand", "scan", "chunk", "tie_eps"))
-def rkmips(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
-           scan: str = "sketch", chunk: int = 256, tie_eps: float = 0.0):
-    """Algorithm 5 for one query. Returns (pred (m_pad,), QueryStats).
+def rkmips_impl(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
+                scan: str = "sketch", chunk: int = 256,
+                tie_eps: float = 0.0):
+    """Algorithm 5 for one query, undecorated. Returns (pred (m_pad,),
+    QueryStats).
 
     pred is in cone-leaf order; use predictions_to_original() to map back.
     tie_eps: relative tie tolerance, must match the oracle (core/exact.py).
+    Call ``rkmips`` (the jitted alias) directly; this impl exists for
+    composition inside outer transforms — a nested ``jax.jit`` under
+    ``shard_map`` miscompiles on this toolchain (caught by the engine's
+    sharded-equivalence test), so ``repro.engine.sharding`` traces the raw
+    body instead.
     """
     m_pad = index.n_users
     chunk = min(chunk, m_pad)
@@ -222,6 +227,11 @@ def rkmips(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
         chunks=n_chunks,
     )
     return pred, stats
+
+
+rkmips = functools.partial(
+    jax.jit, static_argnames=("k", "n_cand", "scan", "chunk", "tie_eps"),
+)(rkmips_impl)
 
 
 def rkmips_batch(index: SAHIndex, queries: jnp.ndarray, k: int, *,

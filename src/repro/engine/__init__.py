@@ -1,0 +1,38 @@
+"""repro.engine — the unified, config-driven, mesh-aware RkMIPS engine.
+
+This package is the only public way to run (R)kMIPS (DESIGN.md SS7):
+
+  * ``EngineConfig`` — one frozen, hashable dataclass for every index-build
+    and query knob, including the oracle-shared ``tie_eps``;
+  * the method **registry** — the paper's baseline matrix (DESIGN.md SS3) as
+    named presets: ``get_config("sah" | "sa-simpfer" | "h2-cone" |
+    "h2-simpfer" | "simpfer" | "exact")``;
+  * ``RkMIPSEngine`` — build / query / query_batch / kmips / oracle, with
+    predictions always in original user-id space and an optional
+    ``ShardingPolicy`` that shards the heavy scans over a mesh;
+  * ``serving_codes`` — the offline sketch build behind
+    ``launch/serve.py::build_candidate_index``.
+
+``core/`` stays purely functional underneath; everything stateful (built
+arrays, timings, lazy kMIPS index) lives here.
+"""
+
+from repro.engine.config import (EngineConfig, PAPER_BASELINES, TIE_EPS_DEFAULT,
+                                 display_name, get_config, method_names,
+                                 register)
+from repro.engine.engine import (KMIPSResult, QueryResult, RkMIPSEngine,
+                                 serving_codes)
+
+__all__ = [
+    "EngineConfig",
+    "KMIPSResult",
+    "PAPER_BASELINES",
+    "QueryResult",
+    "RkMIPSEngine",
+    "TIE_EPS_DEFAULT",
+    "display_name",
+    "get_config",
+    "method_names",
+    "register",
+    "serving_codes",
+]

@@ -1,0 +1,169 @@
+"""EngineConfig + the baseline method registry (DESIGN.md SS7).
+
+Every knob that configures an (R)kMIPS run lives in one frozen, hashable
+``EngineConfig``: the index-build parameters of ``core/sah.py::build`` and
+the query parameters of ``core/sah.py::rkmips``. The paper's whole baseline
+matrix (DESIGN.md SS3) is then a *registry* of preset configs — the engine
+never re-encodes the method grid by hand:
+
+  | name        | user blocking | item transform | item scan |
+  |-------------|---------------|----------------|-----------|
+  | sah         | cone          | sat            | sketch    |
+  | sa-simpfer  | norm          | sat            | sketch    |
+  | h2-cone     | cone          | qnf            | sketch    |
+  | h2-simpfer  | norm          | qnf            | sketch    |
+  | simpfer     | norm          | sat (unused)   | exact     |
+  | exact       | cone          | sat (unused)   | exact     |
+
+"exact" keeps SAH's cone pruning but scans items linearly — an exact
+configuration (the bounds are conservative and the linear scan is Simpfer's
+oracle-faithful counting rule), useful as an in-engine ground truth.
+
+``tie_eps`` is part of the config on purpose: build, query and the exact
+oracle must all use the same tie tolerance (see core/exact.py), and carrying
+it in loose kwargs made every caller re-remember ``1e-5`` twice. The default
+matches the repo-wide convention for queries drawn from the item set.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+TIE_EPS_DEFAULT = 1e-5
+
+_TRANSFORMS = ("sat", "qnf")
+_BLOCKINGS = ("cone", "norm")
+_SCANS = ("sketch", "exact")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """All knobs of one (R)kMIPS engine run. Frozen and hashable.
+
+    Index-build knobs (core/sah.py::build):
+      k_max:          largest query-time k the index supports.
+      n_top:          |P'| top-norm items held out for Simpfer lower bounds
+                      (None -> 2 * k_max, the build default).
+      leaf_size:      cone-block leaf size N0.
+      b:              norm-partition interval ratio (Algorithm 1).
+      n_bits:         SRP sketch width (bits; W = n_bits // 32 words).
+      tile:           item-scan tile size (rows per Cauchy-Schwarz bound).
+      max_partitions: cap on norm partitions T.
+      transform:      "sat" (SA-ALSH) or "qnf" (H2-ALSH).
+      blocking:       "cone" (Cone-Tree leaves) or "norm" (Simpfer blocks).
+
+    Query knobs (core/sah.py::rkmips):
+      scan:    "sketch" (Hamming candidates) or "exact" (linear scan).
+      n_cand:  sketch candidates re-ranked per tile.
+      chunk:   survivor-compaction chunk size.
+      tie_eps: relative tie tolerance, shared with the oracle (core/exact.py).
+    """
+
+    k_max: int = 50
+    n_top: int | None = None
+    leaf_size: int = 32
+    b: float = 0.5
+    n_bits: int = 128
+    tile: int = 512
+    max_partitions: int = 64
+    transform: str = "sat"
+    blocking: str = "cone"
+    scan: str = "sketch"
+    n_cand: int = 64
+    chunk: int = 256
+    tie_eps: float = TIE_EPS_DEFAULT
+
+    def __post_init__(self):
+        if self.transform not in _TRANSFORMS:
+            raise ValueError(f"transform must be one of {_TRANSFORMS}, "
+                             f"got {self.transform!r}")
+        if self.blocking not in _BLOCKINGS:
+            raise ValueError(f"blocking must be one of {_BLOCKINGS}, "
+                             f"got {self.blocking!r}")
+        if self.scan not in _SCANS:
+            raise ValueError(f"scan must be one of {_SCANS}, "
+                             f"got {self.scan!r}")
+        for name in ("k_max", "leaf_size", "n_bits", "tile",
+                     "max_partitions", "n_cand", "chunk"):
+            if getattr(self, name) < 1:
+                raise ValueError(f"{name} must be >= 1, "
+                                 f"got {getattr(self, name)}")
+        if self.n_top is not None and self.n_top < self.k_max:
+            raise ValueError(f"n_top ({self.n_top}) must be >= k_max "
+                             f"({self.k_max})")
+        if not 0.0 < self.b < 1.0:
+            raise ValueError(f"b must be in (0, 1), got {self.b}")
+        if self.tie_eps < 0.0:
+            raise ValueError(f"tie_eps must be >= 0, got {self.tie_eps}")
+        if self.n_bits % 32 != 0:
+            raise ValueError(f"n_bits must be a multiple of 32, "
+                             f"got {self.n_bits}")
+
+    def replace(self, **overrides) -> "EngineConfig":
+        """A copy with the given fields replaced (validation re-runs)."""
+        return dataclasses.replace(self, **overrides)
+
+    def build_kwargs(self) -> dict:
+        """Kwargs for core/sah.py::build (index construction)."""
+        return dict(k_max=self.k_max, n_top=self.n_top,
+                    leaf_size=self.leaf_size, b=self.b, n_bits=self.n_bits,
+                    tile=self.tile, max_partitions=self.max_partitions,
+                    transform=self.transform, blocking=self.blocking)
+
+    def query_kwargs(self) -> dict:
+        """Kwargs for core/sah.py::rkmips / rkmips_batch."""
+        return dict(scan=self.scan, n_cand=self.n_cand, chunk=self.chunk,
+                    tie_eps=self.tie_eps)
+
+
+# ---------------------------------------------------------------------------
+# Method registry.
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, EngineConfig] = {}
+_DISPLAY: dict[str, str] = {}
+
+
+def register(name: str, config: EngineConfig, *,
+             display: str | None = None) -> None:
+    """Register a named preset. Names are case-insensitive; re-registering
+    an existing name replaces it (configs are values, not identities)."""
+    key = name.lower()
+    _REGISTRY[key] = config
+    _DISPLAY[key] = display if display is not None else name
+
+
+def get_config(name: str) -> EngineConfig:
+    """The preset registered under ``name`` (case-insensitive)."""
+    try:
+        return _REGISTRY[name.lower()]
+    except KeyError:
+        raise KeyError(f"unknown engine method {name!r}; known: "
+                       f"{', '.join(sorted(_REGISTRY))}") from None
+
+
+def method_names() -> tuple[str, ...]:
+    """All registered method names, registration order."""
+    return tuple(_REGISTRY)
+
+
+def display_name(name: str) -> str:
+    """The paper-style display name ("sah" -> "SAH")."""
+    get_config(name)   # raise on unknown
+    return _DISPLAY[name.lower()]
+
+
+register("sah", EngineConfig(), display="SAH")
+register("sa-simpfer", EngineConfig(blocking="norm"), display="SA-Simpfer")
+register("h2-cone", EngineConfig(transform="qnf"), display="H2-Cone")
+register("h2-simpfer", EngineConfig(transform="qnf", blocking="norm"),
+         display="H2-Simpfer")
+register("simpfer", EngineConfig(blocking="norm", scan="exact"),
+         display="Simpfer")
+register("exact", EngineConfig(scan="exact"), display="Exact")
+
+# The paper's Fig.1/Fig.2 comparison grid (DESIGN.md SS3). "exact" is the
+# in-engine oracle configuration, not a benchmarked baseline.
+PAPER_BASELINES: tuple[str, ...] = ("sah", "sa-simpfer", "h2-cone",
+                                    "h2-simpfer", "simpfer")

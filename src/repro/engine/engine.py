@@ -1,0 +1,261 @@
+"""RkMIPSEngine: the one front door for (R)kMIPS (DESIGN.md SS7).
+
+The facade owns the full lifecycle that examples, benchmarks and the serving
+stack used to hand-roll from ``core/`` pieces:
+
+    eng = RkMIPSEngine("sah").build(items, users, key)
+    res = eng.query_batch(promoted_items, k=10)     # res.predictions (nq, m)
+    truth = eng.oracle(promoted_items, k=10)        # same tie_eps, always
+
+Guarantees the raw ``core/sah.py`` path does not give:
+
+  * predictions come back in **original user-id space** — the leaf-order /
+    ``predictions_to_original`` footgun lives behind the facade;
+  * build and query can never disagree on a knob: both read one frozen
+    ``EngineConfig`` (including ``tie_eps``, which ``oracle()`` shares);
+  * a ``ShardingPolicy`` with a mesh transparently shards the dense tau
+    matvec + sketch scans over users (queries) and over items (kmips) —
+    ``engine/sharding.py`` — with no caller-visible API change.
+
+``core/`` stays purely functional underneath (SS1): the engine holds arrays
+and timings, never the other way around.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import exact as _exact
+from repro.core import sa_alsh as _alsh
+from repro.core import sah as _sah
+from repro.dist.policy import NO_SHARDING, ShardingPolicy
+from repro.engine import sharding as _sharding
+from repro.engine.config import EngineConfig, get_config
+
+_KMIPS_KEY_TAG = 0x5A11      # fold_in tag for the lazily-built kMIPS index
+
+
+class QueryResult(NamedTuple):
+    """One RkMIPS answer, already mapped to original user rows.
+
+    predictions: bool, (m,) for query() / (nq, m) for query_batch().
+    stats:       core/sah.py::QueryStats (scalar / (nq,) counters).
+    seconds:     wall time of the call, compile included on first use.
+    k:           the k answered.
+    """
+
+    predictions: jnp.ndarray
+    stats: _sah.QueryStats
+    seconds: float
+    k: int
+
+
+class KMIPSResult(NamedTuple):
+    """Forward top-k MIPS answer (values descending, original item rows)."""
+
+    values: jnp.ndarray
+    ids: jnp.ndarray
+    tiles_visited: int
+    seconds: float
+    k: int
+
+
+class RkMIPSEngine:
+    """Config-driven, mesh-aware engine for RkMIPS and kMIPS.
+
+    config: an ``EngineConfig`` or a registry name ("sah", "simpfer", ...).
+    policy: sharding policy; ``NO_SHARDING`` (default) is single-device,
+            a mesh policy shards users/items over every mesh axis.
+    """
+
+    def __init__(self, config: EngineConfig | str = "sah", *,
+                 policy: ShardingPolicy = NO_SHARDING):
+        if isinstance(config, str):
+            config = get_config(config)
+        if not isinstance(config, EngineConfig):
+            raise TypeError(f"config must be an EngineConfig or a registry "
+                            f"name, got {type(config).__name__}")
+        self.config = config
+        self.policy = policy
+        self.build_seconds: float | None = None
+        self._index: _sah.SAHIndex | None = None
+        self._kmips_index: _alsh.SAALSHIndex | None = None
+        self._items: jnp.ndarray | None = None
+        self._users_unit: jnp.ndarray | None = None
+        self._key: jax.Array | None = None
+        self.n_users: int | None = None
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def build(self, items: jnp.ndarray, users: jnp.ndarray | None,
+              key: jax.Array) -> "RkMIPSEngine":
+        """Index ``items`` (n, d) for ``users`` (m, d). Returns self.
+
+        users=None builds a kMIPS-only engine (no user-side SAH index):
+        ``kmips()`` works, ``query*()`` raise. The key is consumed exactly
+        as ``core/sah.py::build`` would, so an engine build is bit-for-bit
+        the raw build with ``config.build_kwargs()``.
+        """
+        t0 = time.perf_counter()
+        self._items = items
+        self._key = key
+        # rebuilding drops every derived artifact of the previous build
+        self._index = None
+        self._kmips_index = None
+        self._users_unit = None
+        self.n_users = None
+        if users is None:
+            self._kmips_index = self._build_kmips_index(key)
+            jax.block_until_ready(self._kmips_index.codes)
+            self.build_seconds = time.perf_counter() - t0
+            return self
+        index = _sah.build(items, users, key, **self.config.build_kwargs())
+        if self.policy.mesh is not None:
+            index = _sharding.shard_index(index, self.policy)
+        jax.block_until_ready(index.users)
+        self._index = index
+        self.n_users = users.shape[0]
+        unorm = jnp.linalg.norm(users, axis=-1, keepdims=True)
+        self._users_unit = users / jnp.maximum(unorm, 1e-12)
+        self.build_seconds = time.perf_counter() - t0
+        return self
+
+    @property
+    def index(self) -> _sah.SAHIndex:
+        """The underlying SAHIndex (built arrays; read-only by convention)."""
+        if self._index is None:
+            raise RuntimeError("engine not built for RkMIPS: call "
+                               "build(items, users, key) first")
+        return self._index
+
+    @property
+    def kmips_index(self) -> _alsh.SAALSHIndex:
+        """The full-item SA-ALSH index (built lazily on first kmips())."""
+        if self._kmips_index is None:
+            if self._items is None:
+                raise RuntimeError("engine not built: call "
+                                   "build(items, users, key) first")
+            self._kmips_index = self._build_kmips_index(
+                jax.random.fold_in(self._key, _KMIPS_KEY_TAG))
+        return self._kmips_index
+
+    def _build_kmips_index(self, key: jax.Array) -> _alsh.SAALSHIndex:
+        cfg = self.config
+        return _alsh.build_index(self._items, key, b=cfg.b,
+                                 n_bits=cfg.n_bits, tile=cfg.tile,
+                                 max_partitions=cfg.max_partitions,
+                                 transform=cfg.transform)
+
+    def _check_k(self, k: int) -> None:
+        if not 1 <= k <= self.config.k_max:
+            raise ValueError(f"k={k} outside [1, k_max={self.config.k_max}] "
+                             f"supported by this index; rebuild with a "
+                             f"larger k_max")
+
+    # -- reverse queries ---------------------------------------------------
+
+    def query(self, q: jnp.ndarray, k: int) -> QueryResult:
+        """RkMIPS for one query (d,): which users have q in their top-k."""
+        index = self.index
+        self._check_k(k)
+        t0 = time.perf_counter()
+        if self.policy.mesh is not None:
+            pred, stats = _sharding.rkmips_batch(
+                index, q[None], k, self.policy, **self.config.query_kwargs())
+            pred = pred[0]
+            stats = jax.tree.map(lambda s: s[0], stats)
+        else:
+            pred, stats = _sah.rkmips(index, q, k,
+                                      **self.config.query_kwargs())
+        po = _sah.predictions_to_original(index, pred, self.n_users)
+        jax.block_until_ready(po)
+        return QueryResult(po, stats, time.perf_counter() - t0, k)
+
+    def query_batch(self, queries: jnp.ndarray, k: int) -> QueryResult:
+        """RkMIPS for a batch (nq, d) -> predictions (nq, m)."""
+        index = self.index
+        self._check_k(k)
+        t0 = time.perf_counter()
+        pred, stats = _sharding.rkmips_batch(index, queries, k, self.policy,
+                                             **self.config.query_kwargs())
+        po = _sah.predictions_to_original(index, pred, self.n_users)
+        jax.block_until_ready(po)
+        return QueryResult(po, stats, time.perf_counter() - t0, k)
+
+    # -- forward queries ---------------------------------------------------
+
+    def kmips(self, q: jnp.ndarray, k: int, *,
+              n_cand: int | None = None) -> KMIPSResult:
+        """Approximate top-k MIPS over the full item set.
+
+        q: (d,) or (Q, d). Wraps ``core/sa_alsh.py::kmips_topk`` (tiled,
+        early-terminating) on one device; with a mesh policy, the sharded
+        single-pass scan of engine/sharding.py — which covers every row,
+        so ``tiles_visited`` reports the full tile count there by design.
+        n_cand overrides the config's re-rank depth for recall/latency
+        sweeps.
+        """
+        index = self.kmips_index
+        n_cand = self.config.n_cand if n_cand is None else n_cand
+        queries = q if q.ndim == 2 else q[None]
+        t0 = time.perf_counter()
+        if self.policy.mesh is not None:
+            vals, ids = _sharding.kmips_flat(index, queries, k, self.policy,
+                                             n_cand=n_cand,
+                                             scan=self.config.scan)
+            tiles = index.tile_max_norm.shape[0]
+        else:
+            # the tiled scan re-ranks per tile: depth cannot exceed the tile
+            vals, ids, tiles = _alsh.kmips_topk(index, queries, k,
+                                                n_cand=min(n_cand,
+                                                           index.tile),
+                                                scan=self.config.scan)
+            tiles = int(tiles)
+        jax.block_until_ready(vals)
+        seconds = time.perf_counter() - t0
+        if q.ndim == 1:
+            vals, ids = vals[0], ids[0]
+        return KMIPSResult(vals, ids, tiles, seconds, k)
+
+    # -- ground truth ------------------------------------------------------
+
+    def oracle(self, queries: jnp.ndarray, k: int) -> jnp.ndarray:
+        """Exact RkMIPS truth (nq, m) with the engine's own tie_eps — the
+        F1 denominator can never drift from the index's tie convention."""
+        if self._users_unit is None:
+            raise RuntimeError("engine not built for RkMIPS: call "
+                               "build(items, users, key) first")
+        queries = queries if queries.ndim == 2 else queries[None]
+        return _exact.rkmips_batch_chunked(self._items, self._users_unit,
+                                           queries, k,
+                                           tie_eps=self.config.tie_eps)
+
+
+def serving_codes(item_vecs: jnp.ndarray, key: jax.Array, *,
+                  n_bits: int = 256, config: EngineConfig | None = None
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Offline sketch build for the serving stack (launch/serve.py).
+
+    Returns ``(codes (N, W) uint32, proj_q (D, n_bits) f32)`` where
+    ``codes[i]`` is the SAT+SRP sketch of ``item_vecs[i]`` — **input row
+    order**, so the caller can ship ``item_vecs`` and ``codes`` side by side
+    to ``sah_retrieve_step`` — and ``proj_q`` is the query-side projection
+    (the first D rows of the shared SRP matrix; the user transform's
+    appended coordinate is 0, see core/sa_alsh.py).
+    """
+    cfg = (config or get_config("sah")).replace(n_bits=n_bits)
+    idx = _alsh.build_index(item_vecs, key, b=cfg.b, n_bits=cfg.n_bits,
+                            tile=min(cfg.tile, item_vecs.shape[0]),
+                            max_partitions=cfg.max_partitions,
+                            transform=cfg.transform)
+    n = item_vecs.shape[0]
+    # build_index sorts rows by descending norm; scatter codes back to the
+    # caller's row order (padding rows have item_ids == -1, out of bounds
+    # for mode="drop", so they never land).
+    codes = jnp.zeros((n, idx.codes.shape[1]), jnp.uint32)
+    codes = codes.at[idx.item_ids].set(idx.codes, mode="drop")
+    return codes, idx.proj[:-1]

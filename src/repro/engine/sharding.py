@@ -1,0 +1,187 @@
+"""Mesh-sharded execution paths for the RkMIPS engine (DESIGN.md SS7).
+
+The engine's two heavy loops shard cleanly because both are embarrassingly
+parallel along one axis:
+
+  * RkMIPS (Algorithm 5) is independent **per user**: the dense tau matvec,
+    the Lemma 2/3 bounds and the counting scan of a user lane never look at
+    another lane. So the user side of the ``SAHIndex`` (leaf-ordered users,
+    angles, lower bounds, cone blocks) is row-sharded over every mesh axis,
+    the item side (SA-ALSH index, top-norm prefix) is replicated, and each
+    shard runs the stock ``core/sah.py::rkmips`` on its slice; one tiled
+    all-gather reassembles the (m_pad,) prediction vector and a psum merges
+    the counters. Predictions are bitwise identical to the unsharded run
+    (asserted in tests/test_engine.py): chunk compaction regroups lanes but
+    each lane's decision is self-contained.
+
+  * kMIPS shards along **items**, reusing the proven pattern of
+    ``launch/serve.py::sah_retrieve_step``: each shard Hamming-scans its code
+    slice, re-ranks its local top-``n_cand`` exactly, keeps a local top-k,
+    and one tiny all-gather + final top-k merges the winners — wire bytes
+    per query are O(shards * k), independent of the item count. The sharded
+    scan is single-pass (no tile early-exit; latency on a mesh is bounded by
+    the slowest shard, so the bound check buys nothing).
+
+Sharding enters only via ``ShardingPolicy`` (DESIGN.md SS5): ``mesh=None``
+routes every entry point to the identical single-device computation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import sa_alsh as _alsh
+from repro.core import sah as _sah
+from repro.dist.policy import ShardingPolicy
+from repro.kernels import ops as kops
+
+_BIG_HAMMING = jnp.int32(1 << 30)
+_NEG = -jnp.inf
+
+# SAHIndex fields whose leading axis is the (padded, leaf-ordered) user axis
+# or the cone-block axis; everything else (the SA-ALSH item index, the
+# top-norm prefix) is replicated.
+_USER_AXIS_FIELDS = ("users", "user_ids", "user_mask", "theta", "user_lb")
+_BLOCK_AXIS_FIELDS = ("center", "omega", "block_lb")
+
+
+def n_shards(policy: ShardingPolicy) -> int:
+    """Total device count of the policy's mesh (1 without a mesh)."""
+    if policy.mesh is None:
+        return 1
+    return policy.mesh.devices.size
+
+
+def index_specs(index: _sah.SAHIndex, policy: ShardingPolicy):
+    """PartitionSpec pytree for a SAHIndex: user/block rows over every mesh
+    axis, item side replicated. Raises if the leaf grid doesn't divide."""
+    shards = n_shards(policy)
+    if index.n_blocks % shards != 0:
+        raise ValueError(
+            f"cannot shard {index.n_blocks} cone blocks over {shards} "
+            f"devices; choose leaf_size / user count so the block count "
+            f"is a multiple of the mesh size")
+    axes = tuple(policy.mesh.axis_names)
+    specs = jax.tree.map(lambda _: P(), index)
+    row = {f: P(axes, *([None] * (getattr(index, f).ndim - 1)))
+           for f in _USER_AXIS_FIELDS + _BLOCK_AXIS_FIELDS}
+    return specs._replace(**row)
+
+
+def shard_index(index: _sah.SAHIndex, policy: ShardingPolicy
+                ) -> _sah.SAHIndex:
+    """Lay the index out for the mesh: user/block rows sharded, rest
+    replicated. No-op without a mesh."""
+    if policy.mesh is None:
+        return index
+    specs = index_specs(index, policy)
+    shardings = jax.tree.map(lambda s: NamedSharding(policy.mesh, s), specs,
+                             is_leaf=lambda x: isinstance(x, P))
+    return jax.device_put(index, shardings)
+
+
+def rkmips_batch(index: _sah.SAHIndex, queries: jnp.ndarray, k: int,
+                 policy: ShardingPolicy, *, n_cand: int = 64,
+                 scan: str = "sketch", chunk: int = 256,
+                 tie_eps: float = 0.0):
+    """Sharded Algorithm 5 over a query batch.
+
+    Returns (pred (nq, m_pad) bool in global leaf order, QueryStats with
+    per-query counters summed over shards). Without a mesh this is exactly
+    ``core/sah.py::rkmips_batch``.
+    """
+    if policy.mesh is None:
+        return _sah.rkmips_batch(index, queries, k, n_cand=n_cand,
+                                 scan=scan, chunk=chunk, tie_eps=tie_eps)
+    axes = tuple(policy.mesh.axis_names)
+    specs = index_specs(index, policy)
+
+    def local(idx_l: _sah.SAHIndex, qs: jnp.ndarray):
+        # rkmips_impl + an unrolled query loop, NOT rkmips + lax.map: on
+        # jax 0.4.x both a nested jit and a scan nested under shard_map
+        # miscompile the chunked while-loop driver (wrong predictions, not
+        # float noise — caught by the bitwise sharded-equivalence test).
+        # Unrolling costs compile time linear in nq but keeps the sharded
+        # run bitwise equal to the single-device one.
+        fn = functools.partial(_sah.rkmips_impl, idx_l, k=k, n_cand=n_cand,
+                               scan=scan, chunk=chunk, tie_eps=tie_eps)
+        per_q = [fn(qs[i]) for i in range(qs.shape[0])]
+        pred_l = jnp.stack([p for p, _ in per_q])
+        stats_l = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[s for _, s in per_q])
+        pred = jax.lax.all_gather(pred_l, axes, axis=1, tiled=True)
+        stats = jax.tree.map(lambda s: jax.lax.psum(s, axes), stats_l)
+        return pred, stats
+
+    return jax.shard_map(local, mesh=policy.mesh, in_specs=(specs, P()),
+                         out_specs=(P(), P()), check_vma=False)(index,
+                                                                queries)
+
+
+def _flat_candidates(items, item_ids, item_mask, codes, ucodes, queries,
+                     k: int, n_cand: int, scan: str):
+    """One-pass scan over a row slab: sketch (Hamming top-n_cand + exact
+    re-rank) or exact (dense IPs), then top-k. Returns (vals (Q, k),
+    ids (Q, k) original item rows)."""
+    if scan == "exact":
+        ips = jnp.where(item_mask[None, :], queries @ items.T, _NEG)
+        vals, pos = jax.lax.top_k(ips, k)
+        return vals, jnp.take(item_ids, pos)
+    dist = kops.hamming_scores(ucodes, codes)             # (Q, N)
+    dist = jnp.where(item_mask[None, :], dist, _BIG_HAMMING)
+    _, cand = jax.lax.top_k(-dist, n_cand)                # (Q, n_cand)
+    cand_vecs = jnp.take(items, cand, axis=0)             # (Q, n_cand, d)
+    ips = jnp.einsum("cnd,cd->cn", cand_vecs, queries)
+    ips = jnp.where(jnp.take(item_mask, cand, axis=0), ips, _NEG)
+    vals, pos = jax.lax.top_k(ips, k)
+    ids = jnp.take_along_axis(jnp.take(item_ids, cand, axis=0), pos, axis=-1)
+    return vals, ids
+
+
+def kmips_flat(index: _alsh.SAALSHIndex, queries: jnp.ndarray, k: int,
+               policy: ShardingPolicy, *, n_cand: int = 64,
+               scan: str = "sketch"):
+    """Single-pass kMIPS, sharded over item rows.
+
+    queries (Q, d) -> (vals (Q, k) descending, ids (Q, k) original item
+    rows). scan="sketch" Hamming-ranks then re-ranks ``n_cand`` candidates
+    **per shard** (``n_cand >=`` the local row count makes it exact);
+    scan="exact" skips the sketch and re-ranks every row. The mesh=None
+    branch is the single-device oracle of the shard_map body (exercised by
+    tests/test_engine.py); the engine's unsharded kmips uses the tiled
+    early-terminating ``kmips_topk`` instead.
+    """
+    ucodes = _alsh.user_codes(index, queries)
+    if policy.mesh is None:
+        n_c = min(max(n_cand, k), index.items.shape[0])
+        return _flat_candidates(index.items, index.item_ids, index.item_mask,
+                                index.codes, ucodes, queries, k, n_c, scan)
+
+    shards = n_shards(policy)
+    n_pad = index.items.shape[0]
+    if n_pad % shards != 0:
+        raise ValueError(
+            f"cannot shard {n_pad} item rows over {shards} devices; pick a "
+            f"tile size that is a multiple of the mesh size")
+    axes = tuple(policy.mesh.axis_names)
+
+    def local(items_l, ids_l, mask_l, codes_l, uc, qs):
+        vals_l, gids_l = _flat_candidates(items_l, ids_l, mask_l, codes_l,
+                                          uc, qs, k,
+                                          min(max(n_cand, k),
+                                              items_l.shape[0]), scan)
+        vals_all = jax.lax.all_gather(vals_l, axes, axis=1, tiled=True)
+        gids_all = jax.lax.all_gather(gids_l, axes, axis=1, tiled=True)
+        best, pos = jax.lax.top_k(vals_all, k)
+        return best, jnp.take_along_axis(gids_all, pos, axis=-1)
+
+    return jax.shard_map(
+        local, mesh=policy.mesh,
+        in_specs=(P(axes, None), P(axes), P(axes), P(axes, None), P(), P()),
+        out_specs=(P(), P()), check_vma=False,
+    )(index.items, index.item_ids, index.item_mask, index.codes, ucodes,
+      queries)

@@ -122,10 +122,11 @@ def build_candidate_index(item_vecs: jnp.ndarray, key: jax.Array,
                           n_bits: int = N_BITS):
     """Offline index build for serving: codes + query-side projection.
 
-    Uses the core SA-ALSH machinery on the (already norm-ordered or raw)
-    candidate matrix; returns (codes (N, W) uint32, proj_q (D, n_bits)).
+    Delegates to ``repro.engine.serving_codes``; returns
+    ``(codes (N, W) uint32, proj_q (D, n_bits))`` with ``codes[i]`` the
+    sketch of ``item_vecs[i]`` (input row order), directly shippable next
+    to ``item_vecs`` as the ``cand_codes`` / ``cand_vecs`` operands of
+    ``sah_retrieve_step``.
     """
-    from repro.core import sa_alsh
-    idx = sa_alsh.build_index(item_vecs, key, n_bits=n_bits,
-                              tile=min(512, item_vecs.shape[0]))
-    return idx, idx.proj[:-1]
+    from repro.engine import serving_codes
+    return serving_codes(item_vecs, key, n_bits=n_bits)

@@ -1,0 +1,278 @@
+"""repro.engine: registry parity, facade behaviour, sharded equivalence.
+
+The engine is the only public (R)kMIPS surface; these tests pin its three
+contracts: (1) every registry preset is *exactly* the raw core path with the
+equivalent kwargs — bit for bit; (2) predictions come back in original
+user-id space and match the exact oracle; (3) a mesh policy changes the
+execution layout, never the answer (subprocess on an 8-device host mesh).
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as engine_mod
+from repro.core import exact, metrics, sah
+from repro.data import synthetic
+from repro.engine import EngineConfig, RkMIPSEngine, get_config
+
+
+@pytest.fixture(scope="module")
+def workload():
+    key = jax.random.PRNGKey(5)
+    ki, kq = jax.random.split(key)
+    items, users = synthetic.recommendation_data(ki, 1024, 2048, 32)
+    queries = synthetic.queries_from_items(kq, items, 4)
+    return items, users, queries
+
+
+def test_config_is_frozen_and_hashable():
+    cfg = get_config("sah")
+    with pytest.raises(Exception):
+        cfg.scan = "exact"
+    assert cfg == EngineConfig()
+    assert len({get_config(m) for m in engine_mod.method_names()}) == 6
+    assert cfg.replace(scan="exact") == get_config("exact")
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        EngineConfig(transform="nope")
+    with pytest.raises(ValueError):
+        EngineConfig(blocking="tree")
+    with pytest.raises(ValueError):
+        EngineConfig(scan="hash")
+    with pytest.raises(ValueError):
+        EngineConfig(b=1.5)
+    with pytest.raises(ValueError):
+        EngineConfig(n_bits=100)
+    with pytest.raises(ValueError):
+        EngineConfig(n_top=10, k_max=50)
+    with pytest.raises(KeyError):
+        get_config("unknown-method")
+
+
+def test_registry_matrix():
+    """The registry encodes exactly the DESIGN.md SS3 baseline matrix."""
+    rows = {m: (c.blocking, c.transform, c.scan)
+            for m, c in ((m, get_config(m))
+                         for m in engine_mod.PAPER_BASELINES)}
+    assert rows == {
+        "sah": ("cone", "sat", "sketch"),
+        "sa-simpfer": ("norm", "sat", "sketch"),
+        "h2-cone": ("cone", "qnf", "sketch"),
+        "h2-simpfer": ("norm", "qnf", "sketch"),
+        "simpfer": ("norm", "sat", "exact"),
+    }
+    assert engine_mod.display_name("h2-cone") == "H2-Cone"
+    # display names round-trip through the case-insensitive lookup
+    for m in engine_mod.method_names():
+        assert get_config(engine_mod.display_name(m)) == get_config(m)
+
+
+@pytest.mark.parametrize("method", ["sah", "sa-simpfer", "h2-cone",
+                                    "h2-simpfer", "simpfer", "exact"])
+def test_registry_parity_with_raw_core(workload, method):
+    """Engine preset == sah.build + sah.rkmips_batch with the equivalent raw
+    kwargs, bit for bit (same key, same knobs, same user-space mapping)."""
+    items, users, queries = workload
+    key = jax.random.PRNGKey(1)
+    k = 10
+    cfg = get_config(method).replace(tile=256, n_bits=64)
+
+    eng = RkMIPSEngine(cfg).build(items, users, key)
+    res = eng.query_batch(queries, k)
+
+    idx = sah.build(items, users, key, **cfg.build_kwargs())
+    pred, _ = sah.rkmips_batch(idx, queries, k, **cfg.query_kwargs())
+    po = sah.predictions_to_original(idx, pred, users.shape[0])
+    np.testing.assert_array_equal(np.asarray(res.predictions),
+                                  np.asarray(po))
+
+
+def test_engine_f1_vs_exact_smoke(workload):
+    """Engine-level F1 against its own oracle on the synthetic workload."""
+    items, users, queries = workload
+    eng = RkMIPSEngine("sah").build(items, users, jax.random.PRNGKey(2))
+    res = eng.query_batch(queries, 10)
+    truth = eng.oracle(queries, 10)
+    assert res.predictions.shape == truth.shape == (4, users.shape[0])
+    f1 = float(jnp.mean(metrics.f1_score(res.predictions, truth)))
+    assert f1 > 0.9, f1
+    assert res.seconds > 0 and res.k == 10
+    # the "exact" preset must reach F1 == 1 exactly (linear scan)
+    eng_x = RkMIPSEngine("exact").build(items, users, jax.random.PRNGKey(2))
+    rx = eng_x.query_batch(queries, 10)
+    np.testing.assert_array_equal(np.asarray(rx.predictions),
+                                  np.asarray(eng_x.oracle(queries, 10)))
+
+
+def test_query_single_matches_batch(workload):
+    items, users, queries = workload
+    eng = RkMIPSEngine("sah").build(items, users, jax.random.PRNGKey(3))
+    batch = eng.query_batch(queries, 5)
+    single = eng.query(queries[0], 5)
+    assert single.predictions.shape == (users.shape[0],)
+    np.testing.assert_array_equal(np.asarray(single.predictions),
+                                  np.asarray(batch.predictions[0]))
+
+
+def test_k_and_lifecycle_guards(workload):
+    items, users, queries = workload
+    eng = RkMIPSEngine(get_config("sah").replace(k_max=20))
+    with pytest.raises(RuntimeError):
+        eng.query(queries[0], 5)        # not built
+    with pytest.raises(RuntimeError):
+        eng.oracle(queries, 5)
+    eng.build(items, users, jax.random.PRNGKey(4))
+    with pytest.raises(ValueError):
+        eng.query(queries[0], 21)       # k > k_max
+    with pytest.raises(ValueError):
+        eng.query(queries[0], 0)
+    # kMIPS-only engine: forward queries fine, reverse queries guarded
+    eng_k = RkMIPSEngine("sah").build(items, None, jax.random.PRNGKey(4))
+    assert eng_k.kmips(queries[0], 5).ids.shape == (5,)
+    with pytest.raises(RuntimeError):
+        eng_k.query(queries[0], 5)
+
+
+def test_rebuild_resets_state(workload):
+    """A second build() must drop every artifact of the first — serving a
+    stale kMIPS index or user-side arrays would be silently wrong."""
+    items, users, queries = workload
+    eng = RkMIPSEngine("sah").build(items, users, jax.random.PRNGKey(8))
+    eng.kmips(queries[0], 5)                  # materialize the lazy index
+    first_kmips = eng.kmips_index
+    eng.build(items[:512], users[:512], jax.random.PRNGKey(9))
+    assert eng.n_users == 512
+    assert eng.kmips_index is not first_kmips
+    assert eng.kmips_index.item_mask.shape[0] >= 512
+    assert eng.query(queries[0], 5).predictions.shape == (512,)
+    # kMIPS-only rebuild drops the user side entirely
+    eng.build(items, None, jax.random.PRNGKey(8))
+    with pytest.raises(RuntimeError):
+        eng.query(queries[0], 5)
+
+
+def test_kmips_recall(workload):
+    """Forward kMIPS through the facade: recall against the exact top-k."""
+    items, users, queries = workload
+    eng = RkMIPSEngine("sah").build(items, None, jax.random.PRNGKey(6))
+    k = 10
+    res = eng.kmips(queries, k, n_cand=128)
+    _, ti = exact.kmips(items, queries, k)
+    rec = float(jnp.mean(metrics.recall_at_k(res.ids, ti)))
+    assert rec > 0.8, rec
+    assert res.values.shape == (4, k)
+    # values are the actual inner products of the returned ids, descending
+    ips = jnp.take_along_axis(queries @ items.T, res.ids, axis=-1)
+    np.testing.assert_allclose(np.asarray(res.values), np.asarray(ips),
+                               rtol=1e-5)
+    assert bool(jnp.all(res.values[:, :-1] >= res.values[:, 1:]))
+
+
+def test_serving_codes_row_order():
+    """serving_codes returns sketches in *input* row order: row i's code
+    must equal the code build_index computed for the item that landed at
+    original row i (the launch/serve.py contract)."""
+    key = jax.random.PRNGKey(7)
+    items = jax.random.normal(key, (96, 16))
+    codes, proj_q = engine_mod.serving_codes(items, key, n_bits=64)
+    assert codes.shape == (96, 2) and codes.dtype == jnp.uint32
+    assert proj_q.shape == (16, 64)
+    from repro.core import sa_alsh
+    cfg = get_config("sah")
+    idx = sa_alsh.build_index(items, key, b=cfg.b, n_bits=64,
+                              tile=min(cfg.tile, 96),
+                              max_partitions=cfg.max_partitions,
+                              transform=cfg.transform)
+    ids = np.asarray(idx.item_ids)
+    mask = np.asarray(idx.item_mask)
+    np.testing.assert_array_equal(np.asarray(codes)[ids[mask]],
+                                  np.asarray(idx.codes)[mask])
+
+
+_SHARDED_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.engine import RkMIPSEngine, get_config
+from repro.dist.policy import ShardingPolicy
+from repro.data import synthetic
+from repro.core import exact
+
+key = jax.random.PRNGKey(0)
+ki, kq, kb = jax.random.split(key, 3)
+items, users = synthetic.recommendation_data(ki, 512, 1024, 32)
+queries = synthetic.queries_from_items(kq, items, 3)
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+policy = ShardingPolicy(mesh=mesh, rules={})
+
+# RkMIPS: sharded predictions must be bitwise equal to single-device.
+for method in ("sah", "simpfer"):
+    cfg = get_config(method).replace(tile=128, n_bits=64)
+    e0 = RkMIPSEngine(cfg).build(items, users, kb)
+    e1 = RkMIPSEngine(cfg, policy=policy).build(items, users, kb)
+    r0 = e0.query_batch(queries, 10)
+    r1 = e1.query_batch(queries, 10)
+    np.testing.assert_array_equal(np.asarray(r0.predictions),
+                                  np.asarray(r1.predictions))
+    # per-user counters are layout-independent (chunks/tiles are not)
+    for f in ("blocks_alive", "users_alive", "n_no_lb", "n_yes_norm",
+              "n_scan"):
+        np.testing.assert_array_equal(np.asarray(getattr(r0.stats, f)),
+                                      np.asarray(getattr(r1.stats, f)))
+    s1 = e1.query(queries[0], 10)
+    np.testing.assert_array_equal(np.asarray(s1.predictions),
+                                  np.asarray(r1.predictions[0]))
+    print(method, "rkmips sharded OK")
+
+# kMIPS: with full per-shard re-rank depth both layouts recover the exact
+# top-k, so sharded and unsharded agree on the ids.
+cfg = get_config("sah").replace(tile=128, n_bits=64)
+e0 = RkMIPSEngine(cfg).build(items, None, kb)
+e1 = RkMIPSEngine(cfg, policy=policy).build(items, None, kb)
+_, ti = exact.kmips(items, queries, 5)
+k0 = e0.kmips(queries, 5, n_cand=512)
+k1 = e1.kmips(queries, 5, n_cand=512)
+np.testing.assert_array_equal(np.asarray(k0.ids), np.asarray(ti))
+np.testing.assert_array_equal(np.asarray(k1.ids), np.asarray(ti))
+# the flat scan's single-device oracle agrees with its sharded body
+from repro.dist.policy import NO_SHARDING
+from repro.engine import sharding as eng_sharding
+fv, fi = eng_sharding.kmips_flat(e1.kmips_index, queries, 5, NO_SHARDING,
+                                 n_cand=512)
+np.testing.assert_array_equal(np.asarray(fi), np.asarray(ti))
+# exact-scan presets stay exact under a mesh regardless of n_cand
+e1x = RkMIPSEngine(cfg.replace(scan="exact"), policy=policy).build(
+    items, None, kb)
+kx = e1x.kmips(queries, 5, n_cand=8)
+np.testing.assert_array_equal(np.asarray(kx.ids), np.asarray(ti))
+print("kmips sharded OK")
+
+# Indivisible grids fail loudly, not wrongly (96 users -> 4 cone blocks).
+cfg3 = get_config("sah").replace(tile=128)
+try:
+    RkMIPSEngine(cfg3, policy=policy).build(items[:256], users[:96], kb)
+except ValueError as e:
+    print("divisibility guard OK:", "shard" in str(e))
+print("ALL ENGINE SHARDED OK")
+"""
+
+
+@pytest.mark.slow
+def test_engine_sharded_equivalence():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "ALL ENGINE SHARDED OK" in out.stdout
+    assert "divisibility guard OK: True" in out.stdout
