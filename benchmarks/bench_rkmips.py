@@ -13,6 +13,15 @@ from __future__ import annotations
 from benchmarks import common
 
 
+def _prev_prime(n: int) -> int:
+    """Largest prime <= n (n >= 2) — the worst case for every divisibility
+    assumption in the stack (tiles, leaves, mesh shard counts)."""
+    for c in range(n, 1, -1):
+        if all(c % p for p in range(2, int(c ** 0.5) + 1)):
+            return c
+    return 2
+
+
 def run(n=8192, m=16384, d=64, nq=16, ks=(1, 5, 10, 20, 30, 40, 50)):
     wl = common.make_workload("nmf", n, m, d, nq, ks)
     rows = []
@@ -26,4 +35,18 @@ def run(n=8192, m=16384, d=64, nq=16, ks=(1, 5, 10, 20, 30, 40, 50)):
             rows.append(common.fmt_row(
                 f"fig1/query/{method}/k={k}", dt * 1e6,
                 f"f1={f1:.3f};scanned={int(stats.n_scan.mean())}"))
+
+    # Non-divisible grid cell: prime user/item counts (the sizes the old
+    # sharded path rejected; DESIGN.md SS8 pads them with dead rows). One
+    # method suffices — the cell tracks padding overhead, not the ablation.
+    n_odd, m_odd = _prev_prime(n), _prev_prime(m)
+    wl_odd = common.make_workload("nmf", n_odd, m_odd, d, nq, ks[:1])
+    eng, t_build = common.build_method(wl_odd, "sah")
+    rows.append(common.fmt_row(
+        f"table1/index_time/sah-odd", t_build * 1e6,
+        f"n={n_odd};m={m_odd}"))
+    dt, f1, stats = common.run_method(wl_odd, eng, ks[0])
+    rows.append(common.fmt_row(
+        f"fig1/query/sah-odd/k={ks[0]}", dt * 1e6,
+        f"f1={f1:.3f};scanned={int(stats.n_scan.mean())}"))
     return rows

@@ -6,8 +6,11 @@
    (in-batch sampled softmax);
 2. embeds the item corpus with the item tower, builds the SAH candidate
    index offline (SAT + SRP codes);
-3. serves batched retrieval requests in both exact (fused ip_topk) and
-   SAH sketch-scan modes and reports recall@k of sketch vs exact + QPS.
+3. serves retrieval requests **online through the engine's serving
+   subsystem** (repro.engine.serving.RetrievalServer, DESIGN.md SS8):
+   requests arrive one at a time, are micro-batched into fixed-size
+   dispatches of the sharded sketch scan, and compared against the exact
+   fused ip_topk for recall@k + QPS.
 """
 
 import argparse
@@ -69,7 +72,8 @@ def main():
         [jax.random.randint(jax.random.fold_in(kc, j), (args.corpus,), 0, v)
          for j, v in enumerate(cfg.item_embedding.vocab_sizes)], -1)
     cand_vecs = rec_lib.item_tower(state.params, corpus_feats, cfg)
-    eng = RkMIPSEngine(get_config("sah").replace(n_bits=256))
+    eng = RkMIPSEngine(get_config("sah").replace(
+        n_bits=256, serve_batch_size=min(16, args.requests)))
     eng.build(cand_vecs, None, jax.random.fold_in(key, 5))
     print(f"SAH candidate index built in {eng.build_seconds:.2f}s "
           f"({int(eng.kmips_index.n_parts)} norm partitions)")
@@ -89,15 +93,26 @@ def main():
     jax.block_until_ready(ev)
     t_exact = time.time() - t0
 
-    eng.kmips(u, args.k, n_cand=64)                      # warm (compile)
-    sres = eng.kmips(u, args.k, n_cand=64)
-    t_sah = sres.seconds
+    # Online serving: requests arrive one at a time; the server accumulates
+    # them into fixed-size micro-batches (one compile per batch size) and
+    # dispatches the sharded sketch scan (DESIGN.md SS8).
+    server = eng.server()
+    for i in range(args.requests):                       # warm (compile)
+        server.submit(u[i])
+    server.flush(args.k, n_cand=64)
+    t0 = time.time()
+    for i in range(args.requests):
+        server.submit(u[i])
+    results = server.flush(args.k, n_cand=64)
+    jax.block_until_ready(results[-1].values)
+    t_sah = time.time() - t0
 
-    rec = float(jnp.mean(metrics.recall_at_k(sres.ids, ei)))
-    n_tiles = eng.kmips_index.tile_max_norm.shape[0]
+    sids = jnp.stack([r.ids for r in results])
+    rec = float(jnp.mean(metrics.recall_at_k(sids, ei)))
     print(f"\nexact : {args.requests/t_exact:8.0f} QPS")
     print(f"SAH   : {args.requests/t_sah:8.0f} QPS  recall@{args.k}={rec:.3f}"
-          f"  (scanned {sres.tiles_visited}/{n_tiles} norm tiles)")
+          f"  (micro-batch {server.batch_size}, "
+          f"{server.compile_count} compile)")
 
 
 if __name__ == "__main__":

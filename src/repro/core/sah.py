@@ -245,8 +245,16 @@ def rkmips_batch(index: SAHIndex, queries: jnp.ndarray, k: int, *,
 
 def predictions_to_original(index: SAHIndex, pred: jnp.ndarray,
                             n_users: int) -> jnp.ndarray:
-    """Map leaf-order predictions (..., m_pad) back to original rows (..., m)."""
+    """Map leaf-order predictions (..., m_pad) back to original rows (..., m).
+
+    Every padding convention in the stack (SS2 cyclic user padding; the
+    sharding-time dead duplicate leaves of ``engine/sharding.py::pad_index``)
+    must keep this mapping exact: padded rows are masked (``user_mask`` is
+    False) so they can never set an original row, and the scatter drops any
+    id outside [0, n_users) outright — a phantom id (e.g. a -1 sentinel)
+    cannot silently clamp onto a real user.
+    """
     masked = (pred & index.user_mask).astype(jnp.int32)
     out = jnp.zeros(pred.shape[:-1] + (n_users,), jnp.int32)
-    out = out.at[..., index.user_ids].max(masked)
+    out = out.at[..., index.user_ids].max(masked, mode="drop")
     return out > 0

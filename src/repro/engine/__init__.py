@@ -10,11 +10,15 @@ This package is the only public way to run (R)kMIPS (DESIGN.md SS7):
   * ``RkMIPSEngine`` — build / query / query_batch / kmips / oracle, with
     predictions always in original user-id space and an optional
     ``ShardingPolicy`` that shards the heavy scans over a mesh;
+  * the **online serving subsystem** (engine/serving.py, DESIGN.md SS8) —
+    ``RetrievalServer`` micro-batches single queries into fixed-size,
+    statically-shaped dispatches through the sharded flat scan, with built
+    state LRU-cached by config (``ServingCache`` / ``build_serving_state``);
   * ``serving_codes`` — the offline sketch build behind
     ``launch/serve.py::build_candidate_index``.
 
 ``core/`` stays purely functional underneath; everything stateful (built
-arrays, timings, lazy kMIPS index) lives here.
+arrays, timings, lazy kMIPS index, pending serving tickets) lives here.
 """
 
 from repro.engine.config import (EngineConfig, PAPER_BASELINES, TIE_EPS_DEFAULT,
@@ -22,17 +26,26 @@ from repro.engine.config import (EngineConfig, PAPER_BASELINES, TIE_EPS_DEFAULT,
                                  register)
 from repro.engine.engine import (KMIPSResult, QueryResult, RkMIPSEngine,
                                  serving_codes)
+from repro.engine.serving import (RetrievalServer, ServeResult, ServingCache,
+                                  ServingState, build_serving_state,
+                                  state_from_index)
 
 __all__ = [
     "EngineConfig",
     "KMIPSResult",
     "PAPER_BASELINES",
     "QueryResult",
+    "RetrievalServer",
     "RkMIPSEngine",
+    "ServeResult",
+    "ServingCache",
+    "ServingState",
     "TIE_EPS_DEFAULT",
+    "build_serving_state",
     "display_name",
     "get_config",
     "method_names",
     "register",
     "serving_codes",
+    "state_from_index",
 ]

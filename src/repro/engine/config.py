@@ -58,6 +58,13 @@ class EngineConfig:
       n_cand:  sketch candidates re-ranked per tile.
       chunk:   survivor-compaction chunk size.
       tie_eps: relative tie tolerance, shared with the oracle (core/exact.py).
+
+    Online-serving knobs (engine/serving.py, DESIGN.md SS8):
+      serve_batch_size:     micro-batch size the RetrievalServer pads
+                            accumulated queries to (static shape: exactly
+                            one compile per distinct batch size).
+      serve_cache_capacity: LRU capacity of the built-serving-state cache
+                            (states are keyed by the frozen config).
     """
 
     k_max: int = 50
@@ -73,6 +80,8 @@ class EngineConfig:
     n_cand: int = 64
     chunk: int = 256
     tie_eps: float = TIE_EPS_DEFAULT
+    serve_batch_size: int = 8
+    serve_cache_capacity: int = 4
 
     def __post_init__(self):
         if self.transform not in _TRANSFORMS:
@@ -85,7 +94,8 @@ class EngineConfig:
             raise ValueError(f"scan must be one of {_SCANS}, "
                              f"got {self.scan!r}")
         for name in ("k_max", "leaf_size", "n_bits", "tile",
-                     "max_partitions", "n_cand", "chunk"):
+                     "max_partitions", "n_cand", "chunk",
+                     "serve_batch_size", "serve_cache_capacity"):
             if getattr(self, name) < 1:
                 raise ValueError(f"{name} must be >= 1, "
                                  f"got {getattr(self, name)}")
@@ -115,6 +125,21 @@ class EngineConfig:
         """Kwargs for core/sah.py::rkmips / rkmips_batch."""
         return dict(scan=self.scan, n_cand=self.n_cand, chunk=self.chunk,
                     tie_eps=self.tie_eps)
+
+    def kmips_build_kwargs(self, n_items: int) -> dict:
+        """Kwargs for core/sa_alsh.py::build_index over ``n_items`` rows.
+
+        The single source of truth for the kMIPS/serving index recipe: the
+        engine's kMIPS index, ``build_serving_state``, ``serving_codes``
+        and the ``ServingCache`` key all derive from it, so a new build
+        knob threads through every builder *and* the cache key at once —
+        a stale key can't serve wrong codes as a "hit". The tile is
+        clamped to the corpus so every path builds identical shapes.
+        """
+        return dict(b=self.b, n_bits=self.n_bits,
+                    tile=min(self.tile, n_items),
+                    max_partitions=self.max_partitions,
+                    transform=self.transform)
 
 
 # ---------------------------------------------------------------------------

@@ -98,7 +98,10 @@ class RkMIPSEngine:
         users=None builds a kMIPS-only engine (no user-side SAH index):
         ``kmips()`` works, ``query*()`` raise. The key is consumed exactly
         as ``core/sah.py::build`` would, so an engine build is bit-for-bit
-        the raw build with ``config.build_kwargs()``.
+        the raw build with ``config.build_kwargs()``. The kMIPS index key
+        is derived with the same ``fold_in`` tag whether it is built here
+        (users=None) or lazily on first ``kmips()``, so ``server()`` and
+        every kMIPS path rank with the identical SRP codes.
         """
         t0 = time.perf_counter()
         self._items = items
@@ -109,7 +112,8 @@ class RkMIPSEngine:
         self._users_unit = None
         self.n_users = None
         if users is None:
-            self._kmips_index = self._build_kmips_index(key)
+            self._kmips_index = self._build_kmips_index(
+                jax.random.fold_in(key, _KMIPS_KEY_TAG))
             jax.block_until_ready(self._kmips_index.codes)
             self.build_seconds = time.perf_counter() - t0
             return self
@@ -144,11 +148,9 @@ class RkMIPSEngine:
         return self._kmips_index
 
     def _build_kmips_index(self, key: jax.Array) -> _alsh.SAALSHIndex:
-        cfg = self.config
-        return _alsh.build_index(self._items, key, b=cfg.b,
-                                 n_bits=cfg.n_bits, tile=cfg.tile,
-                                 max_partitions=cfg.max_partitions,
-                                 transform=cfg.transform)
+        return _alsh.build_index(
+            self._items, key,
+            **self.config.kmips_build_kwargs(self._items.shape[0]))
 
     def _check_k(self, k: int) -> None:
         if not 1 <= k <= self.config.k_max:
@@ -221,6 +223,30 @@ class RkMIPSEngine:
             vals, ids = vals[0], ids[0]
         return KMIPSResult(vals, ids, tiles, seconds, k)
 
+    # -- online serving ----------------------------------------------------
+
+    def server(self):
+        """An online ``RetrievalServer`` over this engine's items
+        (engine/serving.py, DESIGN.md SS8).
+
+        The server inherits the engine's config and sharding policy and
+        derives its index key exactly as the kMIPS index does, so its scans
+        rank with the identical SRP codes as ``kmips()``. When the engine's
+        kMIPS index is already built, the server's cache is seeded from it
+        — no second offline build of the same corpus.
+        """
+        from repro.engine import serving as _serving
+        if self._items is None:
+            raise RuntimeError("engine not built: call "
+                               "build(items, users, key) first")
+        srv = _serving.RetrievalServer(
+            self._items, jax.random.fold_in(self._key, _KMIPS_KEY_TAG),
+            config=self.config, policy=self.policy)
+        if self._kmips_index is not None:
+            srv.cache.put(self.config, _serving.state_from_index(
+                self._kmips_index, self.config, policy=self.policy))
+        return srv
+
     # -- ground truth ------------------------------------------------------
 
     def oracle(self, queries: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -248,10 +274,8 @@ def serving_codes(item_vecs: jnp.ndarray, key: jax.Array, *,
     appended coordinate is 0, see core/sa_alsh.py).
     """
     cfg = (config or get_config("sah")).replace(n_bits=n_bits)
-    idx = _alsh.build_index(item_vecs, key, b=cfg.b, n_bits=cfg.n_bits,
-                            tile=min(cfg.tile, item_vecs.shape[0]),
-                            max_partitions=cfg.max_partitions,
-                            transform=cfg.transform)
+    idx = _alsh.build_index(item_vecs, key,
+                            **cfg.kmips_build_kwargs(item_vecs.shape[0]))
     n = item_vecs.shape[0]
     # build_index sorts rows by descending norm; scatter codes back to the
     # caller's row order (padding rows have item_ids == -1, out of bounds

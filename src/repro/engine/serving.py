@@ -1,0 +1,310 @@
+"""Engine-level online serving: micro-batched kMIPS behind one front door.
+
+DESIGN.md SS8 is the contract. This module is what ``launch/serve.py`` and
+``examples/serve_retrieval.py`` sit on: single queries arrive one at a time,
+are accumulated and padded into fixed-size micro-batches (static shapes —
+exactly one compile per distinct batch size), and dispatched through the
+mesh-aware sharded scan ``engine/sharding.py::kmips_flat_arrays``. Built
+serving state — norm-ordered item rows, SRP codes, the query-side
+projection, and their padded, mesh-placed layout — is cached in an LRU
+keyed by the frozen ``EngineConfig``, so swapping presets on a live server
+rebuilds nothing it has already built.
+
+Three layers, separable on purpose:
+
+  * ``build_serving_state`` — offline: SA-ALSH index build, row padding to
+    the mesh's shard multiple (``pad_item_rows``), device placement.
+  * ``ServingCache`` — the LRU of built states for one corpus; ``get`` is
+    the only entry, ``builds`` counts misses (asserted in tests).
+  * ``RetrievalServer`` — online: ``submit`` enqueues a query and returns
+    its ticket, ``flush`` answers every pending ticket in order; ``kmips``
+    is the submit+flush convenience for a lone query.
+
+Invariant (tests/test_serving.py): per-query results are bitwise identical
+whether a query is served alone, inside any micro-batch, or in a one-shot
+batch — ``kmips_flat_arrays`` is row-wise independent and padding rows are
+dead, so batching is a latency/throughput knob, never an accuracy knob.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import sa_alsh as _alsh
+from repro.dist.policy import NO_SHARDING, ShardingPolicy
+from repro.engine import sharding as _sharding
+from repro.engine.config import EngineConfig, get_config
+from repro.kernels import ops as kops
+
+
+class ServingState(NamedTuple):
+    """Everything one config's online scan needs, built offline.
+
+    Item arrays are in descending-norm order (SA-ALSH layout), padded to a
+    multiple of the mesh's device count with dead rows, and — under a mesh
+    policy — already placed: rows sharded over every axis, the projection
+    replicated. ``item_ids`` maps back to the caller's original rows.
+    """
+
+    items: jnp.ndarray       # (N_pad, d) f32
+    item_ids: jnp.ndarray    # (N_pad,) int32, -1 on padding
+    item_mask: jnp.ndarray   # (N_pad,) bool
+    codes: jnp.ndarray       # (N_pad, W) uint32
+    proj_q: jnp.ndarray      # (d, n_bits) query-side SRP projection
+    config: EngineConfig
+    n_items: int             # real (unpadded) item count, k's upper bound
+
+
+class ServeResult(NamedTuple):
+    """One served query's answer (values descending, original item rows)."""
+
+    values: jnp.ndarray
+    ids: jnp.ndarray
+    k: int
+
+
+def state_from_index(index, config: EngineConfig | str = "sah", *,
+                     policy: ShardingPolicy = NO_SHARDING) -> ServingState:
+    """Serving state from an already-built SA-ALSH index — no rebuild.
+
+    Pads the item rows to the mesh's shard multiple and places them
+    (rows sharded over every axis, projection replicated); the engine uses
+    this to seed a server's cache from its own kMIPS index.
+    """
+    if isinstance(config, str):
+        config = get_config(config)
+    arrays = (index.items, index.item_ids, index.item_mask, index.codes)
+    n_items = int(index.item_mask.sum())
+    proj_q = index.proj[:-1]
+    if policy.mesh is not None:
+        arrays = _sharding.pad_item_rows(*arrays,
+                                         _sharding.n_shards(policy))
+        axes = tuple(policy.mesh.axis_names)
+        row = lambda x: jax.device_put(x, NamedSharding(
+            policy.mesh, P(axes, *([None] * (x.ndim - 1)))))
+        arrays = tuple(row(x) for x in arrays)
+        proj_q = jax.device_put(proj_q, NamedSharding(policy.mesh, P()))
+    return ServingState(*arrays, proj_q=proj_q, config=config,
+                        n_items=n_items)
+
+
+def build_serving_state(items: jnp.ndarray, key: jax.Array,
+                        config: EngineConfig | str = "sah", *,
+                        policy: ShardingPolicy = NO_SHARDING
+                        ) -> ServingState:
+    """Offline build: SA-ALSH index -> padded, mesh-placed serving arrays.
+
+    The index build consumes ``key`` exactly as the engine's kMIPS index
+    would, so a server and an ``RkMIPSEngine`` handed the same key and
+    config scan identical codes.
+    """
+    if isinstance(config, str):
+        config = get_config(config)
+    idx = _alsh.build_index(items, key,
+                            **config.kmips_build_kwargs(items.shape[0]))
+    return state_from_index(idx, config, policy=policy)
+
+
+def _index_recipe(config: EngineConfig, n_items: int) -> tuple:
+    """The build-kwargs tuple that determines the built serving arrays.
+
+    Derived from ``EngineConfig.kmips_build_kwargs`` — the same recipe
+    every builder consumes — so the cache key can never drift from the
+    build. Serve-only knobs (batch size, cache capacity) and query-time
+    knobs (k, n_cand, scan, ...) do not change the offline build, so
+    configs differing only there share one cached state.
+    """
+    return tuple(sorted(config.kmips_build_kwargs(n_items).items()))
+
+
+class ServingCache:
+    """LRU of built ``ServingState`` for one corpus, keyed by the config's
+    item-index recipe.
+
+    ``EngineConfig`` is frozen and hashable (engine/config.py), and the
+    cache keys on exactly the fields that feed the offline build
+    (``_index_recipe``): a hit is guaranteed to return arrays built with
+    the requested knobs — the identical arrays, no rebuild (``builds``
+    counts actual builds) — and configs that differ only in serve/query
+    knobs share one entry instead of thrashing the LRU.
+    """
+
+    def __init__(self, items: jnp.ndarray, key: jax.Array, *,
+                 policy: ShardingPolicy = NO_SHARDING, capacity: int = 4):
+        if capacity < 1:
+            raise ValueError(f"cache capacity must be >= 1, got {capacity}")
+        self._items = items
+        self._key = key
+        self._policy = policy
+        self.capacity = capacity
+        self._states: OrderedDict[tuple, ServingState] = OrderedDict()
+        self.builds = 0
+
+    def __len__(self) -> int:
+        return len(self._states)
+
+    def _recipe(self, config: EngineConfig) -> tuple:
+        return _index_recipe(config, self._items.shape[0])
+
+    def __contains__(self, config: EngineConfig) -> bool:
+        return self._recipe(config) in self._states
+
+    def put(self, config: EngineConfig | str, state: ServingState) -> None:
+        """Seed the cache with a pre-built state (no build counted) —
+        e.g. the engine's own kMIPS index via ``state_from_index``."""
+        if isinstance(config, str):
+            config = get_config(config)
+        recipe = self._recipe(config)
+        self._states[recipe] = state
+        self._states.move_to_end(recipe)
+        while len(self._states) > self.capacity:
+            self._states.popitem(last=False)
+
+    def get(self, config: EngineConfig | str) -> ServingState:
+        """The state for ``config``: cached on hit, built+inserted on miss
+        (evicting the least-recently-used state past capacity)."""
+        if isinstance(config, str):
+            config = get_config(config)
+        recipe = self._recipe(config)
+        state = self._states.get(recipe)
+        if state is not None:
+            self._states.move_to_end(recipe)
+            return state
+        state = build_serving_state(self._items, self._key, config,
+                                    policy=self._policy)
+        self.builds += 1
+        self._states[recipe] = state
+        while len(self._states) > self.capacity:
+            self._states.popitem(last=False)
+        return state
+
+
+class RetrievalServer:
+    """Online kMIPS serving: accumulate single queries, answer in batches.
+
+    ``submit`` enqueues a query (d,) — or a block (nq, d), one ticket per
+    row — and returns the ticket(s); ``flush(k)`` answers every pending
+    ticket, in submission order, by grouping them into micro-batches of
+    ``config.serve_batch_size``, padding the last group with zero queries
+    (their rows are computed and discarded — static shapes buy one compile
+    per batch size), and dispatching each batch through the sharded flat
+    scan. ``compile_count`` exposes how many traces the dispatch function
+    has cost: it must stay at one per distinct (batch size, k, n_cand,
+    scan) tuple, which tests/test_serving.py pins.
+
+    The server owns a ``ServingCache`` over its corpus; per-flush state
+    lookup is O(1) on a hit, so swapping ``config`` between flushes (e.g.
+    an A/B of presets) costs one build each, once.
+    """
+
+    def __init__(self, items: jnp.ndarray, key: jax.Array, *,
+                 config: EngineConfig | str = "sah",
+                 policy: ShardingPolicy = NO_SHARDING):
+        if isinstance(config, str):
+            config = get_config(config)
+        self.config = config
+        self.policy = policy
+        self.cache = ServingCache(items, key, policy=policy,
+                                  capacity=config.serve_cache_capacity)
+        self._pending: list[jnp.ndarray] = []
+        self._next_ticket = 0
+        self.compile_count = 0
+
+        def _scan(items_a, ids_a, mask_a, codes_a, proj_q, queries, *,
+                  k, n_cand, scan):
+            # Traced once per static signature; the counter increments at
+            # trace time only, so it counts compiles, not calls.
+            self.compile_count += 1
+            ucodes = kops.srp_hash(queries, proj_q)
+            return _sharding.kmips_flat_arrays(
+                items_a, ids_a, mask_a, codes_a, ucodes, queries, k,
+                self.policy, n_cand=n_cand, scan=scan)
+
+        self._dispatch = jax.jit(_scan,
+                                 static_argnames=("k", "n_cand", "scan"))
+
+    @property
+    def batch_size(self) -> int:
+        """The micro-batch size — read from the *current* config, so a
+        config swapped between flushes brings its own batching along."""
+        return self.config.serve_batch_size
+
+    @property
+    def pending(self) -> int:
+        """Tickets submitted but not yet flushed."""
+        return len(self._pending)
+
+    def submit(self, q: jnp.ndarray) -> int | list[int]:
+        """Enqueue a query (d,) -> its ticket; (nq, d) -> one per row.
+
+        Tickets are served strictly in submission order by the next
+        ``flush``; the ticket's position in flush's result list is
+        ``ticket - first_pending_ticket``.
+        """
+        q = jnp.asarray(q)
+        if q.ndim == 1:
+            self._pending.append(q)
+            self._next_ticket += 1
+            return self._next_ticket - 1
+        tickets = list(range(self._next_ticket,
+                             self._next_ticket + q.shape[0]))
+        self._pending.extend(q[i] for i in range(q.shape[0]))
+        self._next_ticket += q.shape[0]
+        return tickets
+
+    def flush(self, k: int, *, n_cand: int | None = None,
+              scan: str | None = None) -> list[ServeResult]:
+        """Answer every pending ticket; results in submission order.
+
+        Pending queries are grouped into micro-batches of
+        ``serve_batch_size``; the final partial group is padded to the full
+        batch size with zero queries so every dispatch reuses the same
+        compiled executable. k/n_cand/scan default to the server's config.
+
+        Tickets stay pending until the whole flush succeeds: a failed
+        dispatch (or a bad ``k``) raises without consuming the queue, so a
+        retry answers every ticket — dispatch is deterministic, no answer
+        is lost or doubled.
+        """
+        if not self._pending:
+            return []
+        state = self.cache.get(self.config)
+        if not 1 <= k <= state.n_items:
+            raise ValueError(f"k={k} outside [1, {state.n_items}] "
+                             f"supported by this corpus")
+        n_cand = self.config.n_cand if n_cand is None else n_cand
+        scan = self.config.scan if scan is None else scan
+        batch = self.batch_size
+        queue = list(self._pending)
+        out: list[ServeResult] = []
+        for i in range(0, len(queue), batch):
+            group = queue[i:i + batch]
+            qs = jnp.stack(group)
+            if len(group) < batch:
+                qs = jnp.concatenate(
+                    [qs, jnp.zeros((batch - len(group), qs.shape[1]),
+                                   qs.dtype)])
+            vals, ids = self._dispatch(state.items, state.item_ids,
+                                       state.item_mask, state.codes,
+                                       state.proj_q, qs, k=k,
+                                       n_cand=n_cand, scan=scan)
+            out.extend(ServeResult(vals[j], ids[j], k)
+                       for j in range(len(group)))
+        del self._pending[:len(queue)]
+        return out
+
+    def kmips(self, q: jnp.ndarray, k: int, *, n_cand: int | None = None,
+              scan: str | None = None) -> ServeResult:
+        """Serve one query now: submit + flush. Pending tickets (if any)
+        are answered by the same flush, preserving submission order."""
+        if jnp.asarray(q).ndim != 1:
+            raise ValueError("kmips serves one query (d,); use "
+                             "submit/flush for batches")
+        ticket = self.submit(q)
+        first = self._next_ticket - len(self._pending)
+        return self.flush(k, n_cand=n_cand, scan=scan)[ticket - first]

@@ -1,4 +1,4 @@
-"""Mesh-sharded execution paths for the RkMIPS engine (DESIGN.md SS7).
+"""Mesh-sharded execution paths for the RkMIPS engine (DESIGN.md SS7-SS8).
 
 The engine's two heavy loops shard cleanly because both are embarrassingly
 parallel along one axis:
@@ -21,6 +21,17 @@ parallel along one axis:
     per query are O(shards * k), independent of the item count. The sharded
     scan is single-pass (no tile early-exit; latency on a mesh is bounded by
     the slowest shard, so the bound check buys nothing).
+
+Any user/item count shards over any mesh: when a count does not divide the
+device count, the arrays are padded up to the next multiple with **dead**
+rows before layout — cone blocks by cyclically duplicated leaves whose
+``user_mask`` is False and whose block lower bound is +inf (so Lemma 2 kills
+them before any work happens; the same convention as the SS2 cyclic user
+padding), item rows by masked rows whose scores are forced to ``-inf``.
+Results are bitwise equal to the unsharded path after mask stripping
+(``predictions_to_original`` / the ``item_mask``), and the per-user /
+per-block counters in ``QueryStats`` are unchanged because dead padding
+never prunes, scans, or counts.
 
 Sharding enters only via ``ShardingPolicy`` (DESIGN.md SS5): ``mesh=None``
 routes every entry point to the identical single-device computation.
@@ -56,15 +67,74 @@ def n_shards(policy: ShardingPolicy) -> int:
     return policy.mesh.devices.size
 
 
+def pad_index(index: _sah.SAHIndex, shards: int) -> _sah.SAHIndex:
+    """Pad the cone-block axis to a multiple of ``shards`` with dead leaves.
+
+    Padding leaves are cyclic duplicates of real leaves (valid unit vectors,
+    so every bound and matvec stays finite — the SS2 convention), except:
+    ``user_mask`` is False on every padded row and ``block_lb`` is +inf on
+    every padded block, so Lemma 2 prunes the block before any per-user work
+    and no counter, prediction, or scan ever sees the duplicates. The result
+    is query-for-query bitwise equal to the unpadded index after mask
+    stripping. No-op when ``n_blocks`` already divides.
+    """
+    nb = index.n_blocks
+    nb_pad = -(-nb // shards) * shards
+    if nb_pad == nb:
+        return index
+    leaf = index.n_users // nb
+    pad_blocks = (jnp.arange(nb, nb_pad, dtype=jnp.int32)) % nb
+    pad_rows = (pad_blocks[:, None] * leaf
+                + jnp.arange(leaf, dtype=jnp.int32)[None, :]).reshape(-1)
+
+    def dup(x, rows):
+        return jnp.concatenate([x, jnp.take(x, rows, axis=0)], axis=0)
+
+    return index._replace(
+        users=dup(index.users, pad_rows),
+        user_ids=dup(index.user_ids, pad_rows),
+        user_mask=jnp.concatenate(
+            [index.user_mask, jnp.zeros((pad_rows.shape[0],), bool)]),
+        theta=dup(index.theta, pad_rows),
+        user_lb=dup(index.user_lb, pad_rows),
+        center=dup(index.center, pad_blocks),
+        omega=dup(index.omega, pad_blocks),
+        block_lb=jnp.concatenate(
+            [index.block_lb,
+             jnp.full((nb_pad - nb, index.kmax), jnp.inf,
+                      index.block_lb.dtype)]),
+    )
+
+
+def pad_item_rows(items: jnp.ndarray, item_ids: jnp.ndarray,
+                  item_mask: jnp.ndarray, codes: jnp.ndarray,
+                  shards: int, k: int = 1):
+    """Pad item-axis arrays so every shard holds >= k rows and rows divide.
+
+    Padding rows are dead: zero vectors, ``item_ids == -1``, mask False,
+    zero codes — the scans force their scores to ``-inf`` (or their Hamming
+    distance to +BIG), so they can never enter a top-k that a real row could
+    occupy. No-op when the row count already divides and covers ``k``.
+    """
+    n = items.shape[0]
+    rows_per = max(-(-n // shards), k)
+    n_pad = rows_per * shards
+    if n_pad == n:
+        return items, item_ids, item_mask, codes
+    pad = n_pad - n
+    return (jnp.concatenate([items, jnp.zeros((pad,) + items.shape[1:],
+                                              items.dtype)]),
+            jnp.concatenate([item_ids,
+                             jnp.full((pad,), -1, item_ids.dtype)]),
+            jnp.concatenate([item_mask, jnp.zeros((pad,), bool)]),
+            jnp.concatenate([codes, jnp.zeros((pad,) + codes.shape[1:],
+                                              codes.dtype)]))
+
+
 def index_specs(index: _sah.SAHIndex, policy: ShardingPolicy):
     """PartitionSpec pytree for a SAHIndex: user/block rows over every mesh
-    axis, item side replicated. Raises if the leaf grid doesn't divide."""
-    shards = n_shards(policy)
-    if index.n_blocks % shards != 0:
-        raise ValueError(
-            f"cannot shard {index.n_blocks} cone blocks over {shards} "
-            f"devices; choose leaf_size / user count so the block count "
-            f"is a multiple of the mesh size")
+    axis, item side replicated. The index must already be padded to a
+    block count that divides the mesh (``pad_index``)."""
     axes = tuple(policy.mesh.axis_names)
     specs = jax.tree.map(lambda _: P(), index)
     row = {f: P(axes, *([None] * (getattr(index, f).ndim - 1)))
@@ -75,9 +145,11 @@ def index_specs(index: _sah.SAHIndex, policy: ShardingPolicy):
 def shard_index(index: _sah.SAHIndex, policy: ShardingPolicy
                 ) -> _sah.SAHIndex:
     """Lay the index out for the mesh: user/block rows sharded, rest
-    replicated. No-op without a mesh."""
+    replicated. Pads the block axis first when it does not divide the
+    device count (``pad_index``). No-op without a mesh."""
     if policy.mesh is None:
         return index
+    index = pad_index(index, n_shards(policy))
     specs = index_specs(index, policy)
     shardings = jax.tree.map(lambda s: NamedSharding(policy.mesh, s), specs,
                              is_leaf=lambda x: isinstance(x, P))
@@ -91,12 +163,15 @@ def rkmips_batch(index: _sah.SAHIndex, queries: jnp.ndarray, k: int,
     """Sharded Algorithm 5 over a query batch.
 
     Returns (pred (nq, m_pad) bool in global leaf order, QueryStats with
-    per-query counters summed over shards). Without a mesh this is exactly
-    ``core/sah.py::rkmips_batch``.
+    per-query counters summed over shards). m_pad reflects block padding
+    when the block count does not divide the mesh; ``pad_index`` rows are
+    masked, so ``predictions_to_original`` strips them. Without a mesh this
+    is exactly ``core/sah.py::rkmips_batch``.
     """
     if policy.mesh is None:
         return _sah.rkmips_batch(index, queries, k, n_cand=n_cand,
                                  scan=scan, chunk=chunk, tie_eps=tie_eps)
+    index = pad_index(index, n_shards(policy))
     axes = tuple(policy.mesh.axis_names)
     specs = index_specs(index, policy)
 
@@ -142,31 +217,28 @@ def _flat_candidates(items, item_ids, item_mask, codes, ucodes, queries,
     return vals, ids
 
 
-def kmips_flat(index: _alsh.SAALSHIndex, queries: jnp.ndarray, k: int,
-               policy: ShardingPolicy, *, n_cand: int = 64,
-               scan: str = "sketch"):
-    """Single-pass kMIPS, sharded over item rows.
+def kmips_flat_arrays(items: jnp.ndarray, item_ids: jnp.ndarray,
+                      item_mask: jnp.ndarray, codes: jnp.ndarray,
+                      ucodes: jnp.ndarray, queries: jnp.ndarray, k: int,
+                      policy: ShardingPolicy, *, n_cand: int = 64,
+                      scan: str = "sketch"):
+    """``kmips_flat`` on raw row arrays (the serving-stack entry point).
 
-    queries (Q, d) -> (vals (Q, k) descending, ids (Q, k) original item
-    rows). scan="sketch" Hamming-ranks then re-ranks ``n_cand`` candidates
-    **per shard** (``n_cand >=`` the local row count makes it exact);
-    scan="exact" skips the sketch and re-ranks every row. The mesh=None
-    branch is the single-device oracle of the shard_map body (exercised by
-    tests/test_engine.py); the engine's unsharded kmips uses the tiled
-    early-terminating ``kmips_topk`` instead.
+    items (N, d), item_ids (N,) int32 original rows (-1 padding), item_mask
+    (N,) bool, codes (N, W) uint32 sketches, ucodes (Q, W) query sketches,
+    queries (Q, d) -> (vals (Q, k), ids (Q, k)). Any N shards over any mesh:
+    rows are padded to the next multiple of the device count with dead rows
+    (``pad_item_rows``) before the shard_map. Per-query results are
+    independent of batching, so micro-batched serving dispatch
+    (engine/serving.py) is bitwise equal to a one-shot batch.
     """
-    ucodes = _alsh.user_codes(index, queries)
     if policy.mesh is None:
-        n_c = min(max(n_cand, k), index.items.shape[0])
-        return _flat_candidates(index.items, index.item_ids, index.item_mask,
-                                index.codes, ucodes, queries, k, n_c, scan)
+        n_c = min(max(n_cand, k), items.shape[0])
+        return _flat_candidates(items, item_ids, item_mask, codes, ucodes,
+                                queries, k, n_c, scan)
 
-    shards = n_shards(policy)
-    n_pad = index.items.shape[0]
-    if n_pad % shards != 0:
-        raise ValueError(
-            f"cannot shard {n_pad} item rows over {shards} devices; pick a "
-            f"tile size that is a multiple of the mesh size")
+    items, item_ids, item_mask, codes = pad_item_rows(
+        items, item_ids, item_mask, codes, n_shards(policy), k)
     axes = tuple(policy.mesh.axis_names)
 
     def local(items_l, ids_l, mask_l, codes_l, uc, qs):
@@ -183,5 +255,24 @@ def kmips_flat(index: _alsh.SAALSHIndex, queries: jnp.ndarray, k: int,
         local, mesh=policy.mesh,
         in_specs=(P(axes, None), P(axes), P(axes), P(axes, None), P(), P()),
         out_specs=(P(), P()), check_vma=False,
-    )(index.items, index.item_ids, index.item_mask, index.codes, ucodes,
-      queries)
+    )(items, item_ids, item_mask, codes, ucodes, queries)
+
+
+def kmips_flat(index: _alsh.SAALSHIndex, queries: jnp.ndarray, k: int,
+               policy: ShardingPolicy, *, n_cand: int = 64,
+               scan: str = "sketch"):
+    """Single-pass kMIPS, sharded over item rows.
+
+    queries (Q, d) -> (vals (Q, k) descending, ids (Q, k) original item
+    rows). scan="sketch" Hamming-ranks then re-ranks ``n_cand`` candidates
+    **per shard** (``n_cand >=`` the local row count makes it exact);
+    scan="exact" skips the sketch and re-ranks every row. The mesh=None
+    branch is the single-device oracle of the shard_map body (exercised by
+    tests/test_engine.py); the engine's unsharded kmips uses the tiled
+    early-terminating ``kmips_topk`` instead. Row counts that do not divide
+    the mesh are padded with dead rows (``pad_item_rows``).
+    """
+    ucodes = _alsh.user_codes(index, queries)
+    return kmips_flat_arrays(index.items, index.item_ids, index.item_mask,
+                             index.codes, ucodes, queries, k, policy,
+                             n_cand=n_cand, scan=scan)

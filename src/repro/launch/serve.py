@@ -4,19 +4,19 @@ The SAH path is the paper's technique deployed inside the serving stack:
 candidate item vectors are indexed offline (SAT transform + SRP codes,
 norm-descending order); online, a query is hashed (d-dim projection only --
 the user transform's appended coordinate is 0) and candidates are ranked by
-Hamming distance, the top `n_cand` re-ranked exactly. Sharded over the whole
-mesh: each shard scans its code slice (XOR+popcount -- the hamming_scan
-Pallas kernel on TPU), locally re-ranks, and one tiny all-gather merges the
-winners. Wire bytes per query: P * k * 8 -- independent of N.
+Hamming distance, the top `n_cand` re-ranked exactly. The sharded scan is
+NOT hand-rolled here: every mesh dispatch routes through the engine's
+``engine/sharding.py::kmips_flat_arrays`` (local Hamming scan + rerank +
+local top-k, one tiny all-gather merge; wire bytes per query P * k * 8,
+independent of N) — one proven shard_map for the whole stack, DESIGN.md SS8.
+Online request batching/caching on top of the same scan lives in
+``repro.engine.serving`` (``RetrievalServer``).
 
 `build_sah_retrieval_cell` returns the dry-run Cell for this path
 (two-tower-retrieval x retrieval_cand, variant "sah").
 """
 
 from __future__ import annotations
-
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -37,40 +37,20 @@ def sah_retrieve_step(params, user_feats, cand_vecs, cand_codes, proj,
     user_feats (1, Fu) int32; cand_vecs (N, D) f32 sharded over all axes;
     cand_codes (N, W) uint32 (built offline by core/sa_alsh machinery);
     proj (D, B) f32 -- the first-D rows of the SRP projection (query side).
+    The scan itself is ``engine/sharding.py::kmips_flat_arrays`` — the same
+    mesh-aware path the engine and ``RetrievalServer`` use, so any N shards
+    over any mesh (dead-row padding) with no serving-private shard_map.
     """
+    from repro.engine import sharding as eng_sharding
     from repro.kernels import ops as kops
 
     u = rec_lib.user_tower(params, user_feats, cfg, policy)[0]   # (D,)
-    mesh = policy.mesh
-
-    if mesh is None:
-        qcode = kops.srp_hash(u[None, :], proj)                  # (1, W)
-        dist = kops.hamming_scores(qcode, cand_codes)[0]         # (N,)
-        _, cand = jax.lax.top_k(-dist, n_cand)
-        ips = jnp.take(cand_vecs, cand, axis=0) @ u
-        vals, pos = jax.lax.top_k(ips, k)
-        return vals, jnp.take(cand, pos)
-
-    all_axes = tuple(mesh.axis_names)
-
-    def local(u_l, cands_l, codes_l, proj_l):
-        qcode = kops.srp_hash(u_l[None, :], proj_l)              # (1, W)
-        dist = kops.hamming_scores(qcode, codes_l)[0]            # (N_l,)
-        _, cand = jax.lax.top_k(-dist, n_cand)                   # local rows
-        ips = jnp.take(cands_l, cand, axis=0) @ u_l              # rerank
-        vals, pos = jax.lax.top_k(ips, k)
-        rank = jax.lax.axis_index(all_axes)
-        gids = jnp.take(cand, pos) + rank * cands_l.shape[0]
-        vals_all = jax.lax.all_gather(vals, all_axes, tiled=True)
-        gids_all = jax.lax.all_gather(gids, all_axes, tiled=True)
-        best, bpos = jax.lax.top_k(vals_all, k)
-        return best, jnp.take(gids_all, bpos)
-
-    return jax.shard_map(
-        local, mesh=mesh,
-        in_specs=(P(), P(all_axes, None), P(all_axes, None), P()),
-        out_specs=(P(), P()), check_vma=False,
-    )(u, cand_vecs, cand_codes, proj)
+    qcode = kops.srp_hash(u[None, :], proj)                      # (1, W)
+    n = cand_vecs.shape[0]
+    vals, ids = eng_sharding.kmips_flat_arrays(
+        cand_vecs, jnp.arange(n, dtype=jnp.int32), jnp.ones((n,), bool),
+        cand_codes, qcode, u[None, :], k, policy, n_cand=n_cand)
+    return vals[0], ids[0]
 
 
 def build_sah_retrieval_cell(mesh: Mesh | None,

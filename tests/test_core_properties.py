@@ -1,5 +1,13 @@
 """Hypothesis property tests on the paper's invariants (Lemmas 1-3, Facts
-1-2, Eq. 8) and the engine's data-structure invariants."""
+1-2, Eq. 8), the engine's data-structure invariants, and the sharding-layer
+padding contracts (engine/sharding.py: arbitrary user/item counts over
+arbitrary shard counts are bitwise-invisible after mask stripping).
+
+CI runs this module in a dedicated job that fails if hypothesis is missing
+(.github/workflows/ci.yml) — the importorskip below is only for minimal
+installs. Hypothesis-free mirrors of the padding checks, with fixed prime
+sizes, live in tests/test_serving.py so tier-1 always exercises them.
+"""
 
 import math
 
@@ -17,6 +25,8 @@ import numpy as np
 
 from repro.core import cone, exact, partitions, sa_alsh, simpfer, srp
 from repro.core import transforms as tf
+from repro.dist.policy import NO_SHARDING
+from repro.engine import sharding as eng_sharding
 
 hypothesis.settings.register_profile(
     "ci", deadline=None, max_examples=25,
@@ -150,6 +160,103 @@ def test_decision_exact_scan_equals_oracle(n, d, k, seed):
     po = sah.predictions_to_original(idx, pred, 32)
     truth = exact.rkmips_decision(items, uu, q, k)
     np.testing.assert_array_equal(np.asarray(po), np.asarray(truth))
+
+
+# ---------------------------------------------------------------------------
+# Sharding-layer padding: arbitrary (non-power-of-two, prime) user/item
+# counts over arbitrary shard counts (engine/sharding.py). The sharded
+# execution itself is per-shard-local runs of the same code (shard_map
+# equivalence is pinned on the 8-device mesh in tests/test_engine.py);
+# these properties pin the padding transform the mesh path relies on.
+# ---------------------------------------------------------------------------
+
+# Deliberately spans primes and non-powers-of-two, the counts the old
+# divisibility ValueError rejected.
+_counts = st.one_of(st.integers(10, 120),
+                    st.sampled_from((11, 13, 31, 53, 67, 97, 101, 113)))
+_shards = st.one_of(st.integers(2, 8), st.sampled_from((3, 5, 7)))
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(_counts, st.integers(24, 96), _shards, st.integers(0, 3))
+def test_padded_blocks_match_unpadded(m, n, shards, seed):
+    """pad_index: dead duplicate leaves never change predictions, masked
+    counters, or the original-id mapping — for any m, n, shard count."""
+    from repro.core import sah
+    key = jax.random.PRNGKey(seed)
+    ki, ku, kq, kb = jax.random.split(key, 4)
+    items = jax.random.normal(ki, (n, 8))
+    users = jax.random.normal(ku, (m, 8))
+    q = jax.random.normal(kq, (8,)) * 2.0
+    idx = sah.build(items, users, kb, k_max=4, n_top=4, tile=32,
+                    leaf_size=8, n_bits=32)
+    pidx = eng_sharding.pad_index(idx, shards)
+    assert pidx.n_blocks % shards == 0
+    assert pidx.n_users == pidx.n_blocks * (idx.n_users // idx.n_blocks)
+    p0, s0 = sah.rkmips(idx, q, 3, n_cand=16)
+    p1, s1 = sah.rkmips(pidx, q, 3, n_cand=16)
+    np.testing.assert_array_equal(
+        np.asarray(sah.predictions_to_original(idx, p0, m)),
+        np.asarray(sah.predictions_to_original(pidx, p1, m)))
+    for f in ("blocks_alive", "users_alive", "n_no_lb", "n_yes_norm",
+              "n_scan"):
+        assert int(getattr(s0, f)) == int(getattr(s1, f)), f
+    # padding introduces no duplicate and no phantom ids: the unmasked rows
+    # carry each original user id exactly once
+    ids = np.asarray(pidx.user_ids)[np.asarray(pidx.user_mask)]
+    np.testing.assert_array_equal(np.sort(ids), np.arange(m))
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(_counts, _shards, st.integers(1, 5), st.integers(0, 3),
+                  st.sampled_from(("sketch", "exact")))
+def test_padded_item_rows_match_unpadded(n, shards, k, seed, scan):
+    """pad_item_rows: dead rows (-inf scores) never enter a top-k a real
+    row could occupy, for any item count over any shard count."""
+    key = jax.random.PRNGKey(seed + 31)
+    ki, kq, kb = jax.random.split(key, 3)
+    items = jax.random.normal(ki, (n, 12))
+    queries = jax.random.normal(kq, (3, 12))
+    idx = sa_alsh.build_index(items, kb, n_bits=32, tile=32)
+    uc = sa_alsh.user_codes(idx, queries)
+    padded = eng_sharding.pad_item_rows(idx.items, idx.item_ids,
+                                        idx.item_mask, idx.codes, shards, k)
+    assert padded[0].shape[0] % shards == 0
+    assert padded[0].shape[0] // shards >= k
+    v0, i0 = eng_sharding.kmips_flat_arrays(
+        idx.items, idx.item_ids, idx.item_mask, idx.codes, uc, queries, k,
+        NO_SHARDING, n_cand=256, scan=scan)
+    v1, i1 = eng_sharding.kmips_flat_arrays(*padded, uc, queries, k,
+                                            NO_SHARDING, n_cand=256,
+                                            scan=scan)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    # dead rows: ids -1, mask off, and the real rows untouched
+    ids_p, mask_p = np.asarray(padded[1]), np.asarray(padded[2])
+    np.testing.assert_array_equal(ids_p[: idx.item_ids.shape[0]],
+                                  np.asarray(idx.item_ids))
+    assert (ids_p[idx.item_ids.shape[0]:] == -1).all()
+    assert not mask_p[idx.item_ids.shape[0]:].any()
+
+
+@hypothesis.given(st.integers(10, 60), _shards, st.integers(0, 3))
+def test_padding_preserves_original_mapping(m, shards, seed):
+    """predictions_to_original is a left inverse of the padded leaf layout:
+    a single-user prediction maps back to exactly that user."""
+    from repro.core import sah
+    key = jax.random.PRNGKey(seed + 7)
+    ki, ku, kb = jax.random.split(key, 3)
+    items = jax.random.normal(ki, (32, 8))
+    users = jax.random.normal(ku, (m, 8))
+    idx = sah.build(items, users, kb, k_max=4, n_top=4, tile=32,
+                    leaf_size=8, n_bits=32)
+    pidx = eng_sharding.pad_index(idx, shards)
+    uid = int(jax.random.randint(kb, (), 0, m))
+    pred = (pidx.user_ids == uid) & pidx.user_mask
+    out = np.asarray(sah.predictions_to_original(pidx, pred, m))
+    expect = np.zeros(m, bool)
+    expect[uid] = True
+    np.testing.assert_array_equal(out, expect)
 
 
 @hypothesis.given(st.integers(4, 60), st.integers(1, 4))

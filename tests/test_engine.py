@@ -141,6 +141,42 @@ def test_k_and_lifecycle_guards(workload):
         eng_k.query(queries[0], 5)
 
 
+def test_error_messages(workload):
+    """Engine error paths raise actionable, message-stable exceptions:
+    unknown preset, k outside [1, k_max], querying before build."""
+    items, users, queries = workload
+    with pytest.raises(KeyError,
+                       match=r"unknown engine method 'no-such-method'; "
+                             r"known: .*sah"):
+        get_config("no-such-method")
+    with pytest.raises(TypeError, match=r"config must be an EngineConfig "
+                                        r"or a registry name"):
+        RkMIPSEngine(42)
+
+    eng = RkMIPSEngine(get_config("sah").replace(k_max=20))
+    for call in (lambda: eng.query(queries[0], 5),
+                 lambda: eng.query_batch(queries, 5)):
+        with pytest.raises(RuntimeError,
+                           match=r"engine not built for RkMIPS: call "
+                                 r"build\(items, users, key\) first"):
+            call()
+    with pytest.raises(RuntimeError, match=r"engine not built for RkMIPS"):
+        eng.oracle(queries, 5)
+    for call in (lambda: eng.kmips(queries[0], 5), lambda: eng.server()):
+        with pytest.raises(RuntimeError,
+                           match=r"engine not built: call "
+                                 r"build\(items, users, key\) first"):
+            call()
+
+    eng.build(items[:256], users[:256], jax.random.PRNGKey(10))
+    with pytest.raises(ValueError,
+                       match=r"k=21 outside \[1, k_max=20\] supported by "
+                             r"this index; rebuild with a larger k_max"):
+        eng.query(queries[0], 21)
+    with pytest.raises(ValueError, match=r"k=0 outside \[1, k_max=20\]"):
+        eng.query_batch(queries, 0)
+
+
 def test_rebuild_resets_state(workload):
     """A second build() must drop every artifact of the first — serving a
     stale kMIPS index or user-side arrays would be silently wrong."""
@@ -256,12 +292,42 @@ kx = e1x.kmips(queries, 5, n_cand=8)
 np.testing.assert_array_equal(np.asarray(kx.ids), np.asarray(ti))
 print("kmips sharded OK")
 
-# Indivisible grids fail loudly, not wrongly (96 users -> 4 cone blocks).
+# Non-divisible counts shard via dead padding, bitwise equal to one device
+# (DESIGN.md SS8): 1009 users -> 32 cone blocks padded to 36 over a
+# 6-device (2, 3) mesh; 997 items -> 1024 padded rows -> 1026.
+items_p, users_p = synthetic.recommendation_data(ki, 997, 1009, 32)
+queries_p = synthetic.queries_from_items(kq, items_p, 2)
+mesh6 = jax.sharding.Mesh(np.asarray(jax.devices()[:6]).reshape(2, 3),
+                          ("data", "model"))
+policy6 = ShardingPolicy(mesh=mesh6, rules={})
+cfgp = get_config("sah").replace(tile=128, n_bits=64)
+e0 = RkMIPSEngine(cfgp).build(items_p, users_p, kb)
+e1 = RkMIPSEngine(cfgp, policy=policy6).build(items_p, users_p, kb)
+assert e1.index.n_blocks % 6 == 0 and e1.index.n_blocks == 36
+r0 = e0.query_batch(queries_p, 10)
+r1 = e1.query_batch(queries_p, 10)
+np.testing.assert_array_equal(np.asarray(r0.predictions),
+                              np.asarray(r1.predictions))
+for f in ("blocks_alive", "users_alive", "n_no_lb", "n_yes_norm", "n_scan"):
+    np.testing.assert_array_equal(np.asarray(getattr(r0.stats, f)),
+                                  np.asarray(getattr(r1.stats, f)))
+k0 = e0.kmips(queries_p, 5, n_cand=1024)
+k1 = e1.kmips(queries_p, 5, n_cand=1024)
+_, tip = exact.kmips(items_p, queries_p, 5)
+np.testing.assert_array_equal(np.asarray(k0.ids), np.asarray(tip))
+np.testing.assert_array_equal(np.asarray(k1.ids), np.asarray(tip))
+print("non-divisible padding OK")
+
+# Fewer blocks than devices pads up too (96 users -> 4 blocks -> 8).
 cfg3 = get_config("sah").replace(tile=128)
-try:
-    RkMIPSEngine(cfg3, policy=policy).build(items[:256], users[:96], kb)
-except ValueError as e:
-    print("divisibility guard OK:", "shard" in str(e))
+e0 = RkMIPSEngine(cfg3).build(items[:256], users[:96], kb)
+e1 = RkMIPSEngine(cfg3, policy=policy).build(items[:256], users[:96], kb)
+assert e1.index.n_blocks == 8
+r0 = e0.query_batch(queries, 10)
+r1 = e1.query_batch(queries, 10)
+np.testing.assert_array_equal(np.asarray(r0.predictions),
+                              np.asarray(r1.predictions))
+print("small-block padding OK")
 print("ALL ENGINE SHARDED OK")
 """
 
@@ -275,4 +341,5 @@ def test_engine_sharded_equivalence():
                          cwd=os.path.dirname(os.path.dirname(__file__)))
     assert out.returncode == 0, out.stdout + "\n" + out.stderr
     assert "ALL ENGINE SHARDED OK" in out.stdout
-    assert "divisibility guard OK: True" in out.stdout
+    assert "non-divisible padding OK" in out.stdout
+    assert "small-block padding OK" in out.stdout

@@ -1,0 +1,295 @@
+"""Engine-level online serving (engine/serving.py) + padding hardening.
+
+Pins the DESIGN.md SS8 contracts: (1) micro-batched serving answers are
+identical to one-at-a-time engine queries — batching is a throughput knob,
+never an accuracy knob; (2) the serving-state cache returns the identical
+arrays on a hit and never rebuilds below capacity; (3) the dispatch
+compiles exactly once per distinct batch size; (4) the sharding-layer
+padding (``pad_index`` / ``pad_item_rows``) is bitwise-invisible after mask
+stripping. The padding checks here are the hypothesis-free mirrors of
+tests/test_core_properties.py, so they run on minimal installs too.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sa_alsh, sah
+from repro.data import synthetic
+from repro.dist.policy import NO_SHARDING
+from repro.engine import (RetrievalServer, RkMIPSEngine, ServingCache,
+                          build_serving_state, get_config)
+from repro.engine import sharding as eng_sharding
+from repro.kernels import ops as kops
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    key = jax.random.PRNGKey(11)
+    ki, kq = jax.random.split(key)
+    items, _ = synthetic.recommendation_data(ki, 509, 16, 24)   # prime n
+    queries = synthetic.queries_from_items(kq, items, 7)
+    return items, queries
+
+
+@pytest.fixture(scope="module")
+def server_cfg():
+    return get_config("sah").replace(tile=128, n_bits=64, serve_batch_size=4)
+
+
+def test_microbatch_matches_one_at_a_time_engine_kmips(corpus, server_cfg):
+    """7 queries through B=4 micro-batches == 7 single engine.kmips calls
+    (exact scan: both paths recover the true top-k)."""
+    items, queries = corpus
+    cfg = server_cfg.replace(scan="exact")
+    eng = RkMIPSEngine(cfg).build(items, None, jax.random.PRNGKey(3))
+    srv = eng.server()
+    tickets = srv.submit(queries)
+    assert tickets == list(range(7)) and srv.pending == 7
+    res = srv.flush(5)
+    assert len(res) == 7 and srv.pending == 0
+    for i, r in enumerate(res):
+        one = eng.kmips(queries[i], 5)
+        np.testing.assert_array_equal(np.asarray(r.ids), np.asarray(one.ids))
+        np.testing.assert_allclose(np.asarray(r.values),
+                                   np.asarray(one.values), rtol=1e-6)
+        assert r.k == 5
+
+
+def test_microbatch_bitwise_equals_oneshot(corpus, server_cfg):
+    """Micro-batched sketch dispatch is bitwise the one-shot batched scan:
+    per-query rows are independent and the zero-query padding is dead."""
+    items, queries = corpus
+    srv = RetrievalServer(items, jax.random.PRNGKey(4), config=server_cfg)
+    state = srv.cache.get(server_cfg)
+    ucodes = kops.srp_hash(queries, state.proj_q)
+    v0, i0 = eng_sharding.kmips_flat_arrays(
+        state.items, state.item_ids, state.item_mask, state.codes, ucodes,
+        queries, 5, NO_SHARDING, n_cand=server_cfg.n_cand)
+    srv.submit(queries)
+    res = srv.flush(5)
+    np.testing.assert_array_equal(
+        np.stack([np.asarray(r.ids) for r in res]), np.asarray(i0))
+    np.testing.assert_array_equal(
+        np.stack([np.asarray(r.values) for r in res]), np.asarray(v0))
+    # single-query convenience path agrees too
+    one = srv.kmips(queries[2], 5)
+    np.testing.assert_array_equal(np.asarray(one.ids), np.asarray(i0[2]))
+
+
+def test_cache_hit_returns_identical_arrays_without_rebuild(corpus,
+                                                            server_cfg):
+    items, _ = corpus
+    cache = ServingCache(items, jax.random.PRNGKey(5), capacity=2)
+    s1 = cache.get(server_cfg)
+    assert cache.builds == 1
+    s2 = cache.get(server_cfg)
+    assert s2 is s1 and cache.builds == 1          # hit: same arrays, no build
+    assert s2.items is s1.items and s2.codes is s1.codes
+    # serve/query-only knobs don't change the built arrays: same entry
+    assert cache.get(server_cfg.replace(serve_batch_size=2,
+                                        serve_cache_capacity=9,
+                                        n_cand=128)) is s1
+    assert cache.builds == 1
+    # LRU eviction past capacity forces a rebuild on the evicted key
+    cache.get(server_cfg.replace(n_bits=32))
+    cache.get(server_cfg.replace(n_bits=96))       # evicts server_cfg
+    assert len(cache) == 2 and cache.builds == 3
+    assert server_cfg not in cache
+    s3 = cache.get(server_cfg)
+    assert cache.builds == 4 and s3 is not s1
+    np.testing.assert_array_equal(np.asarray(s3.codes), np.asarray(s1.codes))
+
+
+def test_server_ranks_with_engine_codes(corpus, server_cfg):
+    """engine.server() must scan with the identical SRP codes as
+    engine.kmips(), whether the engine's kMIPS index was built eagerly
+    (users=None), lazily, or not at all yet — and a server seeded from an
+    already-built index performs no build of its own."""
+    items, queries = corpus
+    eng = RkMIPSEngine(server_cfg).build(items, None, jax.random.PRNGKey(3))
+    srv = eng.server()                             # index built eagerly
+    assert srv.cache.builds == 0                   # seeded, not rebuilt
+    state = srv.cache.get(server_cfg)
+    assert srv.cache.builds == 0
+    np.testing.assert_array_equal(np.asarray(state.codes),
+                                  np.asarray(eng.kmips_index.codes))
+    # sketch-scan answers agree with the engine's flat sharded path
+    one = srv.kmips(queries[0], 5, n_cand=64)
+    ref = eng.kmips(queries[0], 5, n_cand=509)     # full depth: exact
+    assert set(np.asarray(one.ids)) <= set(range(items.shape[0]))
+    np.testing.assert_array_equal(np.asarray(one.ids[:1]),
+                                  np.asarray(ref.ids[:1]))
+    # not-yet-materialized index: the server builds with the same key,
+    # so the codes still match the engine's lazily-built index
+    eng2 = RkMIPSEngine(server_cfg).build(items, items[:8],
+                                          jax.random.PRNGKey(3))
+    srv2 = eng2.server()
+    assert srv2.cache.builds == 0 and server_cfg not in srv2.cache
+    state2 = srv2.cache.get(server_cfg)            # built by the server
+    assert srv2.cache.builds == 1
+    np.testing.assert_array_equal(np.asarray(state2.codes)[:509],
+                                  np.asarray(eng2.kmips_index.codes)[:509])
+
+
+def test_flush_failures_keep_tickets(corpus, server_cfg):
+    """An empty flush is free (no state build); a failed flush (bad k)
+    consumes nothing — a retry answers every ticket."""
+    items, queries = corpus
+    srv = RetrievalServer(items, jax.random.PRNGKey(12), config=server_cfg)
+    assert srv.flush(5) == [] and srv.cache.builds == 0
+    srv.submit(queries[:2])
+    # bound is the REAL corpus size (509), not the padded row count (512):
+    # k=510 would otherwise return phantom (-1, -inf) tail entries
+    with pytest.raises(ValueError, match=r"k=510 outside \[1, 509\]"):
+        srv.flush(510)
+    assert srv.pending == 2                        # queue survived the error
+    res = srv.flush(5)
+    assert len(res) == 2 and srv.pending == 0
+    # a config swapped between flushes brings its own batch size
+    srv.config = server_cfg.replace(serve_batch_size=2)
+    assert srv.batch_size == 2
+    srv.submit(queries[:3])
+    assert len(srv.flush(5)) == 3
+
+
+def test_seeded_and_rebuilt_states_agree():
+    """A state seeded from the engine's index and one rebuilt by the cache
+    (same key, same recipe) are interchangeable — identical shapes and
+    codes even when the corpus is smaller than the config tile."""
+    key = jax.random.PRNGKey(13)
+    items = jax.random.normal(key, (50, 16))       # corpus < default tile
+    cfg = get_config("sah").replace(n_bits=64, serve_cache_capacity=1)
+    eng = RkMIPSEngine(cfg).build(items, None, key)
+    srv = eng.server()
+    seeded = srv.cache.get(cfg)
+    assert srv.cache.builds == 0
+    srv.cache.get(cfg.replace(n_bits=32))          # capacity 1: evicts seed
+    rebuilt = srv.cache.get(cfg)                   # cache builds its own
+    assert srv.cache.builds == 2
+    assert rebuilt.items.shape == seeded.items.shape
+    np.testing.assert_array_equal(np.asarray(rebuilt.codes),
+                                  np.asarray(seeded.codes))
+    np.testing.assert_array_equal(np.asarray(rebuilt.item_ids),
+                                  np.asarray(seeded.item_ids))
+
+
+def test_kmips_rejects_batch_without_enqueuing(corpus, server_cfg):
+    items, queries = corpus
+    srv = RetrievalServer(items, jax.random.PRNGKey(8), config=server_cfg)
+    srv.submit(queries[0])
+    with pytest.raises(ValueError, match=r"kmips serves one query"):
+        srv.kmips(queries[:3], 5)
+    assert srv.pending == 1                        # rejected rows not queued
+    res = srv.flush(5)
+    assert len(res) == 1
+
+
+def test_one_compile_per_batch_size(corpus, server_cfg):
+    items, queries = corpus
+    srv = RetrievalServer(items, jax.random.PRNGKey(6), config=server_cfg)
+    srv.submit(queries[:3])                        # partial batch (padded)
+    srv.flush(5)
+    assert srv.compile_count == 1
+    srv.submit(queries)                            # 7 = full + partial batch
+    srv.flush(5)
+    srv.submit(queries[0])
+    srv.flush(5)
+    assert srv.compile_count == 1                  # every dispatch is (4, d)
+    srv2 = RetrievalServer(items, jax.random.PRNGKey(6),
+                           config=server_cfg.replace(serve_batch_size=2))
+    srv2.submit(queries[:5])
+    srv2.flush(5)
+    assert srv2.compile_count == 1                 # its own (2, d) executable
+
+
+def test_serving_state_invariants(corpus, server_cfg):
+    """Padded rows are dead (-1 ids, mask off); real ids cover the corpus."""
+    items, _ = corpus
+    state = build_serving_state(items, jax.random.PRNGKey(7), server_cfg)
+    ids = np.asarray(state.item_ids)
+    mask = np.asarray(state.item_mask)
+    assert state.n_items == items.shape[0]
+    np.testing.assert_array_equal(np.sort(ids[mask]),
+                                  np.arange(items.shape[0]))
+    assert (ids[~mask] == -1).all()
+    assert not np.asarray(state.items)[~mask].any()
+
+
+# ---------------------------------------------------------------------------
+# Padding equivalence, hypothesis-free mirrors (fixed non-divisible sizes).
+# The drawn-size versions live in tests/test_core_properties.py.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,n,shards", [(53, 97, 3), (101, 67, 5),
+                                        (96, 128, 7)])
+def test_pad_index_rkmips_equivalence(m, n, shards):
+    key = jax.random.PRNGKey(m + n + shards)
+    ki, ku, kq, kb = jax.random.split(key, 4)
+    items = jax.random.normal(ki, (n, 8))
+    users = jax.random.normal(ku, (m, 8))
+    q = jax.random.normal(kq, (8,)) * 2.0
+    idx = sah.build(items, users, kb, k_max=4, n_top=4, tile=32,
+                    leaf_size=8, n_bits=32)
+    pidx = eng_sharding.pad_index(idx, shards)
+    assert pidx.n_blocks % shards == 0
+    for scan in ("sketch", "exact"):
+        p0, s0 = sah.rkmips(idx, q, 3, n_cand=16, scan=scan)
+        p1, s1 = sah.rkmips(pidx, q, 3, n_cand=16, scan=scan)
+        np.testing.assert_array_equal(
+            np.asarray(sah.predictions_to_original(idx, p0, m)),
+            np.asarray(sah.predictions_to_original(pidx, p1, m)))
+        for f in ("blocks_alive", "users_alive", "n_no_lb", "n_yes_norm",
+                  "n_scan"):
+            assert int(getattr(s0, f)) == int(getattr(s1, f)), (scan, f)
+    # dead padding: each original id exactly once among unmasked rows
+    ids = np.asarray(pidx.user_ids)[np.asarray(pidx.user_mask)]
+    np.testing.assert_array_equal(np.sort(ids), np.arange(m))
+
+
+@pytest.mark.parametrize("n,shards,k", [(97, 3, 5), (53, 7, 2), (64, 5, 1)])
+def test_pad_item_rows_flat_scan_equivalence(n, shards, k):
+    key = jax.random.PRNGKey(n * shards + k)
+    ki, kq, kb = jax.random.split(key, 3)
+    items = jax.random.normal(ki, (n, 12))
+    queries = jax.random.normal(kq, (3, 12))
+    idx = sa_alsh.build_index(items, kb, n_bits=32, tile=32)
+    uc = sa_alsh.user_codes(idx, queries)
+    padded = eng_sharding.pad_item_rows(idx.items, idx.item_ids,
+                                        idx.item_mask, idx.codes, shards, k)
+    assert padded[0].shape[0] % shards == 0
+    assert padded[0].shape[0] // shards >= k
+    for scan in ("sketch", "exact"):
+        v0, i0 = eng_sharding.kmips_flat_arrays(
+            idx.items, idx.item_ids, idx.item_mask, idx.codes, uc, queries,
+            k, NO_SHARDING, n_cand=256, scan=scan)
+        v1, i1 = eng_sharding.kmips_flat_arrays(*padded, uc, queries, k,
+                                                NO_SHARDING, n_cand=256,
+                                                scan=scan)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+
+
+def test_result_mapping_drops_phantom_ids():
+    """A phantom id (out of [0, n_users)) on a padding row must be dropped
+    by predictions_to_original, never clamped onto a real user."""
+    key = jax.random.PRNGKey(9)
+    ki, ku, kb = jax.random.split(key, 3)
+    items = jax.random.normal(ki, (40, 8))
+    users = jax.random.normal(ku, (17, 8))
+    idx = sah.build(items, users, kb, k_max=4, n_top=4, tile=32,
+                    leaf_size=8, n_bits=32)
+    pidx = eng_sharding.pad_index(idx, 5)
+    m_pad = pidx.n_users
+    # corrupt every padded (masked-off) slot with phantom ids AND force the
+    # mask on, simulating a broken alternate padding convention
+    pad_rows = jnp.arange(idx.n_users, m_pad)
+    bad = pidx._replace(
+        user_ids=pidx.user_ids.at[pad_rows].set(-1),
+        user_mask=pidx.user_mask.at[pad_rows].set(True))
+    all_yes = jnp.ones((m_pad,), bool)
+    out = sah.predictions_to_original(bad, all_yes, 17)
+    ref = sah.predictions_to_original(idx, jnp.ones((idx.n_users,), bool), 17)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
