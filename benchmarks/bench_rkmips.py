@@ -6,6 +6,12 @@ orders of magnitude slower than every pruned method (Fig. 1); our grid keeps
 the informative frontier. All other methods are exact configurations of the
 same engine (DESIGN.md SS3), so the comparison isolates exactly the paper's
 two contributions (SAT vs QNF; cone vs norm blocking).
+
+Also reports the tentpole cell (DESIGN.md SS9): the flat-queue batched
+driver (``query_batch``) against the legacy per-query ``lax.map`` driver
+(``query_batch_mapped``), wall time per query and dispatch trace counts,
+at several batch sizes. The checked-in baseline lives in BENCH_rkmips.json
+(``python -m benchmarks.run --scale smoke --only rkmips --json ...``).
 """
 
 from __future__ import annotations
@@ -35,6 +41,28 @@ def run(n=8192, m=16384, d=64, nq=16, ks=(1, 5, 10, 20, 30, 40, 50)):
             rows.append(common.fmt_row(
                 f"fig1/query/{method}/k={k}", dt * 1e6,
                 f"f1={f1:.3f};scanned={int(stats.n_scan.mean())}"))
+
+    # Tentpole cell (DESIGN.md SS9): flat-queue batched driver vs the
+    # legacy per-query lax.map driver, same engine and index, across batch
+    # sizes. ``traces`` pins the compile story per cell (counter deltas):
+    # each batch shape costs exactly one trace, never one per query.
+    eng, _ = common.build_method(wl, "sah")
+    k_mid = ks[len(ks) // 2]
+    for nq_cell in sorted({1, max(1, nq // 2), nq}):
+        qs = wl.queries[:nq_cell]
+        t_flat0 = eng.rkmips_compile_count
+        t_map0 = eng.rkmips_mapped_compile_count
+        eng.query_batch(qs, k_mid)                       # warm (compile)
+        dt_flat = eng.query_batch(qs, k_mid).seconds / nq_cell
+        eng.query_batch_mapped(qs, k_mid)
+        dt_map = eng.query_batch_mapped(qs, k_mid).seconds / nq_cell
+        rows.append(common.fmt_row(
+            f"tentpole/batched/k={k_mid}/nq={nq_cell}", dt_flat * 1e6,
+            f"traces={eng.rkmips_compile_count - t_flat0};"
+            f"speedup_vs_mapped={dt_map / dt_flat:.2f}"))
+        rows.append(common.fmt_row(
+            f"tentpole/mapped/k={k_mid}/nq={nq_cell}", dt_map * 1e6,
+            f"traces={eng.rkmips_mapped_compile_count - t_map0}"))
 
     # Non-divisible grid cell: prime user/item counts (the sizes the old
     # sharded path rejected; DESIGN.md SS8 pads them with dead rows). One

@@ -1,13 +1,25 @@
 """Benchmark driver: one harness per paper table/figure + roofline.
 
 Prints ``name,us_per_call,derived`` CSV. Scale with --scale {smoke,bench}.
+``--json PATH`` additionally writes the rows plus environment metadata as
+JSON — the format of the checked-in perf baselines (BENCH_rkmips.json):
+
+    PYTHONPATH=src python -m benchmarks.run --scale smoke --only rkmips \
+        --json BENCH_rkmips.json
 """
 
 from __future__ import annotations
 
 import argparse
+import datetime
+import json
 import sys
 import time
+
+
+def _row_to_json(row: str) -> dict:
+    name, us, derived = row.split(",", 2)
+    return {"name": name, "us_per_call": float(us), "derived": derived}
 
 
 def main() -> None:
@@ -16,6 +28,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: rkmips,kmips,kernels,"
                          "roofline")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + run metadata as JSON")
     args = ap.parse_args()
 
     from benchmarks import (bench_kernels, bench_kmips, bench_params,
@@ -41,16 +55,37 @@ def main() -> None:
         keep = set(args.only.split(","))
         suites = {k: v for k, v in suites.items() if k in keep}
 
+    all_rows: list[str] = []
     print("name,us_per_call,derived")
     for name, fn in suites.items():
         t0 = time.time()
         try:
             for row in fn():
                 print(row, flush=True)
+                all_rows.append(row)
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
             raise
         print(f"# suite {name} done in {time.time()-t0:.1f}s",
+              file=sys.stderr)
+
+    if args.json:
+        import jax
+        doc = {
+            "meta": {
+                "date": datetime.date.today().isoformat(),
+                "scale": args.scale,
+                "suites": sorted(suites),
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+                "device_count": jax.device_count(),
+            },
+            "rows": [_row_to_json(r) for r in all_rows],
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"# wrote {args.json} ({len(all_rows)} rows)",
               file=sys.stderr)
 
 

@@ -52,12 +52,9 @@ def main():
     f1 = metrics.f1_score(res.predictions, truth)
     print(f"\nper-query time: {dt*1e3:.1f} ms   mean F1: "
           f"{float(jnp.mean(f1)):.3f}")
-    s = jax.tree.map(lambda x: np.asarray(x).mean(), res.stats)
-    print(f"pruning: blocks alive {s.blocks_alive:.0f}/{eng.index.n_blocks}, "
-          f"decided-no by bounds {s.n_no_lb:.0f}, "
-          f"decided-yes by norm {s.n_yes_norm:.0f}, "
-          f"scanned {s.n_scan:.0f}/{args.m_users} users, "
-          f"{s.tiles_scanned:.0f} tile-visits")
+    # the aggregate pruning funnel the batched plan/execute driver recovers
+    # per query: blocks -> users -> scan lanes -> tiles (DESIGN.md SS9)
+    print(f"pruning funnel: {res.funnel.format()}")
     for i in range(min(4, args.queries)):
         res_i = np.where(np.asarray(res.predictions[i]))[0]
         print(f"query {i}: {len(res_i)} users would see this item in their "

@@ -67,9 +67,10 @@ class SAALSHIndex(NamedTuple):
       part_centroid: (T, d) f32 c_j.
       part_radius:   (T,) f32 R_j.
       n_parts:    () int32.
-      tile_max_norm: (n_tiles,) f32 max norm in / after each tile? No:
-                  max norm *within* the tile; since global order is norm
-                  descending, it also upper-bounds every later tile.
+      tile_max_norm: (n_tiles,) f32 max norm *within* each tile; because the
+                  global order is norm-descending, tile t's max also bounds
+                  every row of every later tile t' > t, which is what makes
+                  it the scan's early-termination bound.
     """
 
     items: jnp.ndarray
@@ -206,27 +207,45 @@ def _tile_candidates(index: SAALSHIndex, ucodes, users, t, *, n_cand: int,
     return ips, valid, cand.astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "n_cand", "scan"))
-def decide_count(index: SAALSHIndex, users: jnp.ndarray, taus: jnp.ndarray,
-                 init_count: jnp.ndarray, active: jnp.ndarray, k: int,
-                 *, n_cand: int = 64, scan: str = "sketch",
-                 eps: jnp.ndarray | float = 0.0):
-    """RkMIPS decision for a chunk of users against their thresholds.
+def decide_count_impl(index: SAALSHIndex, users: jnp.ndarray,
+                      taus: jnp.ndarray, init_count: jnp.ndarray,
+                      active: jnp.ndarray, k: int, *, n_cand: int = 64,
+                      scan: str = "sketch", eps: jnp.ndarray | float = 0.0):
+    """RkMIPS decision for a chunk of user lanes against their thresholds.
 
     users (C, d) -- unit user vectors; taus (C,) = <u, q>; init_count (C,) --
     items already known to beat tau (from the Simpfer lower-bound arrays over
     the top-norm item set P'); active (C,) -- lanes that actually need work;
-    eps -- absolute tie tolerance (see core/exact.py).
+    eps -- absolute tie tolerance (see core/exact.py), a scalar or a (C,)
+    per-lane array.
+
+    Lanes are fully independent: each carries its own tau, its own eps and
+    (through tau) its own early-exit bound, so a chunk may mix lanes from
+    *different* RkMIPS queries -- the batched flat work queue of
+    core/sah.py::rkmips_execute packs mixed-query chunks through this one
+    function. (The query vector itself never appears here: it reaches the
+    decision only via tau = <u, q>, and the Cauchy-Schwarz tile bound
+    mu = max_norm_tile * ||u|| is query-free because users are unit.)
+    A lane's outcome depends only on its own (user, tau, count, eps), never
+    on which other lanes share the chunk.
 
     Returns (is_yes (C,), tiles_visited ()) where is_yes[i] means q stays in
     u_i's top-k. Decision rule (Definition 1, strict-count convention):
       no  <=> #{p : <u,p> > tau + eps} >= k
       yes <=> scan exhausted / bound mu_tile <= tau with count < k.
+
+    This is the undecorated body; call ``decide_count`` (the jitted alias)
+    directly. The impl exists for composition inside outer transforms --
+    the batched driver traces it raw so the whole query phase stays a
+    single-jit computation that is safe under ``shard_map`` (DESIGN.md SS9).
     """
     n_tiles = index.tile_max_norm.shape[0]
     n_cand_eff = index.tile if scan == "exact" else n_cand
     ucodes = user_codes(index, users) if scan == "sketch" else \
         jnp.zeros((users.shape[0], index.codes.shape[1]), jnp.uint32)
+    # (taus + eps) broadcasts for scalar and per-lane eps alike, and is
+    # bitwise the f32 additions the scalar-eps form performed.
+    thr = taus + eps                                      # (C,)
 
     def cond(state):
         t, count, undecided = state
@@ -240,7 +259,7 @@ def decide_count(index: SAALSHIndex, users: jnp.ndarray, taus: jnp.ndarray,
         still = undecided & ~bound_done
         ips, valid, _ = _tile_candidates(index, ucodes, users, t,
                                          n_cand=n_cand_eff, scan=scan)
-        beat = jnp.sum((ips > taus[:, None] + eps) & valid, axis=-1)
+        beat = jnp.sum((ips > thr[:, None]) & valid, axis=-1)
         count = count + jnp.where(still, beat, 0)
         undecided = still & (count < k)
         return t + 1, count, undecided
@@ -251,6 +270,10 @@ def decide_count(index: SAALSHIndex, users: jnp.ndarray, taus: jnp.ndarray,
         cond, body, (jnp.asarray(0, jnp.int32), count0, undecided0))
     is_yes = active & (count_fin < k)
     return is_yes, t_fin
+
+
+decide_count = functools.partial(
+    jax.jit, static_argnames=("k", "n_cand", "scan"))(decide_count_impl)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "n_cand", "scan"))

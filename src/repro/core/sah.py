@@ -9,16 +9,33 @@ Indexing (Algorithm 4):
   3. SA-ALSH index over P \\ P';
   4. cone blocks over unit users; block lower bounds L_B = min over leaf.
 
-Query (Algorithm 5), per query q, fully batched over users:
+Query (Algorithm 5), batched over queries AND users in two phases
+(plan/execute, DESIGN.md SS9):
+
+  plan (rkmips_plan) -- for every (query, user) pair of the batch:
   1. node-level bound (Lemma 2) kills whole blocks: ub_B < L_B[k-1];
   2. vector-level bound (Lemma 3) kills users: ub_u < L_u[k-1];
-  3. tau = <u, q> computed densely (one (m,d) matvec -- on TPU this is
-     cheaper than gathering survivors; the bounds' value is keeping users out
-     of the expensive scan, and we report both pruning stages in the stats);
-     "no" if tau < L_u[k-1]; "yes" if tau >= ||p_k|| (k-th largest item norm);
-  4. survivors are compacted (cone order => chunk locality: users in the same
-     cone have correlated early-exit depths, so chunks finish together) and
-     run through the counting scan decide_count() in fixed-size chunks.
+  3. tau = <u, q> computed densely (one (m,d) matvec per query -- on TPU
+     this is cheaper than gathering survivors; the bounds' value is keeping
+     users out of the expensive scan, and we report both pruning stages in
+     the stats); "no" if tau < L_u[k-1]; "yes" if tau >= ||p_k|| (k-th
+     largest item norm);
+  4. the undecided (query, user) pairs of the WHOLE batch are compacted
+     into one flat work queue, query-major with cone-leaf order preserved
+     within each query (cone order => chunk locality: users in the same
+     cone have correlated early-exit depths, so chunks finish together).
+
+  execute (rkmips_execute) -- ONE while_loop drives fixed-size, possibly
+  mixed-query chunks of that queue through the counting scan
+  decide_count(): each lane carries its own tau and eps, so lanes from a
+  fast query never idle next to a slow query's lanes, and batch size is a
+  pure throughput knob (compile cost is O(1) in nq -- this is also what
+  makes the sharded path trace once, see engine/sharding.py).
+
+The per-query ``rkmips`` driver is retained as the reference oracle; the
+batched path is bitwise equal to it, prediction for prediction (the plan
+phase lax.maps the *identical* per-query dense math, and decide_count
+lanes are chunk-composition-independent).
 
 The same engine gives every paper baseline via two switches:
   user blocking: "cone" (SAH / H2-Cone) or "norm" (Simpfer-style blocks --
@@ -140,6 +157,13 @@ def build(items: jnp.ndarray, users: jnp.ndarray, key: jax.Array, *,
 
 
 class QueryStats(NamedTuple):
+    """Per-query pruning counters: scalars from ``rkmips``, (nq,) rows from
+    the batch drivers. The first five are exact and layout-independent
+    (bitwise equal across per-query / batched / sharded execution);
+    tiles_scanned and chunks are diagnostics of how the work happened to be
+    chunked — in the batched driver a mixed-query chunk's tile visits are
+    charged to every query with an active lane in it (DESIGN.md SS9)."""
+
     blocks_alive: jnp.ndarray    # after Lemma 2
     users_alive: jnp.ndarray     # after Lemma 3
     n_no_lb: jnp.ndarray         # decided no by tau < L[k-1]
@@ -149,22 +173,18 @@ class QueryStats(NamedTuple):
     chunks: jnp.ndarray
 
 
-def rkmips_impl(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
-                scan: str = "sketch", chunk: int = 256,
-                tie_eps: float = 0.0):
-    """Algorithm 5 for one query, undecorated. Returns (pred (m_pad,),
-    QueryStats).
+def _plan_one(index: SAHIndex, q: jnp.ndarray, k: int, tie_eps: float):
+    """Lemmas 2-3 + dense tau + the O(1) decisions for ONE query.
 
-    pred is in cone-leaf order; use predictions_to_original() to map back.
-    tie_eps: relative tie tolerance, must match the oracle (core/exact.py).
-    Call ``rkmips`` (the jitted alias) directly; this impl exists for
-    composition inside outer transforms — a nested ``jax.jit`` under
-    ``shard_map`` miscompiles on this toolchain (caught by the engine's
-    sharded-equivalence test), so ``repro.engine.sharding`` traces the raw
-    body instead.
+    Shared verbatim by the per-query reference driver (``rkmips_impl``) and
+    the batched planner (``rkmips_plan_impl`` lax.maps it), which is what
+    makes the two paths bitwise equal: every dense product is the same
+    matvec, every bound the same elementwise expression.
+
+    Returns (tau, count0, pred0, undecided, eps, block_alive, user_alive,
+    no_lb, yes_norm), all in cone-leaf order.
     """
     m_pad = index.n_users
-    chunk = min(chunk, m_pad)
     leaf = m_pad // index.n_blocks
     qn = jnp.linalg.norm(q)
     eps = tie_eps * qn
@@ -190,11 +210,32 @@ def rkmips_impl(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
     yes_norm = tau >= index.top_norms[k - 1]
     undecided = user_alive & ~no_lb & ~yes_norm
     count0 = _simpfer.init_count(index.user_lb, tau + eps)
+    pred0 = yes_norm & index.user_mask
+    return (tau, count0, pred0, undecided, eps, block_alive, user_alive,
+            no_lb, yes_norm)
+
+
+def rkmips_impl(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
+                scan: str = "sketch", chunk: int = 256,
+                tie_eps: float = 0.0):
+    """Algorithm 5 for one query, undecorated: the per-query REFERENCE
+    driver. Returns (pred (m_pad,), QueryStats).
+
+    pred is in cone-leaf order; use predictions_to_original() to map back.
+    tie_eps: relative tie tolerance, must match the oracle (core/exact.py).
+    Call ``rkmips`` (the jitted alias) directly. Production batches go
+    through the plan/execute pipeline (``rkmips_batch``), which is bitwise
+    equal to this driver query for query; this one survives as the oracle
+    the batched path's equivalence tests compare against.
+    """
+    m_pad = index.n_users
+    chunk = min(chunk, m_pad)
+    (tau, count0, pred0, undecided, eps, block_alive, user_alive,
+     no_lb, yes_norm) = _plan_one(index, q, k, tie_eps)
 
     # --- compact survivors (cone order preserved) and scan in chunks ------
     und_ids = jnp.argsort(~undecided)                     # undecided first
     n_und = jnp.sum(undecided)
-    pred0 = yes_norm & index.user_mask
 
     def cond(state):
         ci, _, _ = state
@@ -202,14 +243,20 @@ def rkmips_impl(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
 
     def body(state):
         ci, pred, tiles = state
-        ids = jax.lax.dynamic_slice(und_ids, (ci * chunk,), (chunk,))
-        active = (ci * chunk + jnp.arange(chunk)) < n_und
+        # Clamp the slice start exactly as dynamic_slice would, so `active`
+        # flags the lanes actually fetched: an unclamped position mask
+        # would silently skip the tail lanes of an almost-all-undecided
+        # queue whose length is not a chunk multiple (the final slice
+        # re-covers a few already-decided lanes instead — idempotent).
+        start = jnp.minimum(ci * chunk, m_pad - chunk)
+        ids = jax.lax.dynamic_slice(und_ids, (start,), (chunk,))
+        active = (start + jnp.arange(chunk)) < n_und
         users_c = jnp.take(index.users, ids, axis=0)
         taus_c = jnp.take(tau, ids)
         counts_c = jnp.take(count0, ids)
-        is_yes, t_vis = _alsh.decide_count(index.alsh, users_c, taus_c,
-                                           counts_c, active, k,
-                                           n_cand=n_cand, scan=scan, eps=eps)
+        is_yes, t_vis = _alsh.decide_count_impl(
+            index.alsh, users_c, taus_c, counts_c, active, k,
+            n_cand=n_cand, scan=scan, eps=eps)
         pred = pred.at[ids].set(jnp.where(active, is_yes, pred[ids]))
         return ci + 1, pred, tiles + t_vis
 
@@ -234,10 +281,198 @@ rkmips = functools.partial(
 )(rkmips_impl)
 
 
+class RkMIPSPlan(NamedTuple):
+    """Phase-1 output of the batched plan/execute pipeline (DESIGN.md SS9).
+
+    Everything phase 2 needs to drive the flat work queue, plus the
+    per-query pruning counters (already final at plan time -- the execute
+    phase only adds the tile/chunk diagnostics).
+
+    Attributes:
+      tau:     (nq, m_pad) f32 dense <u, q>.
+      count0:  (nq, m_pad) int32 items already known to beat tau (P').
+      pred0:   (nq, m_pad) bool O(1) "yes" decisions (tau >= ||p_k||).
+      queue:   (nq * m_pad,) int32 flat (query, user) ids into the
+               row-major (nq, m_pad) grid, undecided lanes first --
+               query-major, cone-leaf order preserved within each query
+               (the stable compaction sort keeps chunk locality).
+      n_work:  () int32 number of undecided lanes (queue[:n_work] is work).
+      eps:     (nq,) f32 per-query absolute tie tolerance.
+      blocks_alive / users_alive / n_no_lb / n_yes_norm / n_scan:
+               (nq,) int32 per-query pruning counters (QueryStats fields).
+    """
+
+    tau: jnp.ndarray
+    count0: jnp.ndarray
+    pred0: jnp.ndarray
+    queue: jnp.ndarray
+    n_work: jnp.ndarray
+    eps: jnp.ndarray
+    blocks_alive: jnp.ndarray
+    users_alive: jnp.ndarray
+    n_no_lb: jnp.ndarray
+    n_yes_norm: jnp.ndarray
+    n_scan: jnp.ndarray
+
+
+def rkmips_plan_impl(index: SAHIndex, queries: jnp.ndarray, k: int, *,
+                     tie_eps: float = 0.0) -> RkMIPSPlan:
+    """Phase 1 (plan): Lemmas 2-3, dense tau, O(1) decisions for the whole
+    (nq, m_pad) grid, then compaction into one flat cross-query work queue.
+
+    The per-query dense math runs under ``lax.map`` of the same
+    ``_plan_one`` body the reference driver uses: one trace regardless of
+    nq, and each query's floats are the *identical* matvec/bound ops --
+    which is what keeps the batched path bitwise equal to the per-query
+    oracle (a (nq, m) GEMM would round differently than nq matvecs).
+    The queue stores flat int32 ids, so a batch is limited to
+    nq * m_pad < 2**31 lanes (checked: both are static shapes).
+    """
+    if queries.shape[0] * index.n_users >= 2 ** 31:
+        raise ValueError(
+            f"batch too large for the int32 flat work queue: nq * m_pad = "
+            f"{queries.shape[0]} * {index.n_users} >= 2**31; split the "
+            f"query batch")
+
+    def one(q):
+        (tau, count0, pred0, undecided, eps, block_alive, user_alive,
+         no_lb, yes_norm) = _plan_one(index, q, k, tie_eps)
+        return (tau, count0, pred0, undecided, eps,
+                jnp.sum(block_alive), jnp.sum(user_alive),
+                jnp.sum(no_lb & index.user_mask),
+                jnp.sum(yes_norm & index.user_mask),
+                jnp.sum(undecided))
+
+    (tau, count0, pred0, undecided, eps, blocks_alive, users_alive,
+     n_no_lb, n_yes_norm, n_scan) = jax.lax.map(one, queries)
+
+    # Stable flat compaction: undecided lanes first, original (query-major,
+    # cone-leaf) order preserved among them.
+    queue = jnp.argsort(~undecided.reshape(-1)).astype(jnp.int32)
+    n_work = jnp.sum(undecided)
+    return RkMIPSPlan(tau=tau, count0=count0, pred0=pred0, queue=queue,
+                      n_work=n_work, eps=eps, blocks_alive=blocks_alive,
+                      users_alive=users_alive, n_no_lb=n_no_lb,
+                      n_yes_norm=n_yes_norm, n_scan=n_scan)
+
+
+rkmips_plan = functools.partial(
+    jax.jit, static_argnames=("k", "tie_eps"))(rkmips_plan_impl)
+
+
+def rkmips_execute_impl(index: SAHIndex, plan: RkMIPSPlan, k: int, *,
+                        n_cand: int = 64, scan: str = "sketch",
+                        chunk: int = 256):
+    """Phase 2 (execute): ONE while_loop over fixed-size, possibly
+    mixed-query chunks of the flat work queue. Returns
+    (pred (nq, m_pad) bool, QueryStats with (nq,) counters).
+
+    Each lane looks up its own user row, tau, init count and per-query eps
+    (lane i of the queue belongs to query ``queue[i] // m_pad``), so
+    ``decide_count`` needs no per-chunk query context and lanes from a
+    fast query never idle next to a slow query's lanes. Lane decisions are
+    chunk-composition-independent, so predictions are bitwise equal to the
+    per-query driver however the queue happens to be packed.
+
+    Per-query ``tiles_scanned`` / ``chunks`` are recovered by segment
+    accumulation keyed on each lane's query id: a chunk's tile count is
+    charged to every query with an active lane in it. For nq == 1 this
+    reproduces the per-query driver's numbers exactly; for mixed-query
+    chunks they are packing diagnostics (tile visits are shared by
+    co-resident lanes), unlike the plan-time counters, which are exact.
+    """
+    nq, m_pad = plan.tau.shape
+    chunk = min(chunk, nq * m_pad)
+    tau_f = plan.tau.reshape(-1)
+    count_f = plan.count0.reshape(-1)
+
+    def cond(state):
+        ci, _, _, _ = state
+        return (ci * chunk) < plan.n_work
+
+    def body(state):
+        ci, pred, tiles_q, chunks_q = state
+        # Clamped start, for the same almost-full-queue tail case as the
+        # per-query driver (see rkmips_impl).
+        start = jnp.minimum(ci * chunk, nq * m_pad - chunk)
+        ids = jax.lax.dynamic_slice(plan.queue, (start,), (chunk,))
+        active = (start + jnp.arange(chunk)) < plan.n_work
+        qid = ids // m_pad
+        users_c = jnp.take(index.users, ids % m_pad, axis=0)
+        taus_c = jnp.take(tau_f, ids)
+        counts_c = jnp.take(count_f, ids)
+        eps_c = jnp.take(plan.eps, qid)
+        is_yes, t_vis = _alsh.decide_count_impl(
+            index.alsh, users_c, taus_c, counts_c, active, k,
+            n_cand=n_cand, scan=scan, eps=eps_c)
+        pred = pred.at[ids].set(jnp.where(active, is_yes, pred[ids]))
+        present = jnp.zeros((nq,), bool).at[qid].max(active)
+        tiles_q = tiles_q + jnp.where(present, t_vis, 0)
+        chunks_q = chunks_q + present.astype(jnp.int32)
+        return ci + 1, pred, tiles_q, chunks_q
+
+    zeros_q = jnp.zeros((nq,), jnp.int32)
+    _, pred, tiles_q, chunks_q = jax.lax.while_loop(
+        cond, body, (jnp.asarray(0, jnp.int32), plan.pred0.reshape(-1),
+                     zeros_q, zeros_q))
+
+    stats = QueryStats(
+        blocks_alive=plan.blocks_alive,
+        users_alive=plan.users_alive,
+        n_no_lb=plan.n_no_lb,
+        n_yes_norm=plan.n_yes_norm,
+        n_scan=plan.n_scan,
+        tiles_scanned=tiles_q,
+        chunks=chunks_q,
+    )
+    return pred.reshape(nq, m_pad), stats
+
+
+rkmips_execute = functools.partial(
+    jax.jit, static_argnames=("k", "n_cand", "scan", "chunk"),
+)(rkmips_execute_impl)
+
+
+def rkmips_batch_impl(index: SAHIndex, queries: jnp.ndarray, k: int, *,
+                      n_cand: int = 64, scan: str = "sketch",
+                      chunk: int = 256, tie_eps: float = 0.0):
+    """Batched Algorithm 5, undecorated: plan + execute (DESIGN.md SS9).
+
+    (nq, d) queries -> (pred (nq, m_pad), QueryStats with (nq,) counters).
+    Bitwise equal to stacking per-query ``rkmips`` calls (predictions and
+    the plan-time counters; tiles/chunks are packing diagnostics). Call
+    ``rkmips_batch`` (the jitted alias) directly; the impl exists so
+    ``repro.engine.sharding`` can trace the raw body under ``shard_map`` --
+    one flat while_loop, no nested jit and no scan-of-while, which is what
+    retires the jax 0.4.x per-query unroll workaround (the plan's lax.map
+    contains only dense per-query math and is shard_map-safe).
+    """
+    plan = rkmips_plan_impl(index, queries, k, tie_eps=tie_eps)
+    return rkmips_execute_impl(index, plan, k, n_cand=n_cand, scan=scan,
+                               chunk=chunk)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "n_cand", "scan", "chunk", "tie_eps"))
 def rkmips_batch(index: SAHIndex, queries: jnp.ndarray, k: int, *,
                  n_cand: int = 64, scan: str = "sketch", chunk: int = 256,
                  tie_eps: float = 0.0):
-    """Batch driver: (nq, d) queries -> (pred (nq, m_pad), stats stacked)."""
+    """Jitted batched Algorithm 5 — see ``rkmips_batch_impl``. (A wrapper
+    rather than a jit alias so the impl binds late: the compile-count tests
+    wrap it to prove one body invocation per trace.)"""
+    return rkmips_batch_impl(index, queries, k, n_cand=n_cand, scan=scan,
+                             chunk=chunk, tie_eps=tie_eps)
+
+
+def rkmips_batch_mapped(index: SAHIndex, queries: jnp.ndarray, k: int, *,
+                        n_cand: int = 64, scan: str = "sketch",
+                        chunk: int = 256, tie_eps: float = 0.0):
+    """The legacy batch driver: ``lax.map`` of independent per-query
+    ``rkmips`` while-loops. Superseded by the flat-queue ``rkmips_batch``
+    (a fast query's lanes no longer pad out their own chunk grid while a
+    slow query scans); retained as the second reference for equivalence
+    tests and as the baseline ``benchmarks/bench_rkmips.py`` reports
+    batched-vs-mapped wall time against."""
     fn = functools.partial(rkmips, index, k=k, n_cand=n_cand, scan=scan,
                            chunk=chunk, tie_eps=tie_eps)
     return jax.lax.map(lambda q: fn(q), queries)

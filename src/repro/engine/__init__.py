@@ -14,6 +14,8 @@ This package is the only public way to run (R)kMIPS (DESIGN.md SS7):
     ``RetrievalServer`` micro-batches single queries into fixed-size,
     statically-shaped dispatches through the sharded flat scan, with built
     state LRU-cached by config (``ServingCache`` / ``build_serving_state``);
+    ``ReverseServer`` does the same for RkMIPS over the batched
+    plan/execute pipeline (DESIGN.md SS9);
   * ``serving_codes`` — the offline sketch build behind
     ``launch/serve.py::build_candidate_index``.
 
@@ -24,9 +26,10 @@ arrays, timings, lazy kMIPS index, pending serving tickets) lives here.
 from repro.engine.config import (EngineConfig, PAPER_BASELINES, TIE_EPS_DEFAULT,
                                  display_name, get_config, method_names,
                                  register)
-from repro.engine.engine import (KMIPSResult, QueryResult, RkMIPSEngine,
-                                 serving_codes)
-from repro.engine.serving import (RetrievalServer, ServeResult, ServingCache,
+from repro.engine.engine import (KMIPSResult, PruningFunnel, QueryResult,
+                                 RkMIPSEngine, serving_codes)
+from repro.engine.serving import (RetrievalServer, ReverseResult,
+                                  ReverseServer, ServeResult, ServingCache,
                                   ServingState, build_serving_state,
                                   state_from_index)
 
@@ -34,8 +37,11 @@ __all__ = [
     "EngineConfig",
     "KMIPSResult",
     "PAPER_BASELINES",
+    "PruningFunnel",
     "QueryResult",
     "RetrievalServer",
+    "ReverseResult",
+    "ReverseServer",
     "RkMIPSEngine",
     "ServeResult",
     "ServingCache",

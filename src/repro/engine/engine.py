@@ -28,6 +28,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import exact as _exact
 from repro.core import sa_alsh as _alsh
@@ -39,6 +40,39 @@ from repro.engine.config import EngineConfig, get_config
 _KMIPS_KEY_TAG = 0x5A11      # fold_in tag for the lazily-built kMIPS index
 
 
+class PruningFunnel(NamedTuple):
+    """Aggregate pruning funnel of one RkMIPS batch, summed over queries:
+    blocks -> users -> scan lanes -> tiles (derived from the per-query
+    ``QueryStats`` counters the batched driver recovers per lane).
+
+    blocks_total / users_total are nq * (count the counters are measured
+    against): alive fractions read directly as funnel stage widths.
+    tiles_scanned / chunks are the execute phase's packing diagnostics
+    (mixed-query chunks share tile visits, see core/sah.py).
+    """
+
+    queries: int
+    blocks_total: int
+    blocks_alive: int
+    users_total: int
+    users_alive: int
+    decided_no_lb: int
+    decided_yes_norm: int
+    scan_lanes: int
+    tiles_scanned: int
+    chunks: int
+
+    def format(self) -> str:
+        """One human-readable funnel line (examples/quickstart.py)."""
+        return (f"{self.queries} queries: "
+                f"blocks {self.blocks_alive}/{self.blocks_total} alive -> "
+                f"users {self.users_alive}/{self.users_total} alive -> "
+                f"scan lanes {self.scan_lanes} "
+                f"(no-by-bound {self.decided_no_lb}, "
+                f"yes-by-norm {self.decided_yes_norm}) -> "
+                f"{self.tiles_scanned} tile-visits in {self.chunks} chunks")
+
+
 class QueryResult(NamedTuple):
     """One RkMIPS answer, already mapped to original user rows.
 
@@ -46,12 +80,14 @@ class QueryResult(NamedTuple):
     stats:       core/sah.py::QueryStats (scalar / (nq,) counters).
     seconds:     wall time of the call, compile included on first use.
     k:           the k answered.
+    funnel:      aggregate PruningFunnel over the batch.
     """
 
     predictions: jnp.ndarray
     stats: _sah.QueryStats
     seconds: float
     k: int
+    funnel: PruningFunnel | None = None
 
 
 class KMIPSResult(NamedTuple):
@@ -88,6 +124,50 @@ class RkMIPSEngine:
         self._users_unit: jnp.ndarray | None = None
         self._key: jax.Array | None = None
         self.n_users: int | None = None
+        # Every reverse query routes through one dispatch of the batched
+        # plan/execute pipeline (sharded or not). rkmips_compile_count
+        # counts compiles, not calls: exactly one per distinct (batch
+        # shape, k) — batch size is a pure throughput knob (pinned by
+        # tests/test_batched.py). Single-device the counter increments at
+        # jit trace time (ground truth); under a mesh the shard_map must
+        # dispatch eagerly — an *outer* jit staged around it re-triggers
+        # the jax 0.4.x while-driver miscompile (wrong predictions, caught
+        # by the sharded-equivalence test) — so there the counter keys on
+        # distinct dispatch signatures, which is exactly how the XLA
+        # executable cache keys its compiles.
+        self.rkmips_compile_count = 0
+        self.rkmips_mapped_compile_count = 0
+        self._rkmips_seen: set = set()
+
+        def _rkmips(index, queries, *, k):
+            self.rkmips_compile_count += 1
+            return _sharding.rkmips_batch(index, queries, k, self.policy,
+                                          **self.config.query_kwargs())
+
+        def _rkmips_eager(index, queries, *, k):
+            # Key on everything the executable cache keys on: the index
+            # leaves' shapes too, so a rebuild with new sizes counts its
+            # recompile instead of hiding behind an old query signature.
+            sig = (queries.shape, str(queries.dtype), k,
+                   tuple((l.shape, str(l.dtype))
+                         for l in jax.tree.leaves(index)))
+            if sig not in self._rkmips_seen:
+                self._rkmips_seen.add(sig)
+                self.rkmips_compile_count += 1
+            return _sharding.rkmips_batch(index, queries, k, self.policy,
+                                          **self.config.query_kwargs())
+
+        def _rkmips_mapped(index, queries, *, k):
+            self.rkmips_mapped_compile_count += 1
+            return _sah.rkmips_batch_mapped(index, queries, k,
+                                            **self.config.query_kwargs())
+
+        if policy.mesh is None:
+            self._rkmips_dispatch = jax.jit(_rkmips, static_argnames=("k",))
+        else:
+            self._rkmips_dispatch = _rkmips_eager
+        self._rkmips_mapped_dispatch = jax.jit(_rkmips_mapped,
+                                               static_argnames=("k",))
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -160,33 +240,84 @@ class RkMIPSEngine:
 
     # -- reverse queries ---------------------------------------------------
 
+    def _funnel(self, stats: _sah.QueryStats, nq: int) -> PruningFunnel:
+        """Aggregate the per-query counters into one PruningFunnel.
+
+        Sums run host-side on the already-materialized (nq,) counters —
+        the result is blocked on before this runs — so building the
+        funnel launches no device work (serving flushes call this per
+        micro-batch)."""
+        tot = lambda x: int(np.asarray(x).sum())
+        return PruningFunnel(
+            queries=nq,
+            blocks_total=nq * self.index.n_blocks,
+            blocks_alive=tot(stats.blocks_alive),
+            users_total=nq * self.n_users,
+            users_alive=tot(stats.users_alive),
+            decided_no_lb=tot(stats.n_no_lb),
+            decided_yes_norm=tot(stats.n_yes_norm),
+            scan_lanes=tot(stats.n_scan),
+            tiles_scanned=tot(stats.tiles_scanned),
+            chunks=tot(stats.chunks))
+
     def query(self, q: jnp.ndarray, k: int) -> QueryResult:
-        """RkMIPS for one query (d,): which users have q in their top-k."""
+        """RkMIPS for one query (d,): which users have q in their top-k.
+
+        A batch of one through the same plan/execute dispatch as
+        ``query_batch`` (bitwise equal to the per-query reference driver,
+        see core/sah.py). Executables are keyed per (batch shape, k), so
+        single queries compile their own (1, d) executable — once — and
+        every later single query reuses it.
+        """
         index = self.index
         self._check_k(k)
         t0 = time.perf_counter()
-        if self.policy.mesh is not None:
-            pred, stats = _sharding.rkmips_batch(
-                index, q[None], k, self.policy, **self.config.query_kwargs())
-            pred = pred[0]
-            stats = jax.tree.map(lambda s: s[0], stats)
-        else:
-            pred, stats = _sah.rkmips(index, q, k,
-                                      **self.config.query_kwargs())
+        pred, stats = self._rkmips_dispatch(index, q[None], k=k)
+        pred = pred[0]
+        stats = jax.tree.map(lambda s: s[0], stats)
         po = _sah.predictions_to_original(index, pred, self.n_users)
         jax.block_until_ready(po)
-        return QueryResult(po, stats, time.perf_counter() - t0, k)
+        return QueryResult(po, stats, time.perf_counter() - t0, k,
+                           self._funnel(stats, 1))
 
     def query_batch(self, queries: jnp.ndarray, k: int) -> QueryResult:
-        """RkMIPS for a batch (nq, d) -> predictions (nq, m)."""
+        """RkMIPS for a batch (nq, d) -> predictions (nq, m).
+
+        One jitted dispatch of the batched plan/execute pipeline
+        (core/sah.py, sharded by ``engine/sharding.py`` under a mesh
+        policy): one trace per distinct (nq, k) however large the batch —
+        ``rkmips_compile_count`` exposes the trace count. The result's
+        ``funnel`` aggregates the recovered per-query pruning counters.
+        """
         index = self.index
         self._check_k(k)
         t0 = time.perf_counter()
-        pred, stats = _sharding.rkmips_batch(index, queries, k, self.policy,
-                                             **self.config.query_kwargs())
+        pred, stats = self._rkmips_dispatch(index, queries, k=k)
         po = _sah.predictions_to_original(index, pred, self.n_users)
         jax.block_until_ready(po)
-        return QueryResult(po, stats, time.perf_counter() - t0, k)
+        return QueryResult(po, stats, time.perf_counter() - t0, k,
+                           self._funnel(stats, queries.shape[0]))
+
+    def query_batch_mapped(self, queries: jnp.ndarray, k: int) -> QueryResult:
+        """The legacy ``lax.map``-of-per-query-while-loops batch driver.
+
+        Retained behind the facade as the benchmark baseline the flat-queue
+        ``query_batch`` is compared against (benchmarks/bench_rkmips.py) and
+        as a second reference for equivalence tests. Single-device only:
+        the sharded path is flat-queue only (DESIGN.md SS9).
+        """
+        index = self.index
+        self._check_k(k)
+        if self.policy.mesh is not None:
+            raise RuntimeError("query_batch_mapped is the single-device "
+                               "reference driver; use query_batch under a "
+                               "mesh policy")
+        t0 = time.perf_counter()
+        pred, stats = self._rkmips_mapped_dispatch(index, queries, k=k)
+        po = _sah.predictions_to_original(index, pred, self.n_users)
+        jax.block_until_ready(po)
+        return QueryResult(po, stats, time.perf_counter() - t0, k,
+                           self._funnel(stats, queries.shape[0]))
 
     # -- forward queries ---------------------------------------------------
 
@@ -246,6 +377,17 @@ class RkMIPSEngine:
             srv.cache.put(self.config, _serving.state_from_index(
                 self._kmips_index, self.config, policy=self.policy))
         return srv
+
+    def reverse_server(self):
+        """An online ``ReverseServer`` over this engine (engine/serving.py).
+
+        Micro-batched RkMIPS serving as a ticket queue over
+        ``query_batch``: the batched plan/execute dispatch is shared, so
+        serving costs no extra executables and every answer is bitwise a
+        row of the equivalent one-shot batch. Requires a user-side build.
+        """
+        from repro.engine import serving as _serving
+        return _serving.ReverseServer(self)
 
     # -- ground truth ------------------------------------------------------
 

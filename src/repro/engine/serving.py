@@ -1,4 +1,4 @@
-"""Engine-level online serving: micro-batched kMIPS behind one front door.
+"""Engine-level online serving: micro-batched (R)kMIPS behind one front door.
 
 DESIGN.md SS8 is the contract. This module is what ``launch/serve.py`` and
 ``examples/serve_retrieval.py`` sit on: single queries arrive one at a time,
@@ -10,7 +10,7 @@ projection, and their padded, mesh-placed layout — is cached in an LRU
 keyed by the frozen ``EngineConfig``, so swapping presets on a live server
 rebuilds nothing it has already built.
 
-Three layers, separable on purpose:
+Forward (kMIPS) serving, three layers, separable on purpose:
 
   * ``build_serving_state`` — offline: SA-ALSH index build, row padding to
     the mesh's shard multiple (``pad_item_rows``), device placement.
@@ -20,10 +20,19 @@ Three layers, separable on purpose:
     its ticket, ``flush`` answers every pending ticket in order; ``kmips``
     is the submit+flush convenience for a lone query.
 
+Reverse (RkMIPS) serving rides the batched plan/execute pipeline
+(DESIGN.md SS9): ``ReverseServer`` accumulates promoted-item queries and
+answers them through ``RkMIPSEngine.query_batch`` in fixed-size
+micro-batches. Because the flat cross-query work queue made batch size a
+pure throughput knob — one trace per batch shape, fast queries' lanes
+never idle behind slow ones — online reverse dispatch needs no path of
+its own: the server is a ticket queue over the engine.
+
 Invariant (tests/test_serving.py): per-query results are bitwise identical
 whether a query is served alone, inside any micro-batch, or in a one-shot
-batch — ``kmips_flat_arrays`` is row-wise independent and padding rows are
-dead, so batching is a latency/throughput knob, never an accuracy knob.
+batch — flat-scan rows and RkMIPS work-queue lanes are both independent
+and padding is dead, so batching is a latency/throughput knob, never an
+accuracy knob.
 """
 
 from __future__ import annotations
@@ -184,7 +193,58 @@ class ServingCache:
         return state
 
 
-class RetrievalServer:
+class _TicketQueue:
+    """Shared ticket bookkeeping for the online servers.
+
+    FIFO: ``submit`` enqueues a query (d,) — or a block (nq, d), one
+    ticket per row — and returns the ticket(s); a server's ``flush``
+    answers every pending ticket in submission order and consumes the
+    queue only on success (a failed flush leaves every ticket pending, so
+    a retry answers them all). One implementation, so the ticket
+    arithmetic and failure contract can never drift between the forward
+    and reverse servers.
+    """
+
+    def __init__(self):
+        self._pending: list[jnp.ndarray] = []
+        self._next_ticket = 0
+
+    @property
+    def pending(self) -> int:
+        """Tickets submitted but not yet flushed."""
+        return len(self._pending)
+
+    def submit(self, q: jnp.ndarray) -> int | list[int]:
+        """Enqueue a query (d,) -> its ticket; (nq, d) -> one per row.
+
+        Tickets are served strictly in submission order by the next
+        ``flush``; a ticket's position in flush's result list is
+        ``ticket - first_pending_ticket``.
+        """
+        q = jnp.asarray(q)
+        if q.ndim == 1:
+            self._pending.append(q)
+            self._next_ticket += 1
+            return self._next_ticket - 1
+        tickets = list(range(self._next_ticket,
+                             self._next_ticket + q.shape[0]))
+        self._pending.extend(q[i] for i in range(q.shape[0]))
+        self._next_ticket += q.shape[0]
+        return tickets
+
+    def _serve_one(self, q: jnp.ndarray, flush, what: str):
+        """Submit one query (d,) and flush now, returning its answer.
+        Pending tickets (if any) are answered by the same flush, in
+        submission order."""
+        if jnp.asarray(q).ndim != 1:
+            raise ValueError(f"{what} serves one query (d,); use "
+                             f"submit/flush for batches")
+        ticket = self.submit(q)
+        first = self._next_ticket - len(self._pending)
+        return flush()[ticket - first]
+
+
+class RetrievalServer(_TicketQueue):
     """Online kMIPS serving: accumulate single queries, answer in batches.
 
     ``submit`` enqueues a query (d,) — or a block (nq, d), one ticket per
@@ -205,14 +265,13 @@ class RetrievalServer:
     def __init__(self, items: jnp.ndarray, key: jax.Array, *,
                  config: EngineConfig | str = "sah",
                  policy: ShardingPolicy = NO_SHARDING):
+        super().__init__()
         if isinstance(config, str):
             config = get_config(config)
         self.config = config
         self.policy = policy
         self.cache = ServingCache(items, key, policy=policy,
                                   capacity=config.serve_cache_capacity)
-        self._pending: list[jnp.ndarray] = []
-        self._next_ticket = 0
         self.compile_count = 0
 
         def _scan(items_a, ids_a, mask_a, codes_a, proj_q, queries, *,
@@ -233,29 +292,6 @@ class RetrievalServer:
         """The micro-batch size — read from the *current* config, so a
         config swapped between flushes brings its own batching along."""
         return self.config.serve_batch_size
-
-    @property
-    def pending(self) -> int:
-        """Tickets submitted but not yet flushed."""
-        return len(self._pending)
-
-    def submit(self, q: jnp.ndarray) -> int | list[int]:
-        """Enqueue a query (d,) -> its ticket; (nq, d) -> one per row.
-
-        Tickets are served strictly in submission order by the next
-        ``flush``; the ticket's position in flush's result list is
-        ``ticket - first_pending_ticket``.
-        """
-        q = jnp.asarray(q)
-        if q.ndim == 1:
-            self._pending.append(q)
-            self._next_ticket += 1
-            return self._next_ticket - 1
-        tickets = list(range(self._next_ticket,
-                             self._next_ticket + q.shape[0]))
-        self._pending.extend(q[i] for i in range(q.shape[0]))
-        self._next_ticket += q.shape[0]
-        return tickets
 
     def flush(self, k: int, *, n_cand: int | None = None,
               scan: str | None = None) -> list[ServeResult]:
@@ -302,9 +338,90 @@ class RetrievalServer:
               scan: str | None = None) -> ServeResult:
         """Serve one query now: submit + flush. Pending tickets (if any)
         are answered by the same flush, preserving submission order."""
-        if jnp.asarray(q).ndim != 1:
-            raise ValueError("kmips serves one query (d,); use "
-                             "submit/flush for batches")
-        ticket = self.submit(q)
-        first = self._next_ticket - len(self._pending)
-        return self.flush(k, n_cand=n_cand, scan=scan)[ticket - first]
+        return self._serve_one(
+            q, lambda: self.flush(k, n_cand=n_cand, scan=scan), "kmips")
+
+
+class ReverseResult(NamedTuple):
+    """One served reverse (RkMIPS) query's answer.
+
+    predictions: (m,) bool in original user rows — which users would see
+                 the promoted item in their top-k.
+    stats:       this query's row of core/sah.py::QueryStats.
+    k:           the k answered.
+    """
+
+    predictions: jnp.ndarray
+    stats: object
+    k: int
+
+
+class ReverseServer(_TicketQueue):
+    """Online RkMIPS serving: accumulate promoted items, answer in batches.
+
+    A ticket queue over ``RkMIPSEngine.query_batch`` — the batched
+    plan/execute pipeline IS the online dispatch (DESIGN.md SS9): batch
+    size is a pure throughput knob (one trace per batch shape, mixed-query
+    chunks load-balance themselves), so reverse serving needs no private
+    scan path the way forward serving once did.
+
+    ``submit`` enqueues a query (d,) — or a block (nq, d), one ticket per
+    row — and returns the ticket(s); ``flush(k)`` answers every pending
+    ticket in submission order, grouping them into micro-batches of
+    ``config.serve_batch_size``. The final partial group is padded to the
+    full batch size by repeating its first query (a real vector, so every
+    bound stays well-behaved; the padded rows are computed and discarded),
+    keeping shapes static: the engine's ``rkmips_compile_count`` — exposed
+    here as ``compile_count`` — stays at one per distinct (batch size, k),
+    pinned by tests/test_serving.py. Per-ticket answers are bitwise the
+    matching rows of a one-shot ``query_batch`` (work-queue lanes are
+    independent, see core/sah.py).
+
+    Tickets stay pending until a flush succeeds: a failed dispatch (or a
+    bad ``k``) raises without consuming the queue, so a retry answers
+    every ticket.
+    """
+
+    def __init__(self, engine):
+        super().__init__()
+        engine.index                      # raises unless built for RkMIPS
+        self.engine = engine
+
+    @property
+    def batch_size(self) -> int:
+        """Micro-batch size, read from the engine's config."""
+        return self.engine.config.serve_batch_size
+
+    @property
+    def compile_count(self) -> int:
+        """Traces the engine's reverse dispatch has cost (one per distinct
+        (batch shape, k); serving adds no executables of its own)."""
+        return self.engine.rkmips_compile_count
+
+    def flush(self, k: int) -> list[ReverseResult]:
+        """Answer every pending ticket; results in submission order."""
+        if not self._pending:
+            return []
+        batch = self.batch_size
+        queue = list(self._pending)
+        out: list[ReverseResult] = []
+        for i in range(0, len(queue), batch):
+            group = queue[i:i + batch]
+            qs = jnp.stack(group)
+            if len(group) < batch:
+                qs = jnp.concatenate(
+                    [qs, jnp.broadcast_to(qs[:1], (batch - len(group),)
+                                          + qs.shape[1:])])
+            res = self.engine.query_batch(qs, k)
+            out.extend(
+                ReverseResult(res.predictions[j],
+                              jax.tree.map(lambda s, j=j: s[j], res.stats),
+                              k)
+                for j in range(len(group)))
+        del self._pending[:len(queue)]
+        return out
+
+    def rkmips(self, q: jnp.ndarray, k: int) -> ReverseResult:
+        """Serve one reverse query now: submit + flush. Pending tickets
+        (if any) are answered by the same flush, in submission order."""
+        return self._serve_one(q, lambda: self.flush(k), "rkmips")

@@ -8,11 +8,18 @@ parallel along one axis:
     another lane. So the user side of the ``SAHIndex`` (leaf-ordered users,
     angles, lower bounds, cone blocks) is row-sharded over every mesh axis,
     the item side (SA-ALSH index, top-norm prefix) is replicated, and each
-    shard runs the stock ``core/sah.py::rkmips`` on its slice; one tiled
-    all-gather reassembles the (m_pad,) prediction vector and a psum merges
-    the counters. Predictions are bitwise identical to the unsharded run
-    (asserted in tests/test_engine.py): chunk compaction regroups lanes but
-    each lane's decision is self-contained.
+    shard runs the stock batched plan/execute pipeline
+    (``core/sah.py::rkmips_batch_impl``, DESIGN.md SS9) on its slice of the
+    user rows for the WHOLE query batch at once; one tiled all-gather
+    reassembles the (nq, m_pad) prediction grid and a psum merges the
+    counters. The body is a single flat while_loop over the shard-local
+    cross-query work queue -- no nested jit, no scan-of-while, no Python
+    loop over queries -- so it traces exactly once per batch shape at any
+    batch size (pinned by the compile-count test) and is safe under
+    ``shard_map`` where the old per-query drivers (nested jit / lax.map)
+    miscompiled on jax 0.4.x. Predictions are bitwise identical to the
+    unsharded run (asserted in tests/test_engine.py): queue compaction
+    regroups lanes but each lane's decision is self-contained.
 
   * kMIPS shards along **items**, reusing the proven pattern of
     ``launch/serve.py::sah_retrieve_step``: each shard Hamming-scans its code
@@ -38,8 +45,6 @@ routes every entry point to the identical single-device computation.
 """
 
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -160,13 +165,22 @@ def rkmips_batch(index: _sah.SAHIndex, queries: jnp.ndarray, k: int,
                  policy: ShardingPolicy, *, n_cand: int = 64,
                  scan: str = "sketch", chunk: int = 256,
                  tie_eps: float = 0.0):
-    """Sharded Algorithm 5 over a query batch.
+    """Sharded Algorithm 5 over a query batch (one trace per batch shape).
 
     Returns (pred (nq, m_pad) bool in global leaf order, QueryStats with
     per-query counters summed over shards). m_pad reflects block padding
     when the block count does not divide the mesh; ``pad_index`` rows are
     masked, so ``predictions_to_original`` strips them. Without a mesh this
     is exactly ``core/sah.py::rkmips_batch``.
+
+    The shard_map body is the raw batched plan/execute driver on the
+    shard's user slice: the plan's lax.map holds only dense per-query math
+    and the execute phase is one flat while_loop, so — unlike the retired
+    per-query drivers (nested jit / scan-of-while, the jax 0.4.x
+    miscompile, DESIGN.md SS9) — the body traces once at any nq. The
+    shard-local work queues are what make this load-balanced: a shard
+    whose users die early for one query spends its chunks on the other
+    queries' survivors instead of idling.
     """
     if policy.mesh is None:
         return _sah.rkmips_batch(index, queries, k, n_cand=n_cand,
@@ -176,18 +190,9 @@ def rkmips_batch(index: _sah.SAHIndex, queries: jnp.ndarray, k: int,
     specs = index_specs(index, policy)
 
     def local(idx_l: _sah.SAHIndex, qs: jnp.ndarray):
-        # rkmips_impl + an unrolled query loop, NOT rkmips + lax.map: on
-        # jax 0.4.x both a nested jit and a scan nested under shard_map
-        # miscompile the chunked while-loop driver (wrong predictions, not
-        # float noise — caught by the bitwise sharded-equivalence test).
-        # Unrolling costs compile time linear in nq but keeps the sharded
-        # run bitwise equal to the single-device one.
-        fn = functools.partial(_sah.rkmips_impl, idx_l, k=k, n_cand=n_cand,
-                               scan=scan, chunk=chunk, tie_eps=tie_eps)
-        per_q = [fn(qs[i]) for i in range(qs.shape[0])]
-        pred_l = jnp.stack([p for p, _ in per_q])
-        stats_l = jax.tree.map(lambda *xs: jnp.stack(xs),
-                               *[s for _, s in per_q])
+        pred_l, stats_l = _sah.rkmips_batch_impl(
+            idx_l, qs, k, n_cand=n_cand, scan=scan, chunk=chunk,
+            tie_eps=tie_eps)
         pred = jax.lax.all_gather(pred_l, axes, axis=1, tiled=True)
         stats = jax.tree.map(lambda s: jax.lax.psum(s, axes), stats_l)
         return pred, stats

@@ -1,0 +1,237 @@
+"""Batched plan/execute RkMIPS (core/sah.py, DESIGN.md SS9).
+
+Hypothesis-free mirrors of the flat-queue equivalence properties (the
+drawn-size versions live in tests/test_core_properties.py), plus the
+compile-count regressions the tentpole is about: one trace per batch shape,
+never one per query. Covers nq=1, an all-pruned batch (empty work queue),
+chunk sizes from 1 to larger-than-queue, both scans, and the per-lane eps
+generalization of ``sa_alsh.decide_count``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sa_alsh, sah
+from repro.data import synthetic
+from repro.engine import RkMIPSEngine, get_config
+
+_LOGICAL = ("blocks_alive", "users_alive", "n_no_lb", "n_yes_norm", "n_scan")
+
+
+@pytest.fixture(scope="module")
+def built():
+    key = jax.random.PRNGKey(17)
+    ki, kq, kb = jax.random.split(key, 3)
+    items, users = synthetic.recommendation_data(ki, 384, 512, 16)
+    # queries from the item set exercise the tie path (ip == tau lanes)
+    queries = synthetic.queries_from_items(kq, items, 5)
+    idx = sah.build(items, users, kb, k_max=8, n_top=8, tile=64,
+                    leaf_size=8, n_bits=32)
+    return idx, queries
+
+
+def _stack_oracle(idx, queries, k, **kw):
+    per = [sah.rkmips(idx, q, k, **kw) for q in queries]
+    pred = jnp.stack([p for p, _ in per])
+    stats = jax.tree.map(lambda *xs: jnp.stack(xs), *[s for _, s in per])
+    return pred, stats
+
+
+@pytest.mark.parametrize("scan", ["sketch", "exact"])
+@pytest.mark.parametrize("chunk", [1, 7, 64, 10_000])
+def test_batched_bitwise_equals_per_query_oracle(built, scan, chunk):
+    """Flat-queue predictions and the plan-time counters are bitwise the
+    per-query reference driver's, for any chunking of the mixed queue."""
+    idx, queries = built
+    for k, tie_eps in ((1, 0.0), (3, 1e-5), (8, 0.0)):
+        kw = dict(scan=scan, chunk=chunk, tie_eps=tie_eps, n_cand=16)
+        bp, bs = sah.rkmips_batch(idx, queries, k, **kw)
+        pp, ps = _stack_oracle(idx, queries, k, **kw)
+        np.testing.assert_array_equal(np.asarray(bp), np.asarray(pp))
+        for f in _LOGICAL:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(bs, f)), np.asarray(getattr(ps, f)),
+                err_msg=f"{f} k={k}")
+
+
+def test_batched_matches_mapped_driver(built):
+    """The legacy lax.map driver and the flat queue agree bitwise."""
+    idx, queries = built
+    bp, bs = sah.rkmips_batch(idx, queries, 3, n_cand=16)
+    mp, ms = sah.rkmips_batch_mapped(idx, queries, 3, n_cand=16)
+    np.testing.assert_array_equal(np.asarray(bp), np.asarray(mp))
+    for f in _LOGICAL:
+        np.testing.assert_array_equal(np.asarray(getattr(bs, f)),
+                                      np.asarray(getattr(ms, f)), f)
+
+
+def test_nq1_reproduces_full_stats(built):
+    """A batch of one is the per-query driver, ALL counters included:
+    single-query chunking is identical, so even the packing diagnostics
+    (tiles_scanned, chunks) match bitwise."""
+    idx, queries = built
+    bp, bs = sah.rkmips_batch(idx, queries[:1], 3, n_cand=16)
+    pp, ps = sah.rkmips(idx, queries[0], 3, n_cand=16)
+    np.testing.assert_array_equal(np.asarray(bp[0]), np.asarray(pp))
+    for f in bs._fields:
+        assert int(np.asarray(getattr(bs, f))[0]) == int(getattr(ps, f)), f
+
+
+def test_all_pruned_batch_empty_queue(built):
+    """A batch whose every lane is decided at plan time never enters the
+    execute loop: n_scan/tiles/chunks all zero, predictions still equal the
+    oracle. (Huge-norm queries: tau >= ||p_k|| for every user => all-yes.)"""
+    idx, queries = built
+    d = queries.shape[1]
+    q_huge = jnp.zeros((3, d)).at[:, 0].set(1e4)
+    plan = sah.rkmips_plan(idx, q_huge, 3)
+    assert int(plan.n_work) == 0
+    bp, bs = sah.rkmips_batch(idx, q_huge, 3, n_cand=16)
+    pp, _ = _stack_oracle(idx, q_huge, 3, n_cand=16)
+    np.testing.assert_array_equal(np.asarray(bp), np.asarray(pp))
+    assert not np.asarray(bs.n_scan).any()
+    assert not np.asarray(bs.tiles_scanned).any()
+    assert not np.asarray(bs.chunks).any()
+
+
+def test_plan_queue_is_query_major_leaf_ordered(built):
+    """The work queue compaction is stable: undecided lanes first, in
+    query-major order with cone-leaf order preserved within each query."""
+    idx, queries = built
+    plan = sah.rkmips_plan(idx, queries, 3)
+    n_work = int(plan.n_work)
+    assert n_work == int(np.asarray(plan.n_scan).sum()) > 0
+    work = np.asarray(plan.queue[:n_work])
+    assert (np.diff(work) > 0).all()        # strictly increasing flat ids
+    tail = np.asarray(plan.queue[n_work:])
+    # the tail is exactly the decided lanes (queue is a permutation)
+    assert len(np.union1d(work, tail)) == plan.queue.shape[0]
+
+
+def test_full_queue_tail_chunk_is_not_dropped():
+    """Regression: when (nearly) every lane is undecided and the queue
+    length is not a chunk multiple, the final dynamic_slice clamps its
+    start — the active mask must follow the clamp, or the tail lanes are
+    silently never scanned (left at pred0=False). Constructed so ALL lanes
+    are undecided and the exact answer is all-True: P' lives in the
+    negative orthant (lower bounds < 0 < tau), the scanned items have norm
+    0.05 < tau, and ||q|| stays below ||p_k|| so nothing decides early."""
+    key = jax.random.PRNGKey(41)
+    ki, ku, kb = jax.random.split(key, 3)
+    d = 8
+    top = -(jnp.abs(jax.random.normal(ki, (4, d))) + 0.2)
+    top = top / jnp.linalg.norm(top, axis=-1, keepdims=True)       # norm 1
+    rest = jnp.abs(jax.random.normal(jax.random.fold_in(ki, 1), (4, d)))
+    rest = 0.05 * rest / jnp.linalg.norm(rest, axis=-1, keepdims=True)
+    items = jnp.concatenate([top, rest])
+    users = jnp.abs(jax.random.normal(ku, (16, d)))
+    users = users.at[:, 0].add(2.0)                # tau = 0.5*u0 > 0.05
+    q = jnp.zeros((d,)).at[0].set(0.5)
+    idx = sah.build(items, users, kb, k_max=4, n_top=4, tile=4,
+                    leaf_size=8, n_bits=32)
+    uu = users / jnp.linalg.norm(users, axis=-1, keepdims=True)
+    assert float(jnp.min(uu @ q)) > 0.05           # every IP beats the rest
+    plan = sah.rkmips_plan(idx, q[None], 4)
+    assert int(plan.n_work) == idx.n_users         # ALL 16 lanes undecided
+    for chunk in (3, 5, 7):                        # 16 % chunk != 0: clamps
+        bp, _ = sah.rkmips_batch(idx, q[None], 4, scan="exact", chunk=chunk)
+        pp, _ = sah.rkmips(idx, q, 4, scan="exact", chunk=chunk)
+        po = sah.predictions_to_original(idx, bp[0], 16)
+        assert bool(np.asarray(po).all()), f"chunk={chunk}"
+        np.testing.assert_array_equal(np.asarray(bp[0]), np.asarray(pp))
+
+
+def test_decide_count_per_lane_eps(built):
+    """Mixed-eps lanes in one chunk decide exactly as the same lanes would
+    with their own scalar eps — the generalization the mixed-query queue
+    rides on."""
+    idx, _ = built
+    alsh = idx.alsh
+    key = jax.random.PRNGKey(3)
+    C = 16
+    rows = jax.random.randint(key, (C,), 0, idx.n_users)
+    users = jnp.take(idx.users, rows, axis=0)
+    taus = jnp.take(idx.users @ jnp.ones(idx.users.shape[1]) * 0.2, rows)
+    counts = jnp.zeros((C,), jnp.int32)
+    active = jnp.ones((C,), bool)
+    eps_lane = jnp.where(jnp.arange(C) % 2 == 0, 0.0, 0.05)
+    mixed, _ = sa_alsh.decide_count(alsh, users, taus, counts, active, 3,
+                                    n_cand=16, eps=eps_lane)
+    for eps in (0.0, 0.05):
+        sel = np.asarray(eps_lane) == eps
+        ref, _ = sa_alsh.decide_count(alsh, users[sel], taus[sel],
+                                      counts[sel], active[sel], 3,
+                                      n_cand=16, eps=eps)
+        np.testing.assert_array_equal(np.asarray(mixed)[sel],
+                                      np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# Compile-count regressions: batch size is a throughput knob, not a trace
+# knob. The sharded mirror (shard_map body traced once per dispatch) lives
+# in the 8-device subprocess script of tests/test_engine.py.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def engine():
+    key = jax.random.PRNGKey(23)
+    ki, kb = jax.random.split(key)
+    items, users = synthetic.recommendation_data(ki, 256, 512, 16)
+    cfg = get_config("sah").replace(tile=64, n_bits=32, k_max=8, n_top=8)
+    return RkMIPSEngine(cfg).build(items, users, kb), items
+
+
+def test_one_trace_per_batch_shape(engine):
+    eng, items = engine
+    queries = items[:4]
+    eng.query_batch(queries, 3)
+    eng.query_batch(queries, 3)
+    eng.query_batch(items[4:8], 3)            # same shape, new values
+    assert eng.rkmips_compile_count == 1
+    eng.query_batch(items[:7], 3)             # new batch shape
+    assert eng.rkmips_compile_count == 2
+    eng.query(items[0], 3)                    # the (1, d) executable
+    eng.query(items[1], 3)
+    assert eng.rkmips_compile_count == 3
+    eng.query_batch(queries, 4)               # new k
+    assert eng.rkmips_compile_count == 4
+
+
+def test_traces_do_not_scale_with_batch_size(engine, monkeypatch):
+    """The batched body is invoked exactly once per trace, however many
+    queries the batch holds — no Python-level loop over queries anywhere
+    in the dispatch path."""
+    eng, items = engine
+    calls = {"n": 0}
+    orig = sah.rkmips_batch_impl
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+    monkeypatch.setattr(sah, "rkmips_batch_impl", counting)
+    # fresh jit cache: a fresh engine (the dispatch is per-instance)
+    eng2 = RkMIPSEngine(eng.config).build(items, items[:32],
+                                          jax.random.PRNGKey(0))
+    eng2.query_batch(items[:9], 3)
+    assert calls["n"] == 1, calls["n"]
+    eng2.query_batch(items[:9], 3)            # cached: no retrace
+    assert calls["n"] == 1, calls["n"]
+
+
+def test_funnel_aggregates_stats(engine):
+    eng, items = engine
+    res = eng.query_batch(items[:4], 3)
+    f = res.funnel
+    assert f.queries == 4
+    assert f.blocks_total == 4 * eng.index.n_blocks
+    assert f.users_total == 4 * eng.n_users
+    assert f.blocks_alive == int(np.asarray(res.stats.blocks_alive).sum())
+    assert f.scan_lanes == int(np.asarray(res.stats.n_scan).sum())
+    assert 0 < f.blocks_alive <= f.blocks_total
+    assert f.users_alive <= f.users_total
+    line = f.format()
+    assert "queries" in line and "->" in line and str(f.scan_lanes) in line
+    # the single-query path carries a funnel too
+    assert eng.query(items[0], 3).funnel.queries == 1

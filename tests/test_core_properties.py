@@ -144,6 +144,55 @@ def test_lower_bounds_are_lower(n, d, seed):
     assert bool(jnp.all(lb <= true_topk + 1e-4))
 
 
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(st.integers(1, 5), st.integers(1, 4),
+                  st.sampled_from((1, 9, 64, 4096)),
+                  st.sampled_from((4, 8, 16)), st.integers(0, 3),
+                  st.booleans())
+def test_batched_flat_queue_equals_per_query_oracle(nq, k, chunk, leaf_size,
+                                                    seed, all_pruned):
+    """DESIGN.md SS9: the batched plan/execute pipeline is bitwise the
+    per-query reference driver — predictions and plan-time counters — over
+    arbitrary nq / k / chunk / leaf counts, including nq=1 and an
+    all-pruned batch (empty work queue). The hypothesis-free mirror lives
+    in tests/test_batched.py."""
+    from repro.core import sah
+    key = jax.random.PRNGKey(seed + 400)
+    ki, ku, kq, kb = jax.random.split(key, 4)
+    items = jax.random.normal(ki, (72, 8))
+    users = jax.random.normal(ku, (45, 8))
+    if all_pruned:
+        # positive-orthant users: a huge +e0 query gives every user
+        # tau >> ||p_1||, so the plan decides the whole batch "yes" and
+        # the work queue is empty
+        users = jnp.abs(users) + 0.1
+    idx = sah.build(items, users, kb, k_max=4, n_top=4, tile=32,
+                    leaf_size=leaf_size, n_bits=32)
+    if all_pruned:
+        queries = jnp.zeros((nq, 8)).at[:, 0].set(1e4)
+        assert int(sah.rkmips_plan(idx, queries, k).n_work) == 0
+    else:
+        rows = jax.random.randint(kq, (nq,), 0, items.shape[0])
+        queries = items[rows]            # queries from items: tie-heavy
+    bp, bs = sah.rkmips_batch(idx, queries, k, n_cand=16, chunk=chunk)
+    if all_pruned:
+        assert not np.asarray(bs.n_scan).any()
+        assert not np.asarray(bs.chunks).any()
+    for i in range(nq):
+        pp, ps = sah.rkmips(idx, queries[i], k, n_cand=16, chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(bp[i]), np.asarray(pp),
+                                      err_msg=f"query {i}")
+        for f in ("blocks_alive", "users_alive", "n_no_lb", "n_yes_norm",
+                  "n_scan"):
+            assert int(np.asarray(getattr(bs, f))[i]) == \
+                int(getattr(ps, f)), (i, f)
+    if nq == 1:
+        # single-query chunking is identical: packing diagnostics too
+        _, ps = sah.rkmips(idx, queries[0], k, n_cand=16, chunk=chunk)
+        assert int(np.asarray(bs.tiles_scanned)[0]) == int(ps.tiles_scanned)
+        assert int(np.asarray(bs.chunks)[0]) == int(ps.chunks)
+
+
 @hypothesis.given(st.integers(20, 100), st.integers(3, 8),
                   st.integers(1, 5), st.integers(0, 2))
 def test_decision_exact_scan_equals_oracle(n, d, k, seed):

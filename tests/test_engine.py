@@ -269,6 +269,31 @@ for method in ("sah", "simpfer"):
                                   np.asarray(r1.predictions[0]))
     print(method, "rkmips sharded OK")
 
+# The sharded path contains no Python-level loop over queries: one trace of
+# the batched plan/execute body per shard_map dispatch, at any batch size
+# (the jax 0.4.x per-query unroll is retired, DESIGN.md SS9).
+from repro.core import sah as sah_mod
+cfg = get_config("sah").replace(tile=128, n_bits=64)
+e1 = RkMIPSEngine(cfg, policy=policy).build(items, users, kb)
+calls = {"n": 0}
+orig_impl = sah_mod.rkmips_batch_impl
+def counting_impl(*a, **kw):
+    calls["n"] += 1
+    return orig_impl(*a, **kw)
+sah_mod.rkmips_batch_impl = counting_impl
+try:
+    e1.query_batch(queries, 10)
+finally:
+    sah_mod.rkmips_batch_impl = orig_impl
+assert calls["n"] == 1, f"sharded body traced {calls['n']} times for nq=3"
+# engine-level compile accounting under a mesh: one per distinct batch shape
+assert e1.rkmips_compile_count == 1, e1.rkmips_compile_count
+e1.query_batch(queries, 10)
+assert e1.rkmips_compile_count == 1, e1.rkmips_compile_count
+e1.query_batch(queries[:2], 10)
+assert e1.rkmips_compile_count == 2, e1.rkmips_compile_count
+print("sharded single-trace OK")
+
 # kMIPS: with full per-shard re-rank depth both layouts recover the exact
 # top-k, so sharded and unsharded agree on the ids.
 cfg = get_config("sah").replace(tile=128, n_bits=64)
@@ -341,5 +366,6 @@ def test_engine_sharded_equivalence():
                          cwd=os.path.dirname(os.path.dirname(__file__)))
     assert out.returncode == 0, out.stdout + "\n" + out.stderr
     assert "ALL ENGINE SHARDED OK" in out.stdout
+    assert "sharded single-trace OK" in out.stdout
     assert "non-divisible padding OK" in out.stdout
     assert "small-block padding OK" in out.stdout

@@ -218,6 +218,95 @@ def test_serving_state_invariants(corpus, server_cfg):
 
 
 # ---------------------------------------------------------------------------
+# Reverse (RkMIPS) serving: a ticket queue over the batched plan/execute
+# dispatch (DESIGN.md SS9) — batching is a throughput knob, never an
+# accuracy knob, and serving adds no executables of its own.
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def reverse_engine():
+    key = jax.random.PRNGKey(19)
+    ki, ku, kq = jax.random.split(key, 3)
+    items, users = synthetic.recommendation_data(ki, 384, 512, 16)
+    queries = synthetic.queries_from_items(kq, items, 7)
+    cfg = get_config("sah").replace(tile=64, n_bits=32, k_max=8, n_top=8,
+                                    serve_batch_size=4)
+    eng = RkMIPSEngine(cfg).build(items, users, ku)
+    return eng, queries
+
+
+def test_reverse_microbatch_bitwise_equals_oneshot(reverse_engine):
+    """7 tickets through B=4 micro-batches == the matching rows of one
+    7-query query_batch — work-queue lanes are independent and the
+    repeat-padding rows are discarded."""
+    eng, queries = reverse_engine
+    ref = eng.query_batch(queries, 3)
+    srv = eng.reverse_server()
+    tickets = srv.submit(queries)
+    assert tickets == list(range(7)) and srv.pending == 7
+    res = srv.flush(3)
+    assert len(res) == 7 and srv.pending == 0
+    for i, r in enumerate(res):
+        np.testing.assert_array_equal(np.asarray(r.predictions),
+                                      np.asarray(ref.predictions[i]))
+        assert int(r.stats.n_scan) == int(ref.stats.n_scan[i])
+        assert r.k == 3
+    # single-query convenience path agrees too
+    one = srv.rkmips(queries[2], 3)
+    np.testing.assert_array_equal(np.asarray(one.predictions),
+                                  np.asarray(ref.predictions[2]))
+
+
+def test_reverse_server_shares_engine_executables(reverse_engine):
+    """Every reverse flush dispatches at the serve batch size: one compile
+    per distinct (batch size, k), shared with the engine — the server owns
+    no dispatch of its own."""
+    key = jax.random.PRNGKey(29)
+    ki, ku = jax.random.split(key)
+    items, users = synthetic.recommendation_data(ki, 256, 256, 16)
+    cfg = get_config("sah").replace(tile=64, n_bits=32, k_max=8, n_top=8,
+                                    serve_batch_size=4)
+    eng = RkMIPSEngine(cfg).build(items, users, ku)
+    srv = eng.reverse_server()
+    srv.submit(items[:3])                  # partial batch (padded to 4)
+    srv.flush(3)
+    assert srv.compile_count == 1
+    srv.submit(items[:7])                  # full + partial batch
+    srv.flush(3)
+    srv.submit(items[0])
+    srv.flush(3)
+    assert srv.compile_count == 1          # every dispatch is (4, d)
+    assert srv.batch_size == 4
+    # a one-shot engine batch of the same size reuses the same executable
+    eng.query_batch(items[:4], 3)
+    assert eng.rkmips_compile_count == 1
+
+
+def test_reverse_flush_failures_keep_tickets(reverse_engine):
+    eng, queries = reverse_engine
+    srv = eng.reverse_server()
+    assert srv.flush(3) == []
+    srv.submit(queries[:2])
+    with pytest.raises(ValueError, match=r"outside \[1, k_max=8\]"):
+        srv.flush(9)                       # k > k_max: nothing consumed
+    assert srv.pending == 2
+    assert len(srv.flush(3)) == 2 and srv.pending == 0
+    with pytest.raises(ValueError, match=r"rkmips serves one query"):
+        srv.rkmips(queries[:2], 3)
+    assert srv.pending == 0
+
+
+def test_reverse_server_requires_user_side_build():
+    key = jax.random.PRNGKey(31)
+    items = jax.random.normal(key, (64, 8))
+    eng = RkMIPSEngine(get_config("sah").replace(tile=32, n_bits=32)
+                       ).build(items, None, key)
+    with pytest.raises(RuntimeError, match=r"not built for RkMIPS"):
+        eng.reverse_server()
+
+
+# ---------------------------------------------------------------------------
 # Padding equivalence, hypothesis-free mirrors (fixed non-divisible sizes).
 # The drawn-size versions live in tests/test_core_properties.py.
 # ---------------------------------------------------------------------------
