@@ -1,0 +1,87 @@
+"""Index-artifact lifecycle costs (DESIGN.md SS10).
+
+What the streaming-delta design trades: between compactions, every reverse
+query pays an extra exact scan of the fixed-capacity delta buffer (one
+(m_pad, cap) product folded into the plan) — so the interesting numbers are
+query latency with a part-full buffer vs after ``compact()``, the compact
+(full rebuild) cost itself, and the save/load round-trip the artifact adds
+over keeping the index trapped in one process. ``traces`` rows pin the
+one-extra-compile-ever story per cell.
+
+    PYTHONPATH=src python -m benchmarks.run --scale smoke --only artifact
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import jax
+
+from benchmarks import common
+
+
+def _timed_query(eng, queries, k):
+    eng.query_batch(queries, k)                          # warm (compile)
+    return eng.query_batch(queries, k).seconds / queries.shape[0]
+
+
+def run(n=2048, m=4096, d=64, nq=8, k=10, cap=256):
+    from repro.engine import IndexArtifact, RkMIPSEngine, get_config
+
+    wl = common.make_workload("nmf", n, m, d, nq, (k,))
+    cfg = get_config("sah").replace(k_max=50, delta_capacity=cap)
+    rows = []
+
+    t0 = time.perf_counter()
+    art = IndexArtifact.build(wl.items, wl.users, jax.random.PRNGKey(1),
+                              config=cfg)
+    jax.block_until_ready(art.index.users)
+    t_build = time.perf_counter() - t0
+    rows.append(common.fmt_row("artifact/build", t_build * 1e6,
+                               f"n={n};m={m};cap={cap}"))
+
+    eng = RkMIPSEngine.from_artifact(art)
+    dt_base = _timed_query(eng, wl.queries, k)
+    rows.append(common.fmt_row(
+        f"artifact/query/base/k={k}", dt_base * 1e6,
+        f"traces={eng.rkmips_compile_count};fill=0/{cap}"))
+
+    # half-full delta buffer: staged rows drawn like the corpus, plus a
+    # sprinkle of deletions so both adjustment paths are on the clock
+    kd = jax.random.PRNGKey(7)
+    staged = jax.random.permutation(kd, wl.items)[: cap // 2] * 1.01
+    a = art.insert_items(staged).delete_items(list(range(0, n, n // 16)))
+    eng.attach(a)
+    dt_delta = _timed_query(eng, wl.queries, k)
+    rows.append(common.fmt_row(
+        f"artifact/query/delta/k={k}", dt_delta * 1e6,
+        f"traces={eng.rkmips_compile_count};fill={cap // 2}/{cap};"
+        f"overhead_vs_base={dt_delta / dt_base:.2f}"))
+
+    t0 = time.perf_counter()
+    ac = a.compact()
+    jax.block_until_ready(ac.index.users)
+    t_compact = time.perf_counter() - t0
+    rows.append(common.fmt_row("artifact/compact", t_compact * 1e6,
+                               f"n_eff={ac.n_base}"))
+    eng.attach(ac)
+    dt_comp = _timed_query(eng, wl.queries, k)
+    rows.append(common.fmt_row(
+        f"artifact/query/compacted/k={k}", dt_comp * 1e6,
+        f"traces={eng.rkmips_compile_count};"
+        f"speedup_vs_delta={dt_delta / dt_comp:.2f}"))
+
+    # persistence round-trip (host-gathered npz + manifest, SS6)
+    with tempfile.TemporaryDirectory() as tmp:
+        t0 = time.perf_counter()
+        ac.save(tmp)
+        t_save = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        IndexArtifact.load(tmp)
+        t_load = time.perf_counter() - t0
+    rows.append(common.fmt_row("artifact/save", t_save * 1e6,
+                               f"n={ac.n_base};m={m}"))
+    rows.append(common.fmt_row("artifact/load", t_load * 1e6,
+                               "fingerprint-verified"))
+    return rows

@@ -26,14 +26,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", choices=("smoke", "bench"), default="bench")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: rkmips,kmips,kernels,"
-                         "roofline")
+                    help="comma-separated subset: rkmips,artifact,kmips,"
+                         "params,kernels,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + run metadata as JSON")
     args = ap.parse_args()
 
-    from benchmarks import (bench_kernels, bench_kmips, bench_params,
-                            bench_rkmips, bench_roofline)
+    from benchmarks import (bench_artifact, bench_kernels, bench_kmips,
+                            bench_params, bench_rkmips, bench_roofline)
 
     small = args.scale == "smoke"
     suites = {
@@ -41,6 +41,9 @@ def main() -> None:
             n=2048 if small else 8192, m=4096 if small else 16384,
             nq=8 if small else 16,
             ks=(1, 10, 50) if small else (1, 5, 10, 20, 30, 40, 50)),
+        "artifact": lambda: bench_artifact.run(
+            n=2048 if small else 8192, m=4096 if small else 16384,
+            nq=8 if small else 16, cap=128 if small else 256),
         "kmips": lambda: bench_kmips.run(
             n=4096 if small else 16384, m=4096 if small else 16384,
             nq=8 if small else 32,

@@ -34,10 +34,12 @@ del _dist_compat
 # `import repro` must stay backend-free (SS1).
 __all__ = [
     "EngineConfig",
+    "IndexArtifact",
     "PAPER_BASELINES",
     "RkMIPSEngine",
     "display_name",
     "get_config",
+    "load_artifact",
     "method_names",
     "register",
 ]

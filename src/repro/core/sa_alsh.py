@@ -276,6 +276,23 @@ decide_count = functools.partial(
     jax.jit, static_argnames=("k", "n_cand", "scan"))(decide_count_impl)
 
 
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_topk(vals: jnp.ndarray, ids: jnp.ndarray,
+               extra_vals: jnp.ndarray, extra_ids: jnp.ndarray, k: int):
+    """Row-wise merge of two candidate sets into one descending top-k.
+
+    vals/ids (Q, a) and extra_vals/extra_ids (Q, b) -> (Q, k) each. Dead
+    candidates must carry ``-inf`` values (and whatever sentinel id). Used
+    by the engine to fold the exactly-scanned staged-insert delta buffer
+    into a main-index kMIPS answer (engine/artifact.py), and generic
+    enough for any local-top-k combination.
+    """
+    merged_v = jnp.concatenate([vals, extra_vals], axis=-1)
+    merged_i = jnp.concatenate([ids, extra_ids], axis=-1)
+    best, pos = jax.lax.top_k(merged_v, k)
+    return best, jnp.take_along_axis(merged_i, pos, axis=-1)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "n_cand", "scan"))
 def kmips_topk(index: SAALSHIndex, queries: jnp.ndarray, k: int,
                *, n_cand: int = 64, scan: str = "sketch"):

@@ -173,13 +173,24 @@ class QueryStats(NamedTuple):
     chunks: jnp.ndarray
 
 
-def _plan_one(index: SAHIndex, q: jnp.ndarray, k: int, tie_eps: float):
+def _plan_one(index: SAHIndex, q: jnp.ndarray, k: int, tie_eps: float,
+              delta_ip: jnp.ndarray | None = None,
+              delta_mask: jnp.ndarray | None = None):
     """Lemmas 2-3 + dense tau + the O(1) decisions for ONE query.
 
     Shared verbatim by the per-query reference driver (``rkmips_impl``) and
     the batched planner (``rkmips_plan_impl`` lax.maps it), which is what
     makes the two paths bitwise equal: every dense product is the same
     matvec, every bound the same elementwise expression.
+
+    delta_ip (m_pad, cap) / delta_mask (cap,) carry a staged-insert delta
+    buffer (engine/artifact.py): live staged rows are exactly counted into
+    every lane's initial count with the same strict ``> tau + eps`` rule as
+    the main scan. ``delta_ip`` is query-independent (<u, p> only), so the
+    callers compute it once per dispatch, outside any per-query map. The
+    caller must hand an index view whose ``top_norms`` covers the staged
+    rows (the "yes by norm" shortcut would otherwise fire against a stale,
+    too-small k-th norm).
 
     Returns (tau, count0, pred0, undecided, eps, block_alive, user_alive,
     no_lb, yes_norm), all in cone-leaf order.
@@ -210,6 +221,10 @@ def _plan_one(index: SAHIndex, q: jnp.ndarray, k: int, tie_eps: float):
     yes_norm = tau >= index.top_norms[k - 1]
     undecided = user_alive & ~no_lb & ~yes_norm
     count0 = _simpfer.init_count(index.user_lb, tau + eps)
+    if delta_ip is not None:
+        count0 = count0 + jnp.sum(
+            delta_mask[None, :] & (delta_ip > (tau + eps)[:, None]),
+            axis=-1).astype(jnp.int32)
     pred0 = yes_norm & index.user_mask
     return (tau, count0, pred0, undecided, eps, block_alive, user_alive,
             no_lb, yes_norm)
@@ -217,21 +232,28 @@ def _plan_one(index: SAHIndex, q: jnp.ndarray, k: int, tie_eps: float):
 
 def rkmips_impl(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
                 scan: str = "sketch", chunk: int = 256,
-                tie_eps: float = 0.0):
+                tie_eps: float = 0.0,
+                delta_items: jnp.ndarray | None = None,
+                delta_mask: jnp.ndarray | None = None):
     """Algorithm 5 for one query, undecorated: the per-query REFERENCE
     driver. Returns (pred (m_pad,), QueryStats).
 
     pred is in cone-leaf order; use predictions_to_original() to map back.
     tie_eps: relative tie tolerance, must match the oracle (core/exact.py).
-    Call ``rkmips`` (the jitted alias) directly. Production batches go
-    through the plan/execute pipeline (``rkmips_batch``), which is bitwise
-    equal to this driver query for query; this one survives as the oracle
-    the batched path's equivalence tests compare against.
+    delta_items (cap, d) / delta_mask (cap,): optional staged-insert buffer
+    counted exactly into every lane (see ``_plan_one``; the engine's
+    artifact lifecycle is the caller). Call ``rkmips`` (the jitted alias)
+    directly. Production batches go through the plan/execute pipeline
+    (``rkmips_batch``), which is bitwise equal to this driver query for
+    query; this one survives as the oracle the batched path's equivalence
+    tests compare against.
     """
     m_pad = index.n_users
     chunk = min(chunk, m_pad)
+    delta_ip = None if delta_items is None else index.users @ delta_items.T
     (tau, count0, pred0, undecided, eps, block_alive, user_alive,
-     no_lb, yes_norm) = _plan_one(index, q, k, tie_eps)
+     no_lb, yes_norm) = _plan_one(index, q, k, tie_eps, delta_ip,
+                                  delta_mask)
 
     # --- compact survivors (cone order preserved) and scan in chunks ------
     und_ids = jnp.argsort(~undecided)                     # undecided first
@@ -316,7 +338,9 @@ class RkMIPSPlan(NamedTuple):
 
 
 def rkmips_plan_impl(index: SAHIndex, queries: jnp.ndarray, k: int, *,
-                     tie_eps: float = 0.0) -> RkMIPSPlan:
+                     tie_eps: float = 0.0,
+                     delta_items: jnp.ndarray | None = None,
+                     delta_mask: jnp.ndarray | None = None) -> RkMIPSPlan:
     """Phase 1 (plan): Lemmas 2-3, dense tau, O(1) decisions for the whole
     (nq, m_pad) grid, then compaction into one flat cross-query work queue.
 
@@ -327,16 +351,23 @@ def rkmips_plan_impl(index: SAHIndex, queries: jnp.ndarray, k: int, *,
     oracle (a (nq, m) GEMM would round differently than nq matvecs).
     The queue stores flat int32 ids, so a batch is limited to
     nq * m_pad < 2**31 lanes (checked: both are static shapes).
+
+    delta_items/delta_mask: optional staged-insert buffer; its (m_pad, cap)
+    inner products are query-independent, so they are computed ONCE here —
+    outside the per-query lax.map — and every query's plan reads the same
+    values the per-query reference driver computes (bitwise).
     """
     if queries.shape[0] * index.n_users >= 2 ** 31:
         raise ValueError(
             f"batch too large for the int32 flat work queue: nq * m_pad = "
             f"{queries.shape[0]} * {index.n_users} >= 2**31; split the "
             f"query batch")
+    delta_ip = None if delta_items is None else index.users @ delta_items.T
 
     def one(q):
         (tau, count0, pred0, undecided, eps, block_alive, user_alive,
-         no_lb, yes_norm) = _plan_one(index, q, k, tie_eps)
+         no_lb, yes_norm) = _plan_one(index, q, k, tie_eps, delta_ip,
+                                      delta_mask)
         return (tau, count0, pred0, undecided, eps,
                 jnp.sum(block_alive), jnp.sum(user_alive),
                 jnp.sum(no_lb & index.user_mask),
@@ -435,19 +466,25 @@ rkmips_execute = functools.partial(
 
 def rkmips_batch_impl(index: SAHIndex, queries: jnp.ndarray, k: int, *,
                       n_cand: int = 64, scan: str = "sketch",
-                      chunk: int = 256, tie_eps: float = 0.0):
+                      chunk: int = 256, tie_eps: float = 0.0,
+                      delta_items: jnp.ndarray | None = None,
+                      delta_mask: jnp.ndarray | None = None):
     """Batched Algorithm 5, undecorated: plan + execute (DESIGN.md SS9).
 
     (nq, d) queries -> (pred (nq, m_pad), QueryStats with (nq,) counters).
     Bitwise equal to stacking per-query ``rkmips`` calls (predictions and
-    the plan-time counters; tiles/chunks are packing diagnostics). Call
-    ``rkmips_batch`` (the jitted alias) directly; the impl exists so
+    the plan-time counters; tiles/chunks are packing diagnostics). An
+    optional staged-insert delta buffer (delta_items/delta_mask, see
+    ``_plan_one``) threads through the plan; its static capacity keeps the
+    trace count flat however often the corpus churns. Call ``rkmips_batch``
+    (the jitted alias) directly; the impl exists so
     ``repro.engine.sharding`` can trace the raw body under ``shard_map`` --
     one flat while_loop, no nested jit and no scan-of-while, which is what
     retires the jax 0.4.x per-query unroll workaround (the plan's lax.map
     contains only dense per-query math and is shard_map-safe).
     """
-    plan = rkmips_plan_impl(index, queries, k, tie_eps=tie_eps)
+    plan = rkmips_plan_impl(index, queries, k, tie_eps=tie_eps,
+                            delta_items=delta_items, delta_mask=delta_mask)
     return rkmips_execute_impl(index, plan, k, n_cand=n_cand, scan=scan,
                                chunk=chunk)
 
@@ -456,17 +493,22 @@ def rkmips_batch_impl(index: SAHIndex, queries: jnp.ndarray, k: int, *,
     jax.jit, static_argnames=("k", "n_cand", "scan", "chunk", "tie_eps"))
 def rkmips_batch(index: SAHIndex, queries: jnp.ndarray, k: int, *,
                  n_cand: int = 64, scan: str = "sketch", chunk: int = 256,
-                 tie_eps: float = 0.0):
+                 tie_eps: float = 0.0,
+                 delta_items: jnp.ndarray | None = None,
+                 delta_mask: jnp.ndarray | None = None):
     """Jitted batched Algorithm 5 — see ``rkmips_batch_impl``. (A wrapper
     rather than a jit alias so the impl binds late: the compile-count tests
     wrap it to prove one body invocation per trace.)"""
     return rkmips_batch_impl(index, queries, k, n_cand=n_cand, scan=scan,
-                             chunk=chunk, tie_eps=tie_eps)
+                             chunk=chunk, tie_eps=tie_eps,
+                             delta_items=delta_items, delta_mask=delta_mask)
 
 
 def rkmips_batch_mapped(index: SAHIndex, queries: jnp.ndarray, k: int, *,
                         n_cand: int = 64, scan: str = "sketch",
-                        chunk: int = 256, tie_eps: float = 0.0):
+                        chunk: int = 256, tie_eps: float = 0.0,
+                        delta_items: jnp.ndarray | None = None,
+                        delta_mask: jnp.ndarray | None = None):
     """The legacy batch driver: ``lax.map`` of independent per-query
     ``rkmips`` while-loops. Superseded by the flat-queue ``rkmips_batch``
     (a fast query's lanes no longer pad out their own chunk grid while a
@@ -474,7 +516,8 @@ def rkmips_batch_mapped(index: SAHIndex, queries: jnp.ndarray, k: int, *,
     tests and as the baseline ``benchmarks/bench_rkmips.py`` reports
     batched-vs-mapped wall time against."""
     fn = functools.partial(rkmips, index, k=k, n_cand=n_cand, scan=scan,
-                           chunk=chunk, tie_eps=tie_eps)
+                           chunk=chunk, tie_eps=tie_eps,
+                           delta_items=delta_items, delta_mask=delta_mask)
     return jax.lax.map(lambda q: fn(q), queries)
 
 

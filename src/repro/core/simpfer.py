@@ -28,9 +28,20 @@ import jax.numpy as jnp
 
 @functools.partial(jax.jit, static_argnames=("kmax",))
 def user_lower_bounds(users_unit: jnp.ndarray, top_items: jnp.ndarray,
-                      kmax: int) -> jnp.ndarray:
-    """L (m, kmax) descending: top-kmax IPs of each user over P'."""
+                      kmax: int, *, mask: jnp.ndarray | None = None
+                      ) -> jnp.ndarray:
+    """L (m, kmax) descending: top-kmax IPs of each user over P'.
+
+    mask (n_top,) excludes retired P' members (their IPs become -inf, so
+    they can neither fire the "no" rule nor inflate init_count) — the
+    deletion-adjusted rebuild the artifact delta view uses
+    (engine/artifact.py). When fewer than kmax members survive, the -inf
+    tail keeps every bound vacuous and init_count exact over the
+    survivors.
+    """
     ips = users_unit @ top_items.T                       # (m, n_top)
+    if mask is not None:
+        ips = jnp.where(mask[None, :], ips, -jnp.inf)
     vals, _ = jax.lax.top_k(ips, kmax)
     return vals
 

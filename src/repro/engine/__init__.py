@@ -7,22 +7,31 @@ This package is the only public way to run (R)kMIPS (DESIGN.md SS7):
   * the method **registry** — the paper's baseline matrix (DESIGN.md SS3) as
     named presets: ``get_config("sah" | "sa-simpfer" | "h2-cone" |
     "h2-simpfer" | "simpfer" | "exact")``;
-  * ``RkMIPSEngine`` — build / query / query_batch / kmips / oracle, with
-    predictions always in original user-id space and an optional
-    ``ShardingPolicy`` that shards the heavy scans over a mesh;
+  * ``IndexArtifact`` — the first-class index artifact (engine/artifact.py,
+    DESIGN.md SS10): build once, ``save``/``load`` through the SS6 elastic
+    checkpoints, attach to engines on any mesh, stage streaming corpus
+    deltas (``insert_items`` / ``delete_items`` / ``compact``), hot-swap
+    into live servers;
+  * ``RkMIPSEngine`` — build / attach / query / query_batch / kmips /
+    oracle, with predictions always in original user-id space and an
+    optional ``ShardingPolicy`` that shards the heavy scans over a mesh;
   * the **online serving subsystem** (engine/serving.py, DESIGN.md SS8) —
     ``RetrievalServer`` micro-batches single queries into fixed-size,
     statically-shaped dispatches through the sharded flat scan, with built
-    state LRU-cached by config (``ServingCache`` / ``build_serving_state``);
-    ``ReverseServer`` does the same for RkMIPS over the batched
-    plan/execute pipeline (DESIGN.md SS9);
-  * ``serving_codes`` — the offline sketch build behind
-    ``launch/serve.py::build_candidate_index``.
+    state LRU-cached by (artifact fingerprint, index recipe)
+    (``ServingCache`` / ``build_serving_state``); ``ReverseServer`` does
+    the same for RkMIPS over the batched plan/execute pipeline (DESIGN.md
+    SS9); both hot-swap artifact versions between flushes;
+  * ``serving_codes`` — deprecated shim over
+    ``IndexArtifact.serving_codes`` (the offline sketch build behind
+    ``launch/serve.py::build_candidate_index``).
 
 ``core/`` stays purely functional underneath; everything stateful (built
 arrays, timings, lazy kMIPS index, pending serving tickets) lives here.
 """
 
+from repro.engine.artifact import (IndexArtifact, corpus_fingerprint,
+                                   load_artifact)
 from repro.engine.config import (EngineConfig, PAPER_BASELINES, TIE_EPS_DEFAULT,
                                  display_name, get_config, method_names,
                                  register)
@@ -35,6 +44,7 @@ from repro.engine.serving import (RetrievalServer, ReverseResult,
 
 __all__ = [
     "EngineConfig",
+    "IndexArtifact",
     "KMIPSResult",
     "PAPER_BASELINES",
     "PruningFunnel",
@@ -48,8 +58,10 @@ __all__ = [
     "ServingState",
     "TIE_EPS_DEFAULT",
     "build_serving_state",
+    "corpus_fingerprint",
     "display_name",
     "get_config",
+    "load_artifact",
     "method_names",
     "register",
     "serving_codes",

@@ -1,0 +1,594 @@
+"""IndexArtifact: the build/attach lifecycle of SAH indexes (DESIGN.md SS10).
+
+The paper's index is an offline artifact; before this module it only existed
+as private state inside a live ``RkMIPSEngine`` — impossible to save, ship
+to a different mesh, share between engines and servers, or update when the
+item corpus changes. ``IndexArtifact`` is that artifact made first-class:
+
+  * a **value type** bundling the SAH user index, the (lazily built) kMIPS
+    index, the build key, the source arrays, and a content fingerprint —
+    mutating operations (``insert_items`` / ``delete_items`` / ``compact``)
+    return a *new* artifact version and never touch the one an engine or
+    server is currently attached to;
+  * **persistence**: ``save(dir)`` / ``load(dir)`` ride the SS6 elastic
+    checkpoint machinery (``train/checkpoint.py``: host-gathered npz plus a
+    fsynced, fingerprint-bearing manifest). Artifacts are stored in host
+    layout, mesh-agnostic; ``RkMIPSEngine.attach`` lays the arrays out for
+    whatever ``ShardingPolicy`` the attaching engine carries, so an index
+    built on one mesh restores onto any other (or onto one device);
+  * **streaming corpus deltas**: ``insert_items`` stages new rows in a
+    fixed-capacity, exactly-scanned delta buffer (masked, static shapes —
+    the engine pays one extra compile ever, not one per mutation);
+    ``delete_items`` retires base-corpus or staged rows. ``compact()``
+    merges everything into fresh norm-ordered partitions by an explicit
+    from-scratch rebuild on the *effective corpus* (surviving base rows in
+    original order, then surviving staged rows in insertion order).
+
+Delta-view invariants (what keeps pre-compact answers honest):
+
+  the attached engine queries a *view* of the base index whose shapes are
+  unchanged — deleted rest-items are masked out of the SA-ALSH scan,
+  ``user_lb``/``block_lb`` are recomputed over P' minus its deleted members
+  (still valid lower bounds: deletions shrink them, insertions only help),
+  and ``top_norms`` is the exact top-norm vector of the *mutated* corpus
+  (so the "yes by norm" shortcut can never fire against a stale, too-small
+  k-th norm after inserts). Staged rows are scanned exactly and added to
+  each lane's count. Every shortcut stays conservative and the counting
+  fallback is exact, so for **exact-scan configs** pre-compact predictions
+  are bitwise equal to a from-scratch build on the mutated corpus; sketch
+  configs regain their (layout-sensitive) approximation pattern at
+  ``compact()``, which is bitwise a from-scratch build by construction.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sa_alsh as _alsh
+from repro.core import sah as _sah
+from repro.core import simpfer as _simpfer
+from repro.engine.config import EngineConfig, get_config
+from repro.train import checkpoint as _ckpt
+
+# fold_in tag deriving the kMIPS index key from the build key; shared by
+# every kMIPS surface (engine, servers, serving_codes) so they all rank
+# with one set of SRP codes.
+KMIPS_KEY_TAG = 0x5A11
+
+_FORMAT = 1
+_KIND = "sah-index-artifact"
+
+
+def _array_bytes(x) -> bytes:
+    a = np.asarray(jax.device_get(x))
+    return (str(a.dtype).encode() + str(a.shape).encode()
+            + np.ascontiguousarray(a).tobytes())
+
+
+def corpus_fingerprint(items: jnp.ndarray, key: jax.Array) -> str:
+    """Content hash of a raw serving corpus + its index key.
+
+    The ``ServingCache`` key prefix for servers built outside the artifact
+    lifecycle; artifact-attached surfaces use ``IndexArtifact.fingerprint``
+    (which additionally covers users, config, and pending deltas)."""
+    h = hashlib.sha256(b"repro-corpus-v1")
+    h.update(_array_bytes(items))
+    h.update(_array_bytes(key))
+    return h.hexdigest()
+
+
+def _validate_corpus(items, users) -> None:
+    """Satellite: fail build-time input mistakes up front with a clear
+    ValueError instead of a shape error deep inside ``sah.build``."""
+    if getattr(items, "ndim", None) != 2:
+        raise ValueError(f"items must be a 2-D (n, d) array, got shape "
+                         f"{getattr(items, 'shape', None)}")
+    if items.shape[0] < 1 or items.shape[1] < 1:
+        raise ValueError(f"items must be non-empty in both axes, got shape "
+                         f"{items.shape}")
+    if not jnp.issubdtype(items.dtype, jnp.floating):
+        raise ValueError(f"items must have a floating dtype, got "
+                         f"{items.dtype}")
+    if users is None:
+        return
+    if getattr(users, "ndim", None) != 2:
+        raise ValueError(f"users must be a 2-D (m, d) array or None, got "
+                         f"shape {getattr(users, 'shape', None)}")
+    if users.shape[0] < 1:
+        raise ValueError("users must be non-empty (or None for a "
+                         "kMIPS-only build)")
+    if not jnp.issubdtype(users.dtype, jnp.floating):
+        raise ValueError(f"users must have a floating dtype, got "
+                         f"{users.dtype}")
+    if users.shape[1] != items.shape[1]:
+        raise ValueError(f"users dimensionality ({users.shape[1]}) != items "
+                         f"dimensionality ({items.shape[1]})")
+
+
+def _flatten_named(prefix: str, nt, out: dict) -> None:
+    for name, v in zip(type(nt)._fields, nt):
+        if hasattr(v, "_fields"):
+            _flatten_named(f"{prefix}{name}/", v, out)
+        else:
+            out[f"{prefix}{name}"] = v
+
+
+def _unflatten_sah(tree: dict) -> _sah.SAHIndex:
+    alsh = _alsh.SAALSHIndex(**{f: tree[f"index/alsh/{f}"]
+                                for f in _alsh.SAALSHIndex._fields})
+    rest = {f: tree[f"index/{f}"] for f in _sah.SAHIndex._fields
+            if f != "alsh"}
+    return _sah.SAHIndex(alsh=alsh, **rest)
+
+
+def _unflatten_kmips(tree: dict) -> _alsh.SAALSHIndex:
+    return _alsh.SAALSHIndex(**{f: tree[f"kmips/{f}"]
+                                for f in _alsh.SAALSHIndex._fields})
+
+
+class IndexArtifact:
+    """One immutable version of a built SAH index + its corpus deltas.
+
+    Construct with ``IndexArtifact.build`` (or ``load``); the raw
+    constructor wires already-built pieces together. Treat instances as
+    values: every mutating operation returns a new artifact, and
+    ``fingerprint`` identifies a version's full content (corpus, users,
+    key, config, staged deltas) — it is what ``ServingCache`` keys on.
+    """
+
+    def __init__(self, *, config: EngineConfig, key: jax.Array,
+                 items: jnp.ndarray, users: jnp.ndarray | None,
+                 index: _sah.SAHIndex | None,
+                 kmips_index: _alsh.SAALSHIndex | None,
+                 deleted: jnp.ndarray, delta_items: jnp.ndarray,
+                 delta_mask: jnp.ndarray, delta_used: int):
+        self.config = config
+        self.key = key
+        self.items = items                  # (n_base, d) corpus at build
+        self.users = users                  # (m, d) or None (kMIPS-only)
+        self.index = index                  # SAHIndex or None
+        self.deleted = deleted              # (n_base,) bool
+        self.delta_items = delta_items      # (capacity, d) staged rows
+        self.delta_mask = delta_mask        # (capacity,) bool live rows
+        self.delta_used = int(delta_used)   # slots consumed (append-only)
+        self._kmips = kmips_index           # lazy memo (derived content)
+        self._kmips_view = None
+        self._base_fp: str | None = None    # hash of the built base content
+        self._fingerprint: str | None = None
+        self._users_unit = None
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def build(cls, items: jnp.ndarray, users: jnp.ndarray | None,
+              key: jax.Array, *, config: EngineConfig | str = "sah",
+              delta_capacity: int | None = None) -> "IndexArtifact":
+        """Build a fresh artifact: ``sah.build`` exactly as the raw core
+        path would consume (items, users, key, config) — an engine built
+        ``from_artifact`` is bit-for-bit the legacy ``build()`` engine.
+
+        ``users=None`` builds a kMIPS-only artifact (the SA-ALSH index over
+        the full corpus is built eagerly; with users it stays lazy).
+        ``delta_capacity`` (default ``config.delta_capacity``) fixes the
+        staged-insert buffer size — static shapes, so attached engines
+        compile the delta pipeline at most once regardless of churn.
+        """
+        if isinstance(config, str):
+            config = get_config(config)
+        _validate_corpus(items, users)
+        cap = config.delta_capacity if delta_capacity is None \
+            else int(delta_capacity)
+        if cap < 1:
+            raise ValueError(f"delta_capacity must be >= 1, got {cap}")
+        index = kmips = None
+        if users is None:
+            kmips = _alsh.build_index(
+                items, jax.random.fold_in(key, KMIPS_KEY_TAG),
+                **config.kmips_build_kwargs(items.shape[0]))
+        else:
+            index = _sah.build(items, users, key, **config.build_kwargs())
+        n, d = items.shape
+        return cls(config=config, key=key, items=items, users=users,
+                   index=index, kmips_index=kmips,
+                   deleted=jnp.zeros((n,), bool),
+                   delta_items=jnp.zeros((cap, d), items.dtype),
+                   delta_mask=jnp.zeros((cap,), bool), delta_used=0)
+
+    def _evolve(self, **overrides) -> "IndexArtifact":
+        kw = dict(config=self.config, key=self.key, items=self.items,
+                  users=self.users, index=self.index,
+                  kmips_index=self._kmips, deleted=self.deleted,
+                  delta_items=self.delta_items, delta_mask=self.delta_mask,
+                  delta_used=self.delta_used)
+        kw.update(overrides)
+        child = IndexArtifact(**kw)
+        # delta mutations never touch the built base content: the child
+        # inherits the (expensive, O(n*d)) base hash and the normalized
+        # users, and only re-hashes its own delta state — streaming
+        # hot-swaps stay O(cap*d)
+        child._base_fp = self._base_fp
+        child._users_unit = self._users_unit
+        return child
+
+    # -- identity ----------------------------------------------------------
+
+    @property
+    def delta_capacity(self) -> int:
+        return self.delta_items.shape[0]
+
+    @property
+    def n_base(self) -> int:
+        """Rows of the base (last-compacted) corpus."""
+        return self.items.shape[0]
+
+    @property
+    def n_users(self) -> int | None:
+        return None if self.users is None else self.users.shape[0]
+
+    @property
+    def n_items(self) -> int:
+        """Rows of the *effective* (mutated) corpus."""
+        return (self.n_base - int(np.asarray(self.deleted).sum())
+                + int(np.asarray(self.delta_mask).sum()))
+
+    @property
+    def has_pending(self) -> bool:
+        """Any staged change (delete or live insert) not yet compacted."""
+        return bool(np.asarray(self.deleted).any()) or \
+            bool(np.asarray(self.delta_mask).any())
+
+    @property
+    def kmips_index(self) -> _alsh.SAALSHIndex | None:
+        """The base-corpus SA-ALSH index if already built (no side effect)."""
+        return self._kmips
+
+    @property
+    def fingerprint(self) -> str:
+        """Content hash of this artifact version (lazily computed).
+
+        Covers the base corpus, users, build key, full config, and every
+        staged delta — two artifacts with equal fingerprints serve
+        identical answers, and `ServingCache` keys built serving state on
+        it so every engine/server surface sharing a recipe shares one set
+        of SRP codes (and distinct corpus *versions* can never collide).
+
+        The hash is state-based, not path-based (the same base content +
+        the same staged state always hashes the same), and two-level: the
+        O(n*d) base hash is computed once per built corpus and inherited
+        across delta mutations, so per-version fingerprints cost only the
+        delta state.
+        """
+        if self._fingerprint is None:
+            if self._base_fp is None:
+                b = hashlib.sha256(f"{_KIND}-v{_FORMAT}".encode())
+                b.update(repr(dataclasses.astuple(self.config)).encode())
+                b.update(_array_bytes(self.key))
+                b.update(_array_bytes(self.items))
+                b.update(b"users" if self.users is None
+                         else _array_bytes(self.users))
+                self._base_fp = b.hexdigest()
+            h = hashlib.sha256(self._base_fp.encode())
+            h.update(_array_bytes(self.deleted))
+            h.update(_array_bytes(self.delta_items))
+            h.update(_array_bytes(self.delta_mask))
+            h.update(str(self.delta_used).encode())
+            self._fingerprint = h.hexdigest()
+        return self._fingerprint
+
+    @property
+    def manifest(self) -> dict:
+        """The JSON-serializable description ``save`` persists (and
+        ``load`` verifies the restored content against)."""
+        return {
+            "kind": _KIND,
+            "format": _FORMAT,
+            "fingerprint": self.fingerprint,
+            "config": dataclasses.asdict(self.config),
+            "n_base": self.n_base,
+            "n_users": self.n_users,
+            "n_items": self.n_items,
+            "delta_capacity": self.delta_capacity,
+            "delta_used": self.delta_used,
+            "has_index": self.index is not None,
+            "has_kmips": self._kmips is not None,
+        }
+
+    # -- derived views -----------------------------------------------------
+
+    def users_unit(self) -> jnp.ndarray | None:
+        if self.users is None:
+            return None
+        if self._users_unit is None:
+            un = jnp.linalg.norm(self.users, axis=-1, keepdims=True)
+            self._users_unit = self.users / jnp.maximum(un, 1e-12)
+        return self._users_unit
+
+    def effective_items(self) -> jnp.ndarray:
+        """The mutated corpus in compaction order: surviving base rows in
+        original order, then surviving staged rows in insertion order."""
+        if not self.has_pending:
+            return self.items
+        keep = np.asarray(~self.deleted)
+        live = np.asarray(self.delta_mask)
+        return jnp.concatenate([self.items[keep], self.delta_items[live]])
+
+    def effective_ids(self) -> np.ndarray:
+        """Artifact-space item id of each ``effective_items()`` row (int32,
+        length ``n_items``): surviving base rows keep their base ids,
+        staged row ``j`` is ``n_base + j``. The translation every surface
+        built from the effective snapshot (e.g. a hot-swapped
+        ``RetrievalServer``) applies so its answers agree with
+        ``RkMIPSEngine.kmips`` id-for-id."""
+        if not self.has_pending:
+            return np.arange(self.n_base, dtype=np.int32)
+        base = np.where(~np.asarray(self.deleted))[0]
+        slots = np.where(np.asarray(self.delta_mask))[0]
+        return np.concatenate([base, self.n_base + slots]).astype(np.int32)
+
+    def ensure_kmips_index(self) -> _alsh.SAALSHIndex:
+        """The full-base-corpus SA-ALSH index, built lazily and memoized.
+
+        Key derivation (``fold_in(key, KMIPS_KEY_TAG)``) matches the eager
+        users=None build, so every surface ranks with identical codes."""
+        if self._kmips is None:
+            self._kmips = _alsh.build_index(
+                self.items, jax.random.fold_in(self.key, KMIPS_KEY_TAG),
+                **self.config.kmips_build_kwargs(self.n_base))
+        return self._kmips
+
+    def kmips_delta(self):
+        """The delta-liveness rule, owned here: ``(delta_items,
+        delta_mask)`` when any staged row is live, else ``(None, None)``.
+        Every surface that folds the buffer in (the reverse query view,
+        the engine's forward merge) reads this one accessor."""
+        if bool(np.asarray(self.delta_mask).any()):
+            return self.delta_items, self.delta_mask
+        return None, None
+
+    def kmips_query_view(self) -> _alsh.SAALSHIndex:
+        """The kMIPS index with deleted rows masked out of the scan (same
+        shapes as the base index: deletions never recompile anything)."""
+        if self._kmips_view is None:
+            idx = self.ensure_kmips_index()
+            if not bool(np.asarray(self.deleted).any()):
+                self._kmips_view = idx
+            else:
+                ids = idx.item_ids
+                dead = jnp.where(ids >= 0,
+                                 jnp.take(self.deleted, jnp.clip(ids, 0)),
+                                 False)
+                self._kmips_view = idx._replace(
+                    item_mask=idx.item_mask & ~dead)
+        return self._kmips_view
+
+    def query_view(self):
+        """What an attached engine dispatches reverse queries against:
+        ``(SAHIndex view, delta_items | None, delta_mask | None)``.
+
+        Without pending deltas this is the base index itself (identical
+        arrays — the zero-churn path costs nothing). With pending deltas
+        the view keeps every shape of the base index (one executable
+        serves every version) and restores the module-docstring
+        invariants: deleted rest-rows leave the scan mask, the Simpfer
+        bounds are recomputed over P' minus its deleted members, and
+        ``top_norms`` becomes the exact top-norm vector of the mutated
+        corpus. Live staged rows ride along as the exactly-scanned delta
+        buffer; ``None`` when only deletions are pending, so delete-only
+        churn reuses the plain pipeline's executable.
+        """
+        if self.index is None:
+            raise RuntimeError("artifact has no user-side index: built "
+                               "with users=None (kMIPS-only)")
+        if not self.has_pending:
+            return self.index, None, None
+        idx = self.index
+        if bool(np.asarray(self.deleted).any()):
+            del_top = jnp.take(self.deleted, idx.top_ids)
+            rest_ids = idx.alsh.item_ids
+            del_rest = jnp.where(
+                rest_ids >= 0,
+                jnp.take(self.deleted, jnp.clip(rest_ids, 0)), False)
+            alsh_mask = idx.alsh.item_mask & ~del_rest
+            top_alive = jnp.where(del_top, -jnp.inf, idx.top_norms)
+            if bool(np.asarray(del_top).any()):
+                user_lb = _simpfer.user_lower_bounds(
+                    idx.users, idx.top_items, idx.kmax, mask=~del_top)
+                block_lb = _simpfer.block_lower_bounds(
+                    jnp.where(idx.user_mask[:, None], user_lb, jnp.inf),
+                    idx.n_blocks)
+                block_lb = jnp.where(jnp.isfinite(block_lb), block_lb,
+                                     -jnp.inf)
+            else:
+                # no P' member retired: the stored bounds are already the
+                # recompute's bitwise result — skip the (m, n_top) sweep
+                user_lb, block_lb = idx.user_lb, idx.block_lb
+        else:
+            # insert-only churn: nothing to mask, nothing to re-bound
+            alsh_mask = idx.alsh.item_mask
+            top_alive = idx.top_norms
+            user_lb, block_lb = idx.user_lb, idx.block_lb
+        delta_norms = jnp.where(
+            self.delta_mask,
+            jnp.linalg.norm(self.delta_items, axis=-1), -jnp.inf)
+        merged = jnp.concatenate([
+            top_alive,
+            jnp.where(alsh_mask, idx.alsh.norms, -jnp.inf),
+            delta_norms])
+        top_norms, _ = jax.lax.top_k(merged, idx.top_norms.shape[0])
+        view = idx._replace(alsh=idx.alsh._replace(item_mask=alsh_mask),
+                            user_lb=user_lb, block_lb=block_lb,
+                            top_norms=top_norms)
+        return (view,) + self.kmips_delta()
+
+    # -- streaming corpus deltas -------------------------------------------
+
+    def insert_items(self, rows: jnp.ndarray) -> "IndexArtifact":
+        """Stage new corpus rows; returns the new artifact version.
+
+        Rows land in the fixed-capacity delta buffer (slots are consumed
+        append-only until ``compact()``), are scanned exactly by every
+        attached engine, and get item ids ``n_base + slot``. Raises
+        ``ValueError`` when the staged rows would not fit — compact first.
+        """
+        rows = jnp.asarray(rows)
+        if rows.ndim == 1:
+            rows = rows[None]
+        if rows.ndim != 2 or rows.shape[1] != self.items.shape[1]:
+            raise ValueError(f"rows must be (r, {self.items.shape[1]}) to "
+                             f"match the corpus, got shape {rows.shape}")
+        if not jnp.issubdtype(rows.dtype, jnp.floating):
+            raise ValueError(f"rows must have a floating dtype, got "
+                             f"{rows.dtype}")
+        r = rows.shape[0]
+        free = self.delta_capacity - self.delta_used
+        if r > free:
+            raise ValueError(
+                f"delta buffer full: {r} rows do not fit in the "
+                f"{free} free of {self.delta_capacity} slots "
+                f"({self.delta_used} used); call compact() first")
+        sl = slice(self.delta_used, self.delta_used + r)
+        return self._evolve(
+            delta_items=self.delta_items.at[sl].set(
+                rows.astype(self.delta_items.dtype)),
+            delta_mask=self.delta_mask.at[sl].set(True),
+            delta_used=self.delta_used + r)
+
+    def delete_items(self, ids: Iterable[int]) -> "IndexArtifact":
+        """Retire corpus rows by id; returns the new artifact version.
+
+        Ids ``< n_base`` address the base corpus; ids in
+        ``[n_base, n_base + delta_used)`` address staged inserts.
+        Idempotent per id; out-of-range ids raise ``ValueError``.
+        """
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        hi = self.n_base + self.delta_used
+        if ids.size and (ids.min() < 0 or ids.max() >= hi):
+            raise ValueError(f"item ids must be in [0, {hi}) "
+                             f"({self.n_base} base rows + {self.delta_used} "
+                             f"staged), got {ids[(ids < 0) | (ids >= hi)]}")
+        base = ids[ids < self.n_base]
+        slots = ids[ids >= self.n_base] - self.n_base
+        return self._evolve(
+            deleted=self.deleted.at[base].set(True),
+            delta_mask=self.delta_mask.at[slots].set(False))
+
+    def compact(self) -> "IndexArtifact":
+        """Fold every staged change into a fresh from-scratch build on the
+        effective corpus (same users, same key, same config) — bitwise the
+        artifact a cold ``build`` would produce on the mutated corpus —
+        and reset the delta buffer. Returns self when nothing is staged.
+        """
+        if self.delta_used == 0 and not bool(np.asarray(self.deleted).any()):
+            return self
+        return IndexArtifact.build(self.effective_items(), self.users,
+                                   self.key, config=self.config,
+                                   delta_capacity=self.delta_capacity)
+
+    # -- serving surface ---------------------------------------------------
+
+    def serving_corpus(self) -> tuple[jnp.ndarray, jax.Array, str]:
+        """``(effective items, serving key, fingerprint)`` — what the
+        forward serving stack builds its state from. The key derivation
+        matches every other kMIPS surface, so a delta-free artifact's
+        server scans the engine's own codes."""
+        return (self.effective_items(),
+                jax.random.fold_in(self.key, KMIPS_KEY_TAG),
+                self.fingerprint)
+
+    def serving_codes(self) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Offline sketch build for the serving stack
+        (``launch/serve.py::build_candidate_index``).
+
+        Returns ``(codes (n_base, W) uint32, proj_q (d, n_bits) f32)``:
+        ``codes[i]`` is the SAT+SRP sketch of base row ``i`` — **input row
+        order**, shippable next to the item vectors — and ``proj_q`` the
+        query-side projection (first d rows of the shared SRP matrix).
+        """
+        idx = self.ensure_kmips_index()
+        n = self.n_base
+        codes = jnp.zeros((n, idx.codes.shape[1]), jnp.uint32)
+        codes = codes.at[idx.item_ids].set(idx.codes, mode="drop")
+        return codes, idx.proj[:-1]
+
+    # -- persistence (SS6 elastic checkpoints) -----------------------------
+
+    def _flat_arrays(self) -> dict:
+        out = {"items": self.items, "key": self.key,
+               "deleted": self.deleted, "delta_items": self.delta_items,
+               "delta_mask": self.delta_mask}
+        if self.users is not None:
+            out["users"] = self.users
+        if self.index is not None:
+            _flatten_named("index/", self.index, out)
+        if self._kmips is not None:
+            _flatten_named("kmips/", self._kmips, out)
+        return out
+
+    def save(self, artifact_dir: str, *, step: int = 0) -> str:
+        """Persist this version under ``artifact_dir`` (atomic: npz +
+        fsynced manifest via ``train/checkpoint.py``). Arrays are
+        host-gathered, so saving works from any mesh; the stored layout is
+        mesh-agnostic and ``RkMIPSEngine.attach`` re-places it under any
+        ``ShardingPolicy`` on load. Returns the checkpoint path."""
+        return _ckpt.save(artifact_dir, step, self._flat_arrays(),
+                          metadata=self.manifest)
+
+    @classmethod
+    def load(cls, artifact_dir: str, *,
+             step: int | None = None) -> "IndexArtifact":
+        """Restore the newest (or given) saved version from
+        ``artifact_dir``; verifies the recomputed content fingerprint
+        against the manifest, so silent corruption cannot load."""
+        if step is None:
+            step = _ckpt.latest_step(artifact_dir)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no saved index artifact under {artifact_dir!r}")
+        manifest = _ckpt.read_manifest(artifact_dir, step)
+        meta = manifest["metadata"]
+        if meta.get("kind") != _KIND:
+            raise ValueError(f"{artifact_dir!r} step {step} is not an index "
+                             f"artifact (kind={meta.get('kind')!r})")
+        if meta.get("format", 0) > _FORMAT:
+            raise ValueError(f"artifact format {meta['format']} is newer "
+                             f"than this build supports ({_FORMAT})")
+        like = {k: np.empty(v["shape"], np.dtype(v["dtype"]))
+                for k, v in manifest["index"].items()}
+        tree, _ = _ckpt.restore(artifact_dir, step, like)
+        config = EngineConfig(**meta["config"])
+        art = cls(
+            config=config, key=tree["key"], items=tree["items"],
+            users=tree.get("users"),
+            index=_unflatten_sah(tree) if meta["has_index"] else None,
+            kmips_index=_unflatten_kmips(tree) if meta["has_kmips"]
+            else None,
+            deleted=tree["deleted"], delta_items=tree["delta_items"],
+            delta_mask=tree["delta_mask"], delta_used=meta["delta_used"])
+        if art.fingerprint != meta["fingerprint"]:
+            raise ValueError(
+                f"artifact fingerprint mismatch under {artifact_dir!r} "
+                f"step {step}: manifest says {meta['fingerprint'][:16]}..., "
+                f"restored content hashes to {art.fingerprint[:16]}...")
+        return art
+
+    def __repr__(self) -> str:
+        side = "rkmips" if self.index is not None else "kmips-only"
+        # never force the (full-corpus-hash) fingerprint just to print
+        fp = (f"{self._fingerprint[:12]}" if self._fingerprint is not None
+              else "<uncomputed>")
+        return (f"IndexArtifact({side}, n_base={self.n_base}, "
+                f"n_users={self.n_users}, pending="
+                f"{'yes' if self.has_pending else 'no'}, "
+                f"fingerprint={fp})")
+
+
+def load_artifact(artifact_dir: str, *, step: int | None = None
+                  ) -> IndexArtifact:
+    """Module-level alias of ``IndexArtifact.load``."""
+    return IndexArtifact.load(artifact_dir, step=step)

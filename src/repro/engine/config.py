@@ -64,7 +64,17 @@ class EngineConfig:
                             accumulated queries to (static shape: exactly
                             one compile per distinct batch size).
       serve_cache_capacity: LRU capacity of the built-serving-state cache
-                            (states are keyed by the frozen config).
+                            (states are keyed by the artifact fingerprint
+                            + the config's item-index recipe).
+
+    Artifact-lifecycle knobs (engine/artifact.py, DESIGN.md SS10):
+      delta_capacity: slots of the staged-insert delta buffer an
+                      ``IndexArtifact`` carries between compactions. The
+                      capacity is a static shape: attached engines compile
+                      the delta pipeline at most once per batch shape, no
+                      matter how often the corpus churns. Not part of any
+                      build recipe (two configs differing only here share
+                      serving state and produce identical indexes).
     """
 
     k_max: int = 50
@@ -82,6 +92,7 @@ class EngineConfig:
     tie_eps: float = TIE_EPS_DEFAULT
     serve_batch_size: int = 8
     serve_cache_capacity: int = 4
+    delta_capacity: int = 256
 
     def __post_init__(self):
         if self.transform not in _TRANSFORMS:
@@ -95,7 +106,8 @@ class EngineConfig:
                              f"got {self.scan!r}")
         for name in ("k_max", "leaf_size", "n_bits", "tile",
                      "max_partitions", "n_cand", "chunk",
-                     "serve_batch_size", "serve_cache_capacity"):
+                     "serve_batch_size", "serve_cache_capacity",
+                     "delta_capacity"):
             if getattr(self, name) < 1:
                 raise ValueError(f"{name} must be >= 1, "
                                  f"got {getattr(self, name)}")

@@ -1,11 +1,22 @@
-"""RkMIPSEngine: the one front door for (R)kMIPS (DESIGN.md SS7).
+"""RkMIPSEngine: the one front door for (R)kMIPS (DESIGN.md SS7, SS10).
 
-The facade owns the full lifecycle that examples, benchmarks and the serving
-stack used to hand-roll from ``core/`` pieces:
+The facade owns the full query lifecycle that examples, benchmarks and the
+serving stack used to hand-roll from ``core/`` pieces:
 
     eng = RkMIPSEngine("sah").build(items, users, key)
     res = eng.query_batch(promoted_items, k=10)     # res.predictions (nq, m)
     truth = eng.oracle(promoted_items, k=10)        # same tie_eps, always
+
+Since the artifact redesign (DESIGN.md SS10), *building* is separate from
+*serving*: ``build()`` is sugar for "make an ``IndexArtifact``, then
+``attach`` it", and an engine can equally be stood up from a saved or
+streamed-in artifact version:
+
+    art = IndexArtifact.build(items, users, key, config=cfg)   # offline
+    art.save("/ckpt/sah")                                      # ship it
+    eng = RkMIPSEngine.from_artifact(IndexArtifact.load("/ckpt/sah"),
+                                     policy=mesh_policy)       # any mesh
+    eng.attach(art.insert_items(new_rows))                     # hot swap
 
 Guarantees the raw ``core/sah.py`` path does not give:
 
@@ -15,7 +26,14 @@ Guarantees the raw ``core/sah.py`` path does not give:
     ``EngineConfig`` (including ``tie_eps``, which ``oracle()`` shares);
   * a ``ShardingPolicy`` with a mesh transparently shards the dense tau
     matvec + sketch scans over users (queries) and over items (kmips) —
-    ``engine/sharding.py`` — with no caller-visible API change.
+    ``engine/sharding.py`` — with no caller-visible API change. Artifacts
+    are stored host-side and mesh-agnostic; ``attach`` lays them out for
+    *this* engine's policy, which is what makes a save on one mesh load
+    onto any other (the SS6 elastic-restore story applied to indexes);
+  * an attached artifact with staged corpus deltas is served honestly:
+    deletions leave the scans, staged inserts are exactly counted from the
+    fixed-capacity delta buffer (one extra executable ever), and the
+    ``oracle`` answers over the *mutated* corpus.
 
 ``core/`` stays purely functional underneath (SS1): the engine holds arrays
 and timings, never the other way around.
@@ -24,6 +42,7 @@ and timings, never the other way around.
 from __future__ import annotations
 
 import time
+import warnings
 from typing import NamedTuple
 
 import jax
@@ -34,10 +53,12 @@ from repro.core import exact as _exact
 from repro.core import sa_alsh as _alsh
 from repro.core import sah as _sah
 from repro.dist.policy import NO_SHARDING, ShardingPolicy
+from repro.engine import artifact as _artifact
 from repro.engine import sharding as _sharding
 from repro.engine.config import EngineConfig, get_config
 
-_KMIPS_KEY_TAG = 0x5A11      # fold_in tag for the lazily-built kMIPS index
+# Backward-compat alias; the tag lives with the artifact lifecycle now.
+_KMIPS_KEY_TAG = _artifact.KMIPS_KEY_TAG
 
 
 class PruningFunnel(NamedTuple):
@@ -106,6 +127,9 @@ class RkMIPSEngine:
     config: an ``EngineConfig`` or a registry name ("sah", "simpfer", ...).
     policy: sharding policy; ``NO_SHARDING`` (default) is single-device,
             a mesh policy shards users/items over every mesh axis.
+
+    The engine serves whatever ``IndexArtifact`` version is currently
+    attached (``self.artifact``); ``build()`` both makes and attaches one.
     """
 
     def __init__(self, config: EngineConfig | str = "sah", *,
@@ -118,8 +142,9 @@ class RkMIPSEngine:
         self.config = config
         self.policy = policy
         self.build_seconds: float | None = None
+        self.artifact: _artifact.IndexArtifact | None = None
         self._index: _sah.SAHIndex | None = None
-        self._kmips_index: _alsh.SAALSHIndex | None = None
+        self._delta: tuple = (None, None)
         self._items: jnp.ndarray | None = None
         self._users_unit: jnp.ndarray | None = None
         self._key: jax.Array | None = None
@@ -128,7 +153,9 @@ class RkMIPSEngine:
         # plan/execute pipeline (sharded or not). rkmips_compile_count
         # counts compiles, not calls: exactly one per distinct (batch
         # shape, k) — batch size is a pure throughput knob (pinned by
-        # tests/test_batched.py). Single-device the counter increments at
+        # tests/test_batched.py), and an attached delta buffer adds
+        # exactly one more signature (its capacity is static, so corpus
+        # churn never retraces). Single-device the counter increments at
         # jit trace time (ground truth); under a mesh the shard_map must
         # dispatch eagerly — an *outer* jit staged around it re-triggers
         # the jax 0.4.x while-driver miscompile (wrong predictions, caught
@@ -139,27 +166,35 @@ class RkMIPSEngine:
         self.rkmips_mapped_compile_count = 0
         self._rkmips_seen: set = set()
 
-        def _rkmips(index, queries, *, k):
+        def _rkmips(index, queries, d_items, d_mask, *, k):
             self.rkmips_compile_count += 1
             return _sharding.rkmips_batch(index, queries, k, self.policy,
+                                          delta_items=d_items,
+                                          delta_mask=d_mask,
                                           **self.config.query_kwargs())
 
-        def _rkmips_eager(index, queries, *, k):
+        def _rkmips_eager(index, queries, d_items, d_mask, *, k):
             # Key on everything the executable cache keys on: the index
             # leaves' shapes too, so a rebuild with new sizes counts its
             # recompile instead of hiding behind an old query signature.
             sig = (queries.shape, str(queries.dtype), k,
+                   None if d_items is None else
+                   (d_items.shape, str(d_items.dtype)),
                    tuple((l.shape, str(l.dtype))
                          for l in jax.tree.leaves(index)))
             if sig not in self._rkmips_seen:
                 self._rkmips_seen.add(sig)
                 self.rkmips_compile_count += 1
             return _sharding.rkmips_batch(index, queries, k, self.policy,
+                                          delta_items=d_items,
+                                          delta_mask=d_mask,
                                           **self.config.query_kwargs())
 
-        def _rkmips_mapped(index, queries, *, k):
+        def _rkmips_mapped(index, queries, d_items, d_mask, *, k):
             self.rkmips_mapped_compile_count += 1
             return _sah.rkmips_batch_mapped(index, queries, k,
+                                            delta_items=d_items,
+                                            delta_mask=d_mask,
                                             **self.config.query_kwargs())
 
         if policy.mesh is None:
@@ -175,42 +210,91 @@ class RkMIPSEngine:
               key: jax.Array) -> "RkMIPSEngine":
         """Index ``items`` (n, d) for ``users`` (m, d). Returns self.
 
-        users=None builds a kMIPS-only engine (no user-side SAH index):
-        ``kmips()`` works, ``query*()`` raise. The key is consumed exactly
-        as ``core/sah.py::build`` would, so an engine build is bit-for-bit
-        the raw build with ``config.build_kwargs()``. The kMIPS index key
-        is derived with the same ``fold_in`` tag whether it is built here
-        (users=None) or lazily on first ``kmips()``, so ``server()`` and
-        every kMIPS path rank with the identical SRP codes.
+        Sugar for ``attach(IndexArtifact.build(items, users, key,
+        config=self.config))`` — bit-for-bit the raw ``sah.build`` path
+        with this config's kwargs. ``users=None`` builds a kMIPS-only
+        engine (no user-side SAH index): ``kmips()`` works, ``query*()``
+        raise. The kMIPS index key is derived with the same ``fold_in``
+        tag whether it is built eagerly (users=None) or lazily on first
+        ``kmips()``, so ``server()`` and every kMIPS path rank with the
+        identical SRP codes. Inputs are validated up front (2-D, floating,
+        matching dimensionality) with a clear ``ValueError``.
         """
         t0 = time.perf_counter()
-        self._items = items
-        self._key = key
-        # rebuilding drops every derived artifact of the previous build
-        self._index = None
-        self._kmips_index = None
-        self._users_unit = None
-        self.n_users = None
-        if users is None:
-            self._kmips_index = self._build_kmips_index(
-                jax.random.fold_in(key, _KMIPS_KEY_TAG))
-            jax.block_until_ready(self._kmips_index.codes)
-            self.build_seconds = time.perf_counter() - t0
-            return self
-        index = _sah.build(items, users, key, **self.config.build_kwargs())
-        if self.policy.mesh is not None:
-            index = _sharding.shard_index(index, self.policy)
-        jax.block_until_ready(index.users)
-        self._index = index
-        self.n_users = users.shape[0]
-        unorm = jnp.linalg.norm(users, axis=-1, keepdims=True)
-        self._users_unit = users / jnp.maximum(unorm, 1e-12)
+        art = _artifact.IndexArtifact.build(items, users, key,
+                                            config=self.config)
+        self.attach(art)
         self.build_seconds = time.perf_counter() - t0
         return self
 
+    @classmethod
+    def from_artifact(cls, artifact: "_artifact.IndexArtifact", *,
+                      policy: ShardingPolicy = NO_SHARDING
+                      ) -> "RkMIPSEngine":
+        """An engine serving ``artifact`` under ``policy`` — the restore /
+        hand-off path: the artifact's own config drives every knob, and
+        ``attach`` lays its host-side arrays out for this policy's mesh
+        (elastic: the saving mesh is irrelevant)."""
+        return cls(artifact.config, policy=policy).attach(artifact)
+
+    def attach(self, artifact: "_artifact.IndexArtifact") -> "RkMIPSEngine":
+        """Make ``artifact`` the engine's live index version. Returns self.
+
+        Drops every derived product of the previous version, places the
+        user/block arrays on the mesh when the policy carries one, and
+        wires up the staged-delta buffer (if any). Attaching a same-shape
+        version (a hot swap) reuses every compiled executable — the
+        dispatch signatures are shape-keyed, and the delta buffer's
+        capacity is static.
+        """
+        if not isinstance(artifact, _artifact.IndexArtifact):
+            raise TypeError(f"attach expects an IndexArtifact, got "
+                            f"{type(artifact).__name__}")
+        # delta_capacity is a lifecycle knob, not a build/query recipe
+        # field (engine/config.py): the artifact's own buffer governs, so
+        # configs differing only there are interchangeable here
+        if artifact.config.replace(
+                delta_capacity=self.config.delta_capacity) != self.config:
+            raise ValueError(
+                "artifact config does not match this engine's config; use "
+                "RkMIPSEngine.from_artifact(artifact) (or rebuild the "
+                "artifact with the engine's config)")
+        self.artifact = artifact
+        self._items = artifact.effective_items()
+        self._key = artifact.key
+        self._index = None
+        self._users_unit = None
+        self.n_users = None
+        if artifact.users is None:
+            # no user-side index, but live staged inserts still ride the
+            # forward merge (kmips); query_view can't be asked here
+            self._delta = artifact.kmips_delta()
+            jax.block_until_ready(artifact.ensure_kmips_index().codes)
+            return self
+        # query_view owns the delta-liveness rule: the buffer it returns is
+        # exactly the one its adjusted top_norms covers (stale-norm safety)
+        view, d_items, d_mask = artifact.query_view()
+        self._delta = (d_items, d_mask)
+        if self.policy.mesh is not None:
+            view = _sharding.shard_index(view, self.policy)
+        jax.block_until_ready(view.users)
+        self._index = view
+        self.n_users = artifact.n_users
+        self._users_unit = artifact.users_unit()
+        return self
+
+    def _require_artifact(self) -> "_artifact.IndexArtifact":
+        if self.artifact is None:
+            raise RuntimeError("engine not built: call "
+                               "build(items, users, key) first")
+        return self.artifact
+
     @property
     def index(self) -> _sah.SAHIndex:
-        """The underlying SAHIndex (built arrays; read-only by convention)."""
+        """The attached query view (built arrays; read-only by convention).
+
+        Under a mesh policy this is the padded, device-placed layout; the
+        artifact keeps the mesh-agnostic original."""
         if self._index is None:
             raise RuntimeError("engine not built for RkMIPS: call "
                                "build(items, users, key) first")
@@ -218,19 +302,9 @@ class RkMIPSEngine:
 
     @property
     def kmips_index(self) -> _alsh.SAALSHIndex:
-        """The full-item SA-ALSH index (built lazily on first kmips())."""
-        if self._kmips_index is None:
-            if self._items is None:
-                raise RuntimeError("engine not built: call "
-                                   "build(items, users, key) first")
-            self._kmips_index = self._build_kmips_index(
-                jax.random.fold_in(self._key, _KMIPS_KEY_TAG))
-        return self._kmips_index
-
-    def _build_kmips_index(self, key: jax.Array) -> _alsh.SAALSHIndex:
-        return _alsh.build_index(
-            self._items, key,
-            **self.config.kmips_build_kwargs(self._items.shape[0]))
+        """The full-base-corpus SA-ALSH index (built lazily on first use,
+        memoized on the attached artifact)."""
+        return self._require_artifact().ensure_kmips_index()
 
     def _check_k(self, k: int) -> None:
         if not 1 <= k <= self.config.k_max:
@@ -272,7 +346,8 @@ class RkMIPSEngine:
         index = self.index
         self._check_k(k)
         t0 = time.perf_counter()
-        pred, stats = self._rkmips_dispatch(index, q[None], k=k)
+        pred, stats = self._rkmips_dispatch(index, q[None], *self._delta,
+                                            k=k)
         pred = pred[0]
         stats = jax.tree.map(lambda s: s[0], stats)
         po = _sah.predictions_to_original(index, pred, self.n_users)
@@ -286,13 +361,16 @@ class RkMIPSEngine:
         One jitted dispatch of the batched plan/execute pipeline
         (core/sah.py, sharded by ``engine/sharding.py`` under a mesh
         policy): one trace per distinct (nq, k) however large the batch —
-        ``rkmips_compile_count`` exposes the trace count. The result's
-        ``funnel`` aggregates the recovered per-query pruning counters.
+        ``rkmips_compile_count`` exposes the trace count. Answers reflect
+        the attached artifact's staged corpus deltas (DESIGN.md SS10). The
+        result's ``funnel`` aggregates the recovered per-query pruning
+        counters.
         """
         index = self.index
         self._check_k(k)
         t0 = time.perf_counter()
-        pred, stats = self._rkmips_dispatch(index, queries, k=k)
+        pred, stats = self._rkmips_dispatch(index, queries, *self._delta,
+                                            k=k)
         po = _sah.predictions_to_original(index, pred, self.n_users)
         jax.block_until_ready(po)
         return QueryResult(po, stats, time.perf_counter() - t0, k,
@@ -313,7 +391,8 @@ class RkMIPSEngine:
                                "reference driver; use query_batch under a "
                                "mesh policy")
         t0 = time.perf_counter()
-        pred, stats = self._rkmips_mapped_dispatch(index, queries, k=k)
+        pred, stats = self._rkmips_mapped_dispatch(index, queries,
+                                                   *self._delta, k=k)
         po = _sah.predictions_to_original(index, pred, self.n_users)
         jax.block_until_ready(po)
         return QueryResult(po, stats, time.perf_counter() - t0, k,
@@ -323,16 +402,19 @@ class RkMIPSEngine:
 
     def kmips(self, q: jnp.ndarray, k: int, *,
               n_cand: int | None = None) -> KMIPSResult:
-        """Approximate top-k MIPS over the full item set.
+        """Approximate top-k MIPS over the full (mutated) item set.
 
         q: (d,) or (Q, d). Wraps ``core/sa_alsh.py::kmips_topk`` (tiled,
         early-terminating) on one device; with a mesh policy, the sharded
         single-pass scan of engine/sharding.py — which covers every row,
         so ``tiles_visited`` reports the full tile count there by design.
-        n_cand overrides the config's re-rank depth for recall/latency
-        sweeps.
+        Deleted rows are masked out of the scan; staged inserts are folded
+        in by an exact scan of the delta buffer (``sa_alsh.merge_topk``),
+        with ids ``n_base + slot``. n_cand overrides the config's re-rank
+        depth for recall/latency sweeps.
         """
-        index = self.kmips_index
+        art = self._require_artifact()
+        index = art.kmips_query_view()
         n_cand = self.config.n_cand if n_cand is None else n_cand
         queries = q if q.ndim == 2 else q[None]
         t0 = time.perf_counter()
@@ -348,6 +430,14 @@ class RkMIPSEngine:
                                                            index.tile),
                                                 scan=self.config.scan)
             tiles = int(tiles)
+        d_items, d_mask = self._delta
+        if d_items is not None:
+            d_vals = jnp.where(d_mask[None, :], queries @ d_items.T,
+                               -jnp.inf)
+            d_ids = jnp.broadcast_to(
+                art.n_base + jnp.arange(d_items.shape[0], dtype=ids.dtype),
+                d_vals.shape)
+            vals, ids = _alsh.merge_topk(vals, ids, d_vals, d_ids, k)
         jax.block_until_ready(vals)
         seconds = time.perf_counter() - t0
         if q.ndim == 1:
@@ -357,26 +447,19 @@ class RkMIPSEngine:
     # -- online serving ----------------------------------------------------
 
     def server(self):
-        """An online ``RetrievalServer`` over this engine's items
-        (engine/serving.py, DESIGN.md SS8).
+        """An online ``RetrievalServer`` over this engine's attached
+        artifact (engine/serving.py, DESIGN.md SS8).
 
-        The server inherits the engine's config and sharding policy and
-        derives its index key exactly as the kMIPS index does, so its scans
-        rank with the identical SRP codes as ``kmips()``. When the engine's
-        kMIPS index is already built, the server's cache is seeded from it
-        — no second offline build of the same corpus.
+        The server inherits the artifact's config and this engine's
+        sharding policy, and its state cache is keyed by the artifact
+        fingerprint + index recipe — when the engine's kMIPS index is
+        already built (and no deltas are staged), the cache is seeded from
+        it, so no second offline build of the same corpus ever happens.
+        A new artifact version goes live with ``server.swap(artifact)``.
         """
         from repro.engine import serving as _serving
-        if self._items is None:
-            raise RuntimeError("engine not built: call "
-                               "build(items, users, key) first")
-        srv = _serving.RetrievalServer(
-            self._items, jax.random.fold_in(self._key, _KMIPS_KEY_TAG),
-            config=self.config, policy=self.policy)
-        if self._kmips_index is not None:
-            srv.cache.put(self.config, _serving.state_from_index(
-                self._kmips_index, self.config, policy=self.policy))
-        return srv
+        return _serving.RetrievalServer.from_artifact(
+            self._require_artifact(), policy=self.policy)
 
     def reverse_server(self):
         """An online ``ReverseServer`` over this engine (engine/serving.py).
@@ -385,6 +468,8 @@ class RkMIPSEngine:
         ``query_batch``: the batched plan/execute dispatch is shared, so
         serving costs no extra executables and every answer is bitwise a
         row of the equivalent one-shot batch. Requires a user-side build.
+        ``swap(artifact)`` re-attaches between flushes without dropping
+        tickets.
         """
         from repro.engine import serving as _serving
         return _serving.ReverseServer(self)
@@ -393,7 +478,9 @@ class RkMIPSEngine:
 
     def oracle(self, queries: jnp.ndarray, k: int) -> jnp.ndarray:
         """Exact RkMIPS truth (nq, m) with the engine's own tie_eps — the
-        F1 denominator can never drift from the index's tie convention."""
+        F1 denominator can never drift from the index's tie convention.
+        Computed over the attached artifact's *effective* (mutated) corpus,
+        so staged deltas are judged against the truth they changed."""
         if self._users_unit is None:
             raise RuntimeError("engine not built for RkMIPS: call "
                                "build(items, users, key) first")
@@ -406,22 +493,25 @@ class RkMIPSEngine:
 def serving_codes(item_vecs: jnp.ndarray, key: jax.Array, *,
                   n_bits: int = 256, config: EngineConfig | None = None
                   ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Offline sketch build for the serving stack (launch/serve.py).
+    """DEPRECATED offline sketch build — use the artifact surface instead:
 
-    Returns ``(codes (N, W) uint32, proj_q (D, n_bits) f32)`` where
-    ``codes[i]`` is the SAT+SRP sketch of ``item_vecs[i]`` — **input row
-    order**, so the caller can ship ``item_vecs`` and ``codes`` side by side
-    to ``sah_retrieve_step`` — and ``proj_q`` is the query-side projection
-    (the first D rows of the shared SRP matrix; the user transform's
-    appended coordinate is 0, see core/sa_alsh.py).
+        art = IndexArtifact.build(item_vecs, None, key,
+                                  config=cfg.replace(n_bits=n_bits))
+        codes, proj_q = art.serving_codes()
+
+    This shim builds exactly that artifact and forwards, so its codes are
+    identical to every other kMIPS surface sharing the recipe (the key is
+    folded with the shared tag; pre-artifact releases hashed with the raw
+    key). Kept one release for ``launch/serve.py``-era callers.
     """
+    warnings.warn(
+        "repro.engine.serving_codes is deprecated: build an IndexArtifact "
+        "and call artifact.serving_codes() (see engine/artifact.py). Note "
+        "the codes now derive from fold_in(key, KMIPS_KEY_TAG) — the "
+        "shared tag every kMIPS surface uses — and differ from "
+        "pre-artifact releases, which hashed with the raw key: regenerate "
+        "any persisted codes/projection pair together, never mix releases",
+        DeprecationWarning, stacklevel=2)
     cfg = (config or get_config("sah")).replace(n_bits=n_bits)
-    idx = _alsh.build_index(item_vecs, key,
-                            **cfg.kmips_build_kwargs(item_vecs.shape[0]))
-    n = item_vecs.shape[0]
-    # build_index sorts rows by descending norm; scatter codes back to the
-    # caller's row order (padding rows have item_ids == -1, out of bounds
-    # for mode="drop", so they never land).
-    codes = jnp.zeros((n, idx.codes.shape[1]), jnp.uint32)
-    codes = codes.at[idx.item_ids].set(idx.codes, mode="drop")
-    return codes, idx.proj[:-1]
+    art = _artifact.IndexArtifact.build(item_vecs, None, key, config=cfg)
+    return art.serving_codes()

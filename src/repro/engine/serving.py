@@ -14,11 +14,21 @@ Forward (kMIPS) serving, three layers, separable on purpose:
 
   * ``build_serving_state`` — offline: SA-ALSH index build, row padding to
     the mesh's shard multiple (``pad_item_rows``), device placement.
-  * ``ServingCache`` — the LRU of built states for one corpus; ``get`` is
-    the only entry, ``builds`` counts misses (asserted in tests).
+  * ``ServingCache`` — the LRU of built states, keyed by (corpus
+    fingerprint, index recipe); ``get`` is the only entry, ``builds``
+    counts misses (asserted in tests).
   * ``RetrievalServer`` — online: ``submit`` enqueues a query and returns
     its ticket, ``flush`` answers every pending ticket in order; ``kmips``
     is the submit+flush convenience for a lone query.
+
+Hot swap (DESIGN.md SS10): both servers accept a new ``IndexArtifact``
+version between flushes via ``swap(artifact)`` — pending tickets survive
+(they are answered against the new version by the next flush), and when the
+swapped-in shapes match the live ones the compiled dispatch is reused
+(``compile_count`` += 0). The cache key's fingerprint prefix is what makes
+this safe: built states of *different* corpus versions can coexist in one
+LRU, so swapping back to a cached version is a hit, and a stale state can
+never be served as a "hit" for new content.
 
 Reverse (RkMIPS) serving rides the batched plan/execute pipeline
 (DESIGN.md SS9): ``ReverseServer`` accumulates promoted-item queries and
@@ -47,6 +57,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import sa_alsh as _alsh
 from repro.dist.policy import NO_SHARDING, ShardingPolicy
 from repro.engine import sharding as _sharding
+from repro.engine.artifact import IndexArtifact, corpus_fingerprint
 from repro.engine.config import EngineConfig, get_config
 from repro.kernels import ops as kops
 
@@ -70,7 +81,9 @@ class ServingState(NamedTuple):
 
 
 class ServeResult(NamedTuple):
-    """One served query's answer (values descending, original item rows)."""
+    """One served query's answer (values descending; ids in the caller's
+    corpus row space — for artifact-backed servers that is artifact id
+    space: base rows keep their ids, staged row j is n_base + j)."""
 
     values: jnp.ndarray
     ids: jnp.ndarray
@@ -132,8 +145,8 @@ def _index_recipe(config: EngineConfig, n_items: int) -> tuple:
 
 
 class ServingCache:
-    """LRU of built ``ServingState`` for one corpus, keyed by the config's
-    item-index recipe.
+    """LRU of built ``ServingState``, keyed by (corpus fingerprint, index
+    recipe).
 
     ``EngineConfig`` is frozen and hashable (engine/config.py), and the
     cache keys on exactly the fields that feed the offline build
@@ -141,15 +154,26 @@ class ServingCache:
     the requested knobs — the identical arrays, no rebuild (``builds``
     counts actual builds) — and configs that differ only in serve/query
     knobs share one entry instead of thrashing the LRU.
+
+    The key's fingerprint prefix identifies the *corpus version*
+    (``IndexArtifact.fingerprint`` for artifact-backed servers,
+    ``corpus_fingerprint(items, key)`` otherwise). ``rebind`` points the
+    cache at a new live version for a hot swap: old versions' entries stay
+    resident under their own fingerprints (swapping back is a hit, subject
+    to the LRU), and content changes can never alias onto a stale state.
     """
 
     def __init__(self, items: jnp.ndarray, key: jax.Array, *,
-                 policy: ShardingPolicy = NO_SHARDING, capacity: int = 4):
+                 policy: ShardingPolicy = NO_SHARDING, capacity: int = 4,
+                 fingerprint: str | None = None):
         if capacity < 1:
             raise ValueError(f"cache capacity must be >= 1, got {capacity}")
         self._items = items
         self._key = key
         self._policy = policy
+        # lazy: a never-swapped server (one corpus version ever) should
+        # not pay a full-corpus host hash at construction
+        self._fp = fingerprint
         self.capacity = capacity
         self._states: OrderedDict[tuple, ServingState] = OrderedDict()
         self.builds = 0
@@ -157,8 +181,25 @@ class ServingCache:
     def __len__(self) -> int:
         return len(self._states)
 
+    @property
+    def fingerprint(self) -> str:
+        """Fingerprint of the live corpus version (the current key prefix,
+        computed on first use when not supplied)."""
+        if self._fp is None:
+            self._fp = corpus_fingerprint(self._items, self._key)
+        return self._fp
+
+    def rebind(self, items: jnp.ndarray, key: jax.Array, *,
+               fingerprint: str | None = None) -> None:
+        """Make a new corpus version live (hot swap). Cached states of
+        previous versions remain retrievable under their fingerprints."""
+        self._items = items
+        self._key = key
+        self._fp = (fingerprint if fingerprint is not None
+                    else corpus_fingerprint(items, key))
+
     def _recipe(self, config: EngineConfig) -> tuple:
-        return _index_recipe(config, self._items.shape[0])
+        return (self.fingerprint, _index_recipe(config, self._items.shape[0]))
 
     def __contains__(self, config: EngineConfig) -> bool:
         return self._recipe(config) in self._states
@@ -259,19 +300,25 @@ class RetrievalServer(_TicketQueue):
 
     The server owns a ``ServingCache`` over its corpus; per-flush state
     lookup is O(1) on a hit, so swapping ``config`` between flushes (e.g.
-    an A/B of presets) costs one build each, once.
+    an A/B of presets) costs one build each, once. ``swap(artifact)``
+    makes a new corpus version live between flushes (DESIGN.md SS10).
     """
 
     def __init__(self, items: jnp.ndarray, key: jax.Array, *,
                  config: EngineConfig | str = "sah",
-                 policy: ShardingPolicy = NO_SHARDING):
+                 policy: ShardingPolicy = NO_SHARDING,
+                 fingerprint: str | None = None):
         super().__init__()
         if isinstance(config, str):
             config = get_config(config)
         self.config = config
         self.policy = policy
+        self.artifact: IndexArtifact | None = None
+        # artifact-space id per served row; None when rows == corpus rows
+        self._id_map: jnp.ndarray | None = None
         self.cache = ServingCache(items, key, policy=policy,
-                                  capacity=config.serve_cache_capacity)
+                                  capacity=config.serve_cache_capacity,
+                                  fingerprint=fingerprint)
         self.compile_count = 0
 
         def _scan(items_a, ids_a, mask_a, codes_a, proj_q, queries, *,
@@ -286,6 +333,60 @@ class RetrievalServer(_TicketQueue):
 
         self._dispatch = jax.jit(_scan,
                                  static_argnames=("k", "n_cand", "scan"))
+
+    @classmethod
+    def from_artifact(cls, artifact: IndexArtifact, *,
+                      policy: ShardingPolicy = NO_SHARDING
+                      ) -> "RetrievalServer":
+        """A server over an ``IndexArtifact``'s effective corpus.
+
+        The serving key derivation matches every other kMIPS surface, and
+        the cache is keyed by the artifact fingerprint — when the
+        artifact's kMIPS index is already built (and no deltas are
+        staged), the cache is seeded from it, so the server scans the
+        exact codes the engine ranks with, with zero extra builds.
+        Answers come back in **artifact id space** (base ids; staged row
+        j is n_base + j), agreeing id-for-id with ``RkMIPSEngine.kmips``
+        even when the artifact carries pending deltas.
+        """
+        items, key, fp = artifact.serving_corpus()
+        srv = cls(items, key, config=artifact.config, policy=policy,
+                  fingerprint=fp)
+        srv._bind_artifact(artifact)
+        return srv
+
+    def _bind_artifact(self, artifact: IndexArtifact) -> None:
+        self.artifact = artifact
+        self._id_map = (jnp.asarray(artifact.effective_ids())
+                        if artifact.has_pending else None)
+        if artifact.kmips_index is not None and not artifact.has_pending \
+                and artifact.config not in self.cache:
+            self.cache.put(artifact.config, state_from_index(
+                artifact.kmips_index, artifact.config, policy=self.policy))
+
+    def _to_artifact_ids(self, ids: jnp.ndarray) -> jnp.ndarray:
+        """Served rows index the effective-corpus snapshot; translate back
+        to artifact ids (identity without pending deltas; -1 passes)."""
+        if self._id_map is None:
+            return ids
+        return jnp.where(ids >= 0, jnp.take(self._id_map,
+                                            jnp.clip(ids, 0)), -1)
+
+    def swap(self, artifact: IndexArtifact) -> "RetrievalServer":
+        """Make a new artifact version live between flushes.
+
+        Pending tickets survive and are answered against the new version
+        by the next ``flush``; previously built versions stay in the cache
+        under their fingerprints (swapping back is a hit). When the new
+        version's built shapes match the live ones, the compiled dispatch
+        is reused — ``compile_count`` += 0 (pinned in tests).
+        """
+        items, key, fp = artifact.serving_corpus()
+        self.config = artifact.config
+        self.cache.capacity = artifact.config.serve_cache_capacity
+        self.cache.rebind(items, key, fingerprint=fp)
+        self._bind_artifact(artifact)
+        return self
 
     @property
     def batch_size(self) -> int:
@@ -329,6 +430,7 @@ class RetrievalServer(_TicketQueue):
                                        state.item_mask, state.codes,
                                        state.proj_q, qs, k=k,
                                        n_cand=n_cand, scan=scan)
+            ids = self._to_artifact_ids(ids)
             out.extend(ServeResult(vals[j], ids[j], k)
                        for j in range(len(group)))
         del self._pending[:len(queue)]
@@ -386,6 +488,23 @@ class ReverseServer(_TicketQueue):
         super().__init__()
         engine.index                      # raises unless built for RkMIPS
         self.engine = engine
+
+    def swap(self, artifact: IndexArtifact) -> "ReverseServer":
+        """Make a new artifact version live between flushes (DESIGN.md
+        SS10): re-attaches the underlying engine. Pending tickets survive
+        and are answered against the new version by the next ``flush``;
+        when the new version's shapes match the live ones the engine's
+        compiled dispatch is reused (``compile_count`` += 0 — a staged
+        delta buffer adds at most one executable ever, its capacity being
+        static)."""
+        if artifact.users is None:
+            # refuse BEFORE touching the engine: a half-applied swap would
+            # strand every pending ticket (the retry contract)
+            raise RuntimeError(
+                "cannot swap a kMIPS-only artifact into a ReverseServer: "
+                "the artifact is not built for RkMIPS (users=None)")
+        self.engine.attach(artifact)
+        return self
 
     @property
     def batch_size(self) -> int:

@@ -164,7 +164,9 @@ def shard_index(index: _sah.SAHIndex, policy: ShardingPolicy
 def rkmips_batch(index: _sah.SAHIndex, queries: jnp.ndarray, k: int,
                  policy: ShardingPolicy, *, n_cand: int = 64,
                  scan: str = "sketch", chunk: int = 256,
-                 tie_eps: float = 0.0):
+                 tie_eps: float = 0.0,
+                 delta_items: jnp.ndarray | None = None,
+                 delta_mask: jnp.ndarray | None = None):
     """Sharded Algorithm 5 over a query batch (one trace per batch shape).
 
     Returns (pred (nq, m_pad) bool in global leaf order, QueryStats with
@@ -181,25 +183,38 @@ def rkmips_batch(index: _sah.SAHIndex, queries: jnp.ndarray, k: int,
     shard-local work queues are what make this load-balanced: a shard
     whose users die early for one query spends its chunks on the other
     queries' survivors instead of idling.
+
+    delta_items/delta_mask: optional staged-insert buffer (DESIGN.md SS10),
+    replicated across shards — each shard counts its own user rows against
+    the full buffer ((m_local, cap) products, no collective), so the psum'd
+    counters and gathered predictions match the single-device delta path
+    bitwise.
     """
     if policy.mesh is None:
         return _sah.rkmips_batch(index, queries, k, n_cand=n_cand,
-                                 scan=scan, chunk=chunk, tie_eps=tie_eps)
+                                 scan=scan, chunk=chunk, tie_eps=tie_eps,
+                                 delta_items=delta_items,
+                                 delta_mask=delta_mask)
     index = pad_index(index, n_shards(policy))
     axes = tuple(policy.mesh.axis_names)
     specs = index_specs(index, policy)
+    has_delta = delta_items is not None
 
-    def local(idx_l: _sah.SAHIndex, qs: jnp.ndarray):
+    def local(idx_l: _sah.SAHIndex, qs: jnp.ndarray, *delta):
+        d_items, d_mask = delta if delta else (None, None)
         pred_l, stats_l = _sah.rkmips_batch_impl(
             idx_l, qs, k, n_cand=n_cand, scan=scan, chunk=chunk,
-            tie_eps=tie_eps)
+            tie_eps=tie_eps, delta_items=d_items, delta_mask=d_mask)
         pred = jax.lax.all_gather(pred_l, axes, axis=1, tiled=True)
         stats = jax.tree.map(lambda s: jax.lax.psum(s, axes), stats_l)
         return pred, stats
 
-    return jax.shard_map(local, mesh=policy.mesh, in_specs=(specs, P()),
-                         out_specs=(P(), P()), check_vma=False)(index,
-                                                                queries)
+    operands = (index, queries) + ((delta_items, delta_mask)
+                                   if has_delta else ())
+    in_specs = (specs, P()) + ((P(), P()) if has_delta else ())
+    return jax.shard_map(local, mesh=policy.mesh, in_specs=in_specs,
+                         out_specs=(P(), P()),
+                         check_vma=False)(*operands)
 
 
 def _flat_candidates(items, item_ids, item_mask, codes, ucodes, queries,

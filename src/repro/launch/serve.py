@@ -102,11 +102,16 @@ def build_candidate_index(item_vecs: jnp.ndarray, key: jax.Array,
                           n_bits: int = N_BITS):
     """Offline index build for serving: codes + query-side projection.
 
-    Delegates to ``repro.engine.serving_codes``; returns
-    ``(codes (N, W) uint32, proj_q (D, n_bits))`` with ``codes[i]`` the
-    sketch of ``item_vecs[i]`` (input row order), directly shippable next
-    to ``item_vecs`` as the ``cand_codes`` / ``cand_vecs`` operands of
-    ``sah_retrieve_step``.
+    Builds a kMIPS-only ``IndexArtifact`` (the persistent, hot-swappable
+    index unit of DESIGN.md SS10 — callers that want to ship the index
+    between processes should keep the artifact and ``save`` it) and reads
+    its ``serving_codes``: ``(codes (N, W) uint32, proj_q (D, n_bits))``
+    with ``codes[i]`` the sketch of ``item_vecs[i]`` (input row order),
+    directly shippable next to ``item_vecs`` as the ``cand_codes`` /
+    ``cand_vecs`` operands of ``sah_retrieve_step``.
     """
-    from repro.engine import serving_codes
-    return serving_codes(item_vecs, key, n_bits=n_bits)
+    from repro.engine import IndexArtifact, get_config
+    art = IndexArtifact.build(
+        item_vecs, None, key,
+        config=get_config("sah").replace(n_bits=n_bits))
+    return art.serving_codes()

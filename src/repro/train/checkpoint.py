@@ -106,6 +106,16 @@ def latest_step(ckpt_dir: str) -> int | None:
     return max(steps) if steps else None
 
 
+def read_manifest(ckpt_dir: str, step: int) -> dict:
+    """The manifest of one saved step: leaf index (shapes/dtypes), user
+    metadata, timestamps. Lets a consumer (e.g. the index-artifact loader,
+    engine/artifact.py) build its own `like` tree for restore() without
+    knowing the shapes a priori."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)
+
+
 def restore(ckpt_dir: str, step: int, like,
             shardings=None) -> tuple[Any, dict]:
     """Restore a pytree saved by save().
@@ -116,8 +126,7 @@ def restore(ckpt_dir: str, step: int, like,
     different) mesh -- elastic restore. Returns (tree, metadata).
     """
     path = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = read_manifest(ckpt_dir, step)
     data = np.load(os.path.join(path, "arrays_00000.npz"))
 
     flat_like = _flatten_with_paths(like)

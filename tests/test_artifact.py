@@ -1,0 +1,518 @@
+"""IndexArtifact lifecycle (engine/artifact.py, DESIGN.md SS10).
+
+Pins the artifact contracts: (1) build/attach is bit-for-bit the legacy
+in-engine build; (2) save/load round-trips through the SS6 checkpoint
+machinery with a verified content fingerprint, and a loaded artifact
+attaches onto any ShardingPolicy (the 8-device -> 2x2 mesh change runs in a
+subprocess); (3) streaming corpus deltas — staged inserts are exactly
+scanned, deletions leave every scan, and for exact-scan configs pre-compact
+predictions are bitwise a from-scratch build on the mutated corpus (the
+hypothesis-drawn version lives in tests/test_core_properties.py);
+``compact()`` is bitwise a from-scratch build for every config; (4) churn
+never re-traces: the delta buffer costs one executable ever, delete-only
+churn costs zero, and hot swaps of same-shape versions cost zero on both
+servers while pending tickets survive.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import exact, sah
+from repro.data import synthetic
+from repro.engine import (IndexArtifact, RetrievalServer, RkMIPSEngine,
+                          get_config, load_artifact)
+
+D = 16
+
+
+@pytest.fixture(scope="module")
+def workload():
+    key = jax.random.PRNGKey(23)
+    ki, kq = jax.random.split(key)
+    items, users = synthetic.recommendation_data(ki, 120, 64, D)
+    queries = synthetic.queries_from_items(kq, items, 4)
+    return items, users, queries
+
+
+def _cfg(scan):
+    return get_config("sah").replace(tile=32, n_bits=32, k_max=8, n_top=8,
+                                     leaf_size=8, n_cand=16, scan=scan,
+                                     delta_capacity=8, serve_batch_size=2)
+
+
+_BUILD_KEY = jax.random.PRNGKey(31)
+_LOGICAL = ("blocks_alive", "users_alive", "n_no_lb", "n_yes_norm", "n_scan")
+
+
+def _mutate(art, items, key):
+    """A canonical mutation: 5 staged inserts, deletions hitting the base
+    corpus, a P' member (highest-norm item), and one staged row. Returns
+    (new artifact, the equivalent from-scratch corpus)."""
+    rows = jax.random.normal(key, (5, D)) * 1.2
+    top_id = int(jnp.argmax(jnp.linalg.norm(items, axis=-1)))
+    dels = sorted({0, 7, 55, top_id})
+    a = art.insert_items(rows).delete_items(dels + [items.shape[0] + 1])
+    keep = np.setdiff1d(np.arange(items.shape[0]), dels)
+    mutated = jnp.concatenate([items[keep], rows[np.asarray([0, 2, 3, 4])]])
+    return a, mutated
+
+
+def test_build_attach_parity_and_value_semantics(workload):
+    """from_artifact == legacy engine.build == raw core, bit for bit; and
+    staging deltas returns a NEW version, leaving the attached one alone."""
+    items, users, queries = workload
+    cfg = _cfg("sketch")
+    art = IndexArtifact.build(items, users, _BUILD_KEY, config=cfg)
+    eng_a = RkMIPSEngine.from_artifact(art)
+    eng_b = RkMIPSEngine(cfg).build(items, users, _BUILD_KEY)
+    ra = eng_a.query_batch(queries, 3)
+    rb = eng_b.query_batch(queries, 3)
+    np.testing.assert_array_equal(np.asarray(ra.predictions),
+                                  np.asarray(rb.predictions))
+    idx = sah.build(items, users, _BUILD_KEY, **cfg.build_kwargs())
+    pred, _ = sah.rkmips_batch(idx, queries, 3, **cfg.query_kwargs())
+    po = sah.predictions_to_original(idx, pred, users.shape[0])
+    np.testing.assert_array_equal(np.asarray(ra.predictions), np.asarray(po))
+    # engine.build attaches an artifact of its own
+    assert eng_b.artifact is not None
+    assert eng_b.artifact.fingerprint == art.fingerprint
+    # value semantics: the mutation produces a new version, new fingerprint
+    a2 = art.insert_items(jnp.ones((1, D)))
+    assert a2 is not art and a2.fingerprint != art.fingerprint
+    assert not art.has_pending and a2.has_pending
+    np.testing.assert_array_equal(
+        np.asarray(eng_a.query_batch(queries, 3).predictions),
+        np.asarray(ra.predictions))
+
+
+def test_build_input_validation(workload):
+    """Dimensionality/dtype mistakes fail up front with clear ValueErrors,
+    not as shape errors deep inside sah.build."""
+    items, users, _ = workload
+    eng = RkMIPSEngine(_cfg("sketch"))
+    with pytest.raises(ValueError, match=r"items must be a 2-D \(n, d\)"):
+        eng.build(items[0], users, _BUILD_KEY)
+    with pytest.raises(ValueError, match=r"items must have a floating "
+                                         r"dtype, got int32"):
+        eng.build(jnp.ones((8, D), jnp.int32), users, _BUILD_KEY)
+    with pytest.raises(ValueError, match=r"users must be a 2-D \(m, d\) "
+                                         r"array or None"):
+        eng.build(items, users[0], _BUILD_KEY)
+    with pytest.raises(ValueError, match=r"users dimensionality \(8\) != "
+                                         r"items dimensionality \(16\)"):
+        eng.build(items, users[:, :8], _BUILD_KEY)
+    with pytest.raises(ValueError, match=r"users must have a floating"):
+        eng.build(items, jnp.ones((4, D), jnp.int32), _BUILD_KEY)
+    with pytest.raises(ValueError, match=r"non-empty"):
+        eng.build(items[:0], users, _BUILD_KEY)
+
+
+def test_roundtrip_fingerprint_and_manifest(workload, tmp_path):
+    """save/load round-trips bitwise (predictions AND counters), preserves
+    the fingerprint, and refuses corrupted content."""
+    items, users, queries = workload
+    cfg = _cfg("sketch")
+    art = IndexArtifact.build(items, users, _BUILD_KEY, config=cfg)
+    art.ensure_kmips_index()                      # persist the kMIPS side too
+    path = art.save(str(tmp_path / "art"))
+    assert os.path.exists(os.path.join(path, "manifest.json"))
+    art2 = load_artifact(str(tmp_path / "art"))
+    assert art2.fingerprint == art.fingerprint
+    assert art2.config == cfg
+    assert art2.kmips_index is not None
+    np.testing.assert_array_equal(np.asarray(art2.kmips_index.codes),
+                                  np.asarray(art.kmips_index.codes))
+    r1 = RkMIPSEngine.from_artifact(art).query_batch(queries, 3)
+    r2 = RkMIPSEngine.from_artifact(art2).query_batch(queries, 3)
+    np.testing.assert_array_equal(np.asarray(r1.predictions),
+                                  np.asarray(r2.predictions))
+    for f in _LOGICAL:
+        np.testing.assert_array_equal(np.asarray(getattr(r1.stats, f)),
+                                      np.asarray(getattr(r2.stats, f)))
+    # staged deltas survive persistence
+    a_mut, _ = _mutate(art, items, jax.random.PRNGKey(5))
+    a_mut.save(str(tmp_path / "mut"))
+    a_back = IndexArtifact.load(str(tmp_path / "mut"))
+    assert a_back.has_pending and a_back.fingerprint == a_mut.fingerprint
+    rm1 = RkMIPSEngine.from_artifact(a_mut).query_batch(queries, 3)
+    rm2 = RkMIPSEngine.from_artifact(a_back).query_batch(queries, 3)
+    np.testing.assert_array_equal(np.asarray(rm1.predictions),
+                                  np.asarray(rm2.predictions))
+    # integrity: a tampered manifest fingerprint refuses to load
+    import json
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["metadata"]["fingerprint"] = "0" * 64
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError, match=r"fingerprint mismatch"):
+        IndexArtifact.load(str(tmp_path / "art"))
+    with pytest.raises(FileNotFoundError, match=r"no saved index artifact"):
+        IndexArtifact.load(str(tmp_path / "nothing-here"))
+
+
+def test_delta_exact_equivalence_precompact(workload):
+    """THE streaming contract (hypothesis-free mirror): for exact-scan
+    configs, insert_items/delete_items followed by queries are bitwise a
+    from-scratch build on the mutated corpus — before any compact()."""
+    items, users, queries = workload
+    cfg = _cfg("exact")
+    art = IndexArtifact.build(items, users, _BUILD_KEY, config=cfg)
+    a, mutated = _mutate(art, items, jax.random.PRNGKey(5))
+    np.testing.assert_array_equal(np.asarray(a.effective_items()),
+                                  np.asarray(mutated))
+    eng = RkMIPSEngine.from_artifact(a)
+    ref = RkMIPSEngine(cfg).build(mutated, users, _BUILD_KEY)
+    for k in (1, 3, 8):
+        rd = eng.query_batch(queries, k)
+        rr = ref.query_batch(queries, k)
+        np.testing.assert_array_equal(np.asarray(rd.predictions),
+                                      np.asarray(rr.predictions), err_msg=f"k={k}")
+        # the exact config also equals the oracle on the mutated corpus
+        np.testing.assert_array_equal(np.asarray(rd.predictions),
+                                      np.asarray(eng.oracle(queries, k)))
+    # single-query path agrees with its batch row
+    s = eng.query(queries[0], 3)
+    np.testing.assert_array_equal(np.asarray(s.predictions),
+                                  np.asarray(eng.query_batch(queries, 3)
+                                             .predictions[0]))
+
+
+@pytest.mark.parametrize("scan", ["sketch", "exact"])
+def test_compact_bitwise_from_scratch(workload, scan):
+    """compact() == a cold build on the mutated corpus, bitwise, for every
+    config (predictions and the layout-independent counters)."""
+    items, users, queries = workload
+    cfg = _cfg(scan)
+    art = IndexArtifact.build(items, users, _BUILD_KEY, config=cfg)
+    a, mutated = _mutate(art, items, jax.random.PRNGKey(9))
+    ac = a.compact()
+    assert not ac.has_pending and ac.delta_used == 0
+    assert ac.n_base == a.n_items
+    rc = RkMIPSEngine.from_artifact(ac).query_batch(queries, 3)
+    rr = RkMIPSEngine(cfg).build(mutated, users, _BUILD_KEY).query_batch(
+        queries, 3)
+    np.testing.assert_array_equal(np.asarray(rc.predictions),
+                                  np.asarray(rr.predictions))
+    for f in _LOGICAL:
+        np.testing.assert_array_equal(np.asarray(getattr(rc.stats, f)),
+                                      np.asarray(getattr(rr.stats, f)))
+    # nothing staged -> compact is the identity
+    assert ac.compact() is ac
+
+
+def test_delta_sketch_batched_equals_reference(workload):
+    """For sketch configs the delta pipeline keeps the SS9 discipline: the
+    batched dispatch is bitwise the per-query reference driver run on the
+    same delta view (and the mapped legacy driver agrees too)."""
+    items, users, queries = workload
+    cfg = _cfg("sketch")
+    art = IndexArtifact.build(items, users, _BUILD_KEY, config=cfg)
+    a, _ = _mutate(art, items, jax.random.PRNGKey(11))
+    eng = RkMIPSEngine.from_artifact(a)
+    rb = eng.query_batch(queries, 3)
+    view, d_i, d_m = a.query_view()
+    assert d_i is not None
+    pp = jnp.stack([sah.rkmips(view, q, 3, n_cand=cfg.n_cand, scan="sketch",
+                               chunk=cfg.chunk, tie_eps=cfg.tie_eps,
+                               delta_items=d_i, delta_mask=d_m)[0]
+                    for q in queries])
+    po = sah.predictions_to_original(view, pp, users.shape[0])
+    np.testing.assert_array_equal(np.asarray(rb.predictions), np.asarray(po))
+    rm = eng.query_batch_mapped(queries, 3)
+    np.testing.assert_array_equal(np.asarray(rm.predictions),
+                                  np.asarray(rb.predictions))
+
+
+def test_delta_buffer_bookkeeping(workload):
+    """Capacity is append-only until compact; ids are stable; misuse raises
+    actionable errors."""
+    items, users, _ = workload
+    art = IndexArtifact.build(items, users, _BUILD_KEY, config=_cfg("exact"))
+    n = items.shape[0]
+    assert art.delta_capacity == 8 and art.n_items == n
+    a = art.insert_items(jnp.ones((5, D)))
+    assert a.delta_used == 5 and a.n_items == n + 5
+    a = a.delete_items([n + 4])                    # retire a staged row
+    assert a.n_items == n + 4 and a.delta_used == 5
+    a = a.insert_items(jnp.ones((3, D)))           # slots are append-only
+    assert a.delta_used == 8 and a.n_items == n + 7
+    with pytest.raises(ValueError, match=r"delta buffer full: 1 rows do "
+                                         r"not fit in the 0 free of 8"):
+        a.insert_items(jnp.ones((1, D)))
+    with pytest.raises(ValueError, match=r"item ids must be in \[0, 128\)"):
+        a.delete_items([n + 8])
+    with pytest.raises(ValueError, match=r"rows must be \(r, 16\)"):
+        a.insert_items(jnp.ones((2, D + 1)))
+    with pytest.raises(ValueError, match=r"rows must have a floating"):
+        a.insert_items(jnp.ones((1, D), jnp.int32))
+    # deleting the same id twice is idempotent
+    b = art.delete_items([3]).delete_items([3])
+    assert b.n_items == n - 1
+    # compact resets the buffer and re-keys ids compactly
+    c = a.compact()
+    assert c.delta_used == 0 and c.n_base == n + 7
+    # a (d,) row promotes to (1, d)
+    assert c.insert_items(jnp.ones(D)).delta_used == 1
+
+
+def test_kmips_reflects_deltas(workload):
+    """Forward kMIPS over a delta-carrying artifact: deleted rows leave
+    the scan, staged rows merge in exactly (ids n_base + slot), matching
+    the exact oracle on the effective corpus at full re-rank depth."""
+    items, users, queries = workload
+    cfg = _cfg("exact")
+    art = IndexArtifact.build(items, None, _BUILD_KEY, config=cfg)
+    a, mutated = _mutate(art, items, jax.random.PRNGKey(13))
+    eng = RkMIPSEngine.from_artifact(a)
+    res = eng.kmips(queries, 4, n_cand=items.shape[0])
+    vals, eids = exact.kmips(mutated, queries, 4)
+    np.testing.assert_allclose(np.asarray(res.values), np.asarray(vals),
+                               rtol=1e-6)
+    # ids are the exact oracle's, translated into artifact id space
+    # (surviving base rows keep their original ids; staged row j is
+    # n_base + j) — element-wise, so deleted rows can never appear and a
+    # winning staged row must surface from the merge
+    n0 = items.shape[0]
+    top_id = int(jnp.argmax(jnp.linalg.norm(items, axis=-1)))
+    keep = np.setdiff1d(np.arange(n0), sorted({0, 7, 55, top_id}))
+    live_slots = np.where(np.asarray(a.delta_mask))[0]
+    eff_to_art = np.concatenate([keep, n0 + live_slots])
+    np.testing.assert_array_equal(np.asarray(res.ids),
+                                  eff_to_art[np.asarray(eids)])
+
+
+def test_kmips_only_artifact_deltas(workload):
+    """A kMIPS-only artifact (users=None) carries deltas too: attach wires
+    the buffer even without a user-side index, so forward answers reflect
+    staged rows and deletions (regression: the merge must not silently
+    drop the buffer on the users=None attach path)."""
+    items, _, queries = workload
+    cfg = _cfg("exact")
+    art = IndexArtifact.build(items, None, _BUILD_KEY, config=cfg)
+    a = art.insert_items(items[:2] * 1.5).delete_items([0])
+    res = RkMIPSEngine.from_artifact(a).kmips(queries, 5,
+                                              n_cand=items.shape[0])
+    vals, _ = exact.kmips(a.effective_items(), queries, 5)
+    np.testing.assert_allclose(np.asarray(res.values), np.asarray(vals),
+                               rtol=1e-6)
+    # the boosted staged copies dominate their originals: staged ids
+    # (n_base + slot) must actually surface from the merge
+    assert (np.asarray(res.ids) >= items.shape[0]).any()
+    with pytest.raises(RuntimeError, match=r"not built for RkMIPS"):
+        RkMIPSEngine.from_artifact(a).query(queries[0], 3)
+
+
+def test_churn_never_retraces(workload):
+    """One executable for the plain pipeline, at most one more for the
+    delta pipeline — ever: inserts, deletions, swaps and compact reuse
+    them as long as shapes are unchanged."""
+    items, users, queries = workload
+    cfg = _cfg("sketch")
+    art = IndexArtifact.build(items, users, _BUILD_KEY, config=cfg)
+    eng = RkMIPSEngine.from_artifact(art)
+    eng.query_batch(queries, 3)
+    assert eng.rkmips_compile_count == 1
+    eng.attach(art.delete_items([1, 2]))          # delete-only: plain path
+    eng.query_batch(queries, 3)
+    assert eng.rkmips_compile_count == 1
+    a = art.insert_items(jnp.ones((2, D)))
+    eng.attach(a)                                  # the one extra compile
+    eng.query_batch(queries, 3)
+    assert eng.rkmips_compile_count == 2
+    eng.attach(a.insert_items(jnp.ones((3, D))).delete_items([9]))
+    eng.query_batch(queries, 3)
+    assert eng.rkmips_compile_count == 2
+    compacted = a.compact()                        # 122 rows: same padded
+    eng.attach(compacted)                          # shapes as the base
+    eng.query_batch(queries, 3)
+    assert eng.rkmips_compile_count == 2
+
+
+def test_server_swap_keeps_tickets_and_executables(workload):
+    """Hot swap on both servers: pending tickets are answered against the
+    new version, in order, with zero new compiles for same-shape versions;
+    the forward cache keeps old versions warm under their fingerprints."""
+    items, users, queries = workload
+    cfg = _cfg("sketch")
+    k2 = jax.random.PRNGKey(41)
+    items_v2 = items + 0.01 * jax.random.normal(k2, items.shape)
+    art = IndexArtifact.build(items, users, _BUILD_KEY, config=cfg)
+    art2 = IndexArtifact.build(items_v2, users, _BUILD_KEY, config=cfg)
+
+    eng = RkMIPSEngine.from_artifact(art)
+    rsrv = eng.reverse_server()
+    rsrv.submit(queries[:2])
+    rsrv.flush(3)
+    c0 = rsrv.compile_count
+    rsrv.submit(queries)                           # 4 pending tickets
+    rsrv.swap(art2)
+    assert rsrv.pending == 4
+    res = rsrv.flush(3)
+    assert rsrv.compile_count == c0                # zero new executables
+    ref = RkMIPSEngine.from_artifact(art2).query_batch(queries, 3)
+    for i, r in enumerate(res):
+        np.testing.assert_array_equal(np.asarray(r.predictions),
+                                      np.asarray(ref.predictions[i]))
+    # swapping in a kMIPS-only artifact is refused BEFORE touching the
+    # engine: pending tickets stay servable afterwards
+    rsrv.submit(queries[:2])
+    with pytest.raises(RuntimeError, match=r"not built for RkMIPS"):
+        rsrv.swap(IndexArtifact.build(items, None, _BUILD_KEY, config=cfg))
+    assert rsrv.pending == 2 and eng.artifact is art2
+    refused = rsrv.flush(3)
+    assert len(refused) == 2
+    np.testing.assert_array_equal(np.asarray(refused[0].predictions),
+                                  np.asarray(ref.predictions[0]))
+
+    fsrv = RetrievalServer.from_artifact(art)
+    assert fsrv.cache.builds == 0                  # seeded when available
+    fsrv.submit(queries[:3])
+    fsrv.flush(3)
+    cc, b0 = fsrv.compile_count, fsrv.cache.builds
+    fsrv.submit(queries[:2])
+    fsrv.swap(art2)
+    assert fsrv.pending == 2
+    out = fsrv.flush(3)
+    assert len(out) == 2
+    assert fsrv.compile_count == cc                # same (batch, k) shapes
+    assert fsrv.cache.builds == b0 + 1             # v2 built once
+    assert fsrv.cache.fingerprint == art2.fingerprint
+    fsrv.swap(art)                                 # swap back: still cached
+    fsrv.submit(queries[0])
+    fsrv.flush(3)
+    assert fsrv.cache.builds == b0 + 1
+
+
+def test_attach_guards(workload):
+    items, users, queries = workload
+    cfg = _cfg("sketch")
+    art = IndexArtifact.build(items, users, _BUILD_KEY, config=cfg)
+    with pytest.raises(TypeError, match=r"attach expects an IndexArtifact"):
+        RkMIPSEngine(cfg).attach("not-an-artifact")
+    other = RkMIPSEngine(cfg.replace(n_bits=64))
+    with pytest.raises(ValueError, match=r"artifact config does not match"):
+        other.attach(art)
+    # delta_capacity is a lifecycle knob, not a recipe field: configs
+    # differing only there are interchangeable (engine/config.py contract)
+    wider = RkMIPSEngine(cfg.replace(delta_capacity=64)).attach(art)
+    np.testing.assert_array_equal(
+        np.asarray(wider.query_batch(queries, 3).predictions),
+        np.asarray(RkMIPSEngine.from_artifact(art)
+                   .query_batch(queries, 3).predictions))
+    km_only = IndexArtifact.build(items, None, _BUILD_KEY, config=cfg)
+    with pytest.raises(RuntimeError, match=r"no user-side index"):
+        km_only.query_view()
+
+
+def test_server_ids_agree_with_engine_kmips(workload):
+    """The two forward surfaces of one delta-carrying artifact answer in
+    the same id space: a hot-swapped RetrievalServer's ids are artifact
+    ids (base ids preserved across deletions; staged row j = n_base + j),
+    matching engine.kmips id-for-id."""
+    items, _, queries = workload
+    cfg = _cfg("exact")
+    art = IndexArtifact.build(items, None, _BUILD_KEY, config=cfg)
+    a, _ = _mutate(art, items, jax.random.PRNGKey(17))
+    eng = RkMIPSEngine.from_artifact(a)
+    srv = RetrievalServer.from_artifact(a)
+    srv.submit(queries)
+    served = srv.flush(4, n_cand=items.shape[0])
+    ref = eng.kmips(queries, 4, n_cand=items.shape[0])
+    for i, r in enumerate(served):
+        np.testing.assert_array_equal(np.asarray(r.ids),
+                                      np.asarray(ref.ids[i]))
+        np.testing.assert_allclose(np.asarray(r.values),
+                                   np.asarray(ref.values[i]), rtol=1e-6)
+    # swap() adopts the new config's cache capacity along with the rest
+    art_cap = IndexArtifact.build(
+        items, None, _BUILD_KEY,
+        config=cfg.replace(serve_cache_capacity=7))
+    srv.swap(art_cap)
+    assert srv.cache.capacity == 7
+
+
+_ELASTIC_SCRIPT = r"""
+import os, tempfile
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.engine import IndexArtifact, RkMIPSEngine, get_config
+from repro.dist.policy import ShardingPolicy
+from repro.data import synthetic
+
+key = jax.random.PRNGKey(0)
+ki, kq, kb, kd = jax.random.split(key, 4)
+items, users = synthetic.recommendation_data(ki, 509, 1013, 32)  # primes
+queries = synthetic.queries_from_items(kq, items, 3)
+cfg = get_config("sah").replace(tile=128, n_bits=64, delta_capacity=16)
+
+art = IndexArtifact.build(items, users, kb, config=cfg)
+mesh8 = jax.make_mesh((2, 4), ("data", "model"))
+eng8 = RkMIPSEngine.from_artifact(art, policy=ShardingPolicy(mesh=mesh8,
+                                                             rules={}))
+r8 = eng8.query_batch(queries, 10)
+
+with tempfile.TemporaryDirectory() as d:
+    art.save(d)                                   # host-gathered, any mesh
+    art2 = IndexArtifact.load(d)
+assert art2.fingerprint == art.fingerprint
+
+mesh4 = jax.sharding.Mesh(np.asarray(jax.devices()[:4]).reshape(2, 2),
+                          ("data", "model"))
+eng4 = RkMIPSEngine.from_artifact(art2, policy=ShardingPolicy(mesh=mesh4,
+                                                              rules={}))
+eng1 = RkMIPSEngine.from_artifact(art2)
+r4 = eng4.query_batch(queries, 10)
+r1 = eng1.query_batch(queries, 10)
+for r in (r4, r1):
+    np.testing.assert_array_equal(np.asarray(r8.predictions),
+                                  np.asarray(r.predictions))
+    for f in ("blocks_alive", "users_alive", "n_no_lb", "n_yes_norm",
+              "n_scan"):
+        np.testing.assert_array_equal(np.asarray(getattr(r8.stats, f)),
+                                      np.asarray(getattr(r.stats, f)))
+print("elastic roundtrip OK")
+
+# Staged deltas shard too: delta counts are shard-local, psum'd counters
+# and gathered predictions bitwise equal the single-device delta path.
+rows = jax.random.normal(kd, (7, 32))
+a = art.insert_items(rows).delete_items([2, 100, 509 + 1])
+eng8.attach(a); eng1.attach(a)
+d8 = eng8.query_batch(queries, 10)
+d1 = eng1.query_batch(queries, 10)
+np.testing.assert_array_equal(np.asarray(d8.predictions),
+                              np.asarray(d1.predictions))
+for f in ("blocks_alive", "users_alive", "n_no_lb", "n_yes_norm", "n_scan"):
+    np.testing.assert_array_equal(np.asarray(getattr(d8.stats, f)),
+                                  np.asarray(getattr(d1.stats, f)))
+print("sharded delta OK")
+
+# swap on a mesh: same shapes, no new dispatch signatures
+n0 = eng8.rkmips_compile_count
+eng8.attach(a.insert_items(jax.random.normal(kq, (2, 32))))
+eng8.query_batch(queries, 10)
+assert eng8.rkmips_compile_count == n0, eng8.rkmips_compile_count
+print("mesh swap zero-retrace OK")
+print("ALL ARTIFACT ELASTIC OK")
+"""
+
+
+@pytest.mark.slow
+def test_artifact_elastic_mesh_change():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", _ELASTIC_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "ALL ARTIFACT ELASTIC OK" in out.stdout
+    assert "elastic roundtrip OK" in out.stdout
+    assert "sharded delta OK" in out.stdout
+    assert "mesh swap zero-retrace OK" in out.stdout

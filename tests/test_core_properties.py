@@ -319,3 +319,55 @@ def test_pack_unpack_hamming(n, w):
     d = srp.hamming_distance(ca, cb)
     expect = jnp.sum(signs_a[:, None, :] != signs_b[None, :, :], axis=-1)
     np.testing.assert_array_equal(np.asarray(d), np.asarray(expect))
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(st.integers(40, 90), st.integers(10, 40),
+                  st.integers(0, 6), st.integers(0, 8), st.integers(1, 4),
+                  st.integers(0, 5))
+def test_delta_buffer_exact_equals_from_scratch(n, m, n_ins, n_del, k,
+                                                seed):
+    """Streaming corpus deltas (engine/artifact.py, DESIGN.md SS10): for
+    exact-scan configs, insert_items/delete_items followed by queries are
+    bitwise a from-scratch build on the mutated corpus, for any drawn
+    corpus size, user count, insert/delete mix and k — before compact();
+    and compact() is bitwise a from-scratch build including counters."""
+    from repro.engine import IndexArtifact, RkMIPSEngine, get_config
+    key = jax.random.PRNGKey(seed * 1009 + n)
+    ki, ku, kq, kb, kn, kd = jax.random.split(key, 6)
+    items = jax.random.normal(ki, (n, 8))
+    users = jax.random.normal(ku, (m, 8))
+    queries = jax.random.normal(kq, (2, 8)) * 1.5
+    cfg = get_config("exact").replace(tile=16, n_bits=32, k_max=4, n_top=4,
+                                      leaf_size=8, delta_capacity=8)
+    art = IndexArtifact.build(items, users, kb, config=cfg)
+    a = art
+    if n_ins:
+        a = a.insert_items(jax.random.normal(kn, (n_ins, 8)))
+    dels = np.unique(np.asarray(
+        jax.random.randint(kd, (n_del,), 0, n + n_ins))) if n_del else []
+    if len(dels):
+        a = a.delete_items(dels)
+    hypothesis.assume(a.n_items > k)           # keep the decision nontrivial
+    keep = np.setdiff1d(np.arange(n), [d for d in dels if d < n])
+    live = np.asarray(a.delta_mask)[: n_ins] if n_ins else np.zeros(0, bool)
+    staged = np.asarray(a.delta_items)[:n_ins][live] if n_ins else \
+        np.zeros((0, 8), np.float32)
+    mutated = jnp.asarray(np.concatenate([np.asarray(items)[keep], staged]))
+    np.testing.assert_array_equal(np.asarray(a.effective_items()),
+                                  np.asarray(mutated))
+    eng = RkMIPSEngine.from_artifact(a)
+    ref = RkMIPSEngine(cfg).build(mutated, users, kb)
+    rd = eng.query_batch(queries, k)
+    rr = ref.query_batch(queries, k)
+    np.testing.assert_array_equal(np.asarray(rd.predictions),
+                                  np.asarray(rr.predictions))
+    np.testing.assert_array_equal(np.asarray(rd.predictions),
+                                  np.asarray(eng.oracle(queries, k)))
+    rc = RkMIPSEngine.from_artifact(a.compact()).query_batch(queries, k)
+    np.testing.assert_array_equal(np.asarray(rc.predictions),
+                                  np.asarray(rr.predictions))
+    for f in ("blocks_alive", "users_alive", "n_no_lb", "n_yes_norm",
+              "n_scan"):
+        np.testing.assert_array_equal(np.asarray(getattr(rc.stats, f)),
+                                      np.asarray(getattr(rr.stats, f)), f)

@@ -213,24 +213,36 @@ def test_kmips_recall(workload):
 
 
 def test_serving_codes_row_order():
-    """serving_codes returns sketches in *input* row order: row i's code
-    must equal the code build_index computed for the item that landed at
-    original row i (the launch/serve.py contract)."""
+    """Artifact serving_codes returns sketches in *input* row order: row
+    i's code must equal the code the artifact's kMIPS index computed for
+    the item that landed at original row i (the launch/serve.py contract);
+    the legacy ``engine.serving_codes`` shim forwards to the same surface
+    and warns."""
     key = jax.random.PRNGKey(7)
     items = jax.random.normal(key, (96, 16))
-    codes, proj_q = engine_mod.serving_codes(items, key, n_bits=64)
+    cfg = get_config("sah").replace(n_bits=64)
+    art = engine_mod.IndexArtifact.build(items, None, key, config=cfg)
+    codes, proj_q = art.serving_codes()
     assert codes.shape == (96, 2) and codes.dtype == jnp.uint32
     assert proj_q.shape == (16, 64)
-    from repro.core import sa_alsh
-    cfg = get_config("sah")
-    idx = sa_alsh.build_index(items, key, b=cfg.b, n_bits=64,
-                              tile=min(cfg.tile, 96),
-                              max_partitions=cfg.max_partitions,
-                              transform=cfg.transform)
+    idx = art.kmips_index                   # built eagerly for users=None
     ids = np.asarray(idx.item_ids)
     mask = np.asarray(idx.item_mask)
     np.testing.assert_array_equal(np.asarray(codes)[ids[mask]],
                                   np.asarray(idx.codes)[mask])
+    np.testing.assert_array_equal(np.asarray(proj_q),
+                                  np.asarray(idx.proj[:-1]))
+    # the deprecated shim: same codes, same projection, plus a warning
+    with pytest.warns(DeprecationWarning, match=r"serving_codes is "
+                                                r"deprecated"):
+        codes_shim, proj_shim = engine_mod.serving_codes(items, key,
+                                                         n_bits=64)
+    np.testing.assert_array_equal(np.asarray(codes_shim), np.asarray(codes))
+    np.testing.assert_array_equal(np.asarray(proj_shim), np.asarray(proj_q))
+    # launch/serve.py::build_candidate_index rides the artifact surface
+    from repro.launch import serve as serve_mod
+    codes_l, proj_l = serve_mod.build_candidate_index(items, key, n_bits=64)
+    np.testing.assert_array_equal(np.asarray(codes_l), np.asarray(codes))
 
 
 _SHARDED_SCRIPT = r"""

@@ -102,6 +102,38 @@ def test_cache_hit_returns_identical_arrays_without_rebuild(corpus,
     np.testing.assert_array_equal(np.asarray(s3.codes), np.asarray(s1.codes))
 
 
+def test_cache_lru_eviction_order(corpus, server_cfg):
+    """LRU semantics under capacity pressure: a get() refreshes recency, so
+    the evictee is the least-recently-USED entry, not the oldest-built;
+    ``builds`` counts exactly the misses; query-only config changes share
+    one entry (and refresh it)."""
+    items, _ = corpus
+    cache = ServingCache(items, jax.random.PRNGKey(21), capacity=2)
+    cfg_a = server_cfg                                  # three distinct
+    cfg_b = server_cfg.replace(n_bits=32)               # index recipes
+    cfg_c = server_cfg.replace(n_bits=96)
+    sa = cache.get(cfg_a)
+    cache.get(cfg_b)
+    assert len(cache) == 2 and cache.builds == 2
+    # touch A via a query-only variant: same entry, recency refreshed
+    assert cache.get(cfg_a.replace(n_cand=128, serve_batch_size=2)) is sa
+    assert cache.builds == 2
+    cache.get(cfg_c)                                    # evicts B, not A
+    assert len(cache) == 2 and cache.builds == 3
+    assert cfg_a in cache and cfg_c in cache and cfg_b not in cache
+    assert cache.get(cfg_a) is sa and cache.builds == 3
+    cache.get(cfg_b)                                    # miss: rebuild,
+    assert cache.builds == 4                            # evicts C (LRU)
+    assert cfg_c not in cache and cfg_a in cache
+    # put() of a pre-built state counts no build and obeys capacity
+    cache.put(cfg_c, build_serving_state(items, jax.random.PRNGKey(21),
+                                         cfg_c))
+    assert cache.builds == 4 and len(cache) == 2        # put counts no miss
+    assert cfg_a not in cache                           # A was LRU by then
+    with pytest.raises(ValueError, match=r"capacity must be >= 1"):
+        ServingCache(items, jax.random.PRNGKey(21), capacity=0)
+
+
 def test_server_ranks_with_engine_codes(corpus, server_cfg):
     """engine.server() must scan with the identical SRP codes as
     engine.kmips(), whether the engine's kMIPS index was built eagerly
