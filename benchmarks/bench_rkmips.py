@@ -28,7 +28,71 @@ def _prev_prime(n: int) -> int:
     return 2
 
 
-def run(n=8192, m=16384, d=64, nq=16, ks=(1, 5, 10, 20, 30, 40, 50)):
+def build_grid(n=2048, d=64, ms=(4096, 16384, 65536), k_max=50,
+               n_bits=128):
+    """Index-build m-scaling grid: single-device vs mesh-sharded staged
+    build (engine/build.py, DESIGN.md SS11).
+
+    One cell per (m, path): total staged-build wall time (warm — the
+    second build, so stage compiles are excluded and the cell tracks the
+    actual array work) with the per-stage split in ``derived``. The
+    sharded columns appear only when the process has a multi-device
+    backend (``python -m benchmarks.run --host-devices 8 ...``); their
+    ``derived`` records the speedup over the single-device build at the
+    same m, and the builds are asserted fingerprint-identical first.
+
+    Caveat for the checked-in baseline: forced host devices all share one
+    CPU's cores, and the single-device GEMM already multi-threads across
+    them — so on ``--host-devices`` the sharded column measures pure
+    sharding overhead (speedup < 1, converging toward parity as m grows
+    and the per-shard work amortizes the dispatch). Real speedup needs
+    devices with disjoint compute; the cell exists to pin the overhead
+    trend and the bitwise-equality check, not to advertise host-CPU wins.
+    """
+    import jax
+
+    from repro.data import synthetic
+    from repro.dist.policy import ShardingPolicy
+    from repro.engine import IndexArtifact, get_config
+
+    cfg = get_config("sah").replace(k_max=k_max, n_bits=n_bits)
+    policy = None
+    if jax.device_count() > 1:
+        mesh = jax.make_mesh((jax.device_count(),), ("data",))
+        policy = ShardingPolicy(mesh=mesh, rules={})
+
+    rows = []
+    for m in ms:
+        items, users = synthetic.recommendation_data(
+            jax.random.PRNGKey(0), n, m, d, kind="nmf")
+        kb = jax.random.PRNGKey(1)
+
+        def timed_build(**kw):
+            IndexArtifact.build(items, users, kb, config=cfg, **kw)  # warm
+            return IndexArtifact.build(items, users, kb, config=cfg, **kw)
+
+        art = timed_build()
+        tm = art.build_timings
+        rows.append(common.fmt_row(
+            f"table1/build_grid/m={m}/single", tm.total * 1e6,
+            f"n={n};d={d};codes={tm.item_codes * 1e6:.0f}us;"
+            f"block={tm.user_blocking * 1e6:.0f}us;"
+            f"lb={tm.lower_bounds * 1e6:.0f}us"))
+        if policy is not None:
+            art_s = timed_build(policy=policy)
+            assert art_s.fingerprint == art.fingerprint, \
+                "sharded build must be fingerprint-identical (DESIGN SS11)"
+            tm_s = art_s.build_timings
+            rows.append(common.fmt_row(
+                f"table1/build_grid/m={m}/sharded", tm_s.total * 1e6,
+                f"devices={policy.device_count};"
+                f"speedup={tm.total / tm_s.total:.2f};"
+                f"lb={tm_s.lower_bounds * 1e6:.0f}us"))
+    return rows
+
+
+def run(n=8192, m=16384, d=64, nq=16, ks=(1, 5, 10, 20, 30, 40, 50),
+        build_ms=(4096, 16384, 65536)):
     wl = common.make_workload("nmf", n, m, d, nq, ks)
     rows = []
     for method in common.METHODS:
@@ -77,4 +141,8 @@ def run(n=8192, m=16384, d=64, nq=16, ks=(1, 5, 10, 20, 30, 40, 50)):
     rows.append(common.fmt_row(
         f"fig1/query/sah-odd/k={ks[0]}", dt * 1e6,
         f"f1={f1:.3f};scanned={int(stats.n_scan.mean())}"))
+
+    # Index-build m-scaling grid (DESIGN.md SS11): single-device vs
+    # mesh-sharded staged build at growing user counts.
+    rows.extend(build_grid(n=n, d=d, ms=build_ms))
     return rows

@@ -4,8 +4,12 @@ Prints ``name,us_per_call,derived`` CSV. Scale with --scale {smoke,bench}.
 ``--json PATH`` additionally writes the rows plus environment metadata as
 JSON — the format of the checked-in perf baselines (BENCH_rkmips.json):
 
-    PYTHONPATH=src python -m benchmarks.run --scale smoke --only rkmips \
-        --json BENCH_rkmips.json
+    PYTHONPATH=src python -m benchmarks.run --scale smoke \
+        --only rkmips,artifact --host-devices 8 --json BENCH_rkmips.json
+
+``--host-devices N`` forces an N-device host (CPU) backend before jax
+initializes, which turns on the mesh-sharded build columns of the rkmips
+suite (engine/build.py) on a single machine.
 """
 
 from __future__ import annotations
@@ -13,6 +17,7 @@ from __future__ import annotations
 import argparse
 import datetime
 import json
+import os
 import sys
 import time
 
@@ -30,7 +35,19 @@ def main() -> None:
                          "params,kernels,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + run metadata as JSON")
+    ap.add_argument("--host-devices", type=int, default=None, metavar="N",
+                    help="force N host (CPU) devices before jax "
+                         "initializes — enables the mesh-sharded build "
+                         "columns of the rkmips suite on one machine")
     args = ap.parse_args()
+
+    if args.host_devices:
+        # must land before the first jax import (pulled in transitively by
+        # the benchmarks import below)
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count"
+              f"={args.host_devices}").strip()
 
     from benchmarks import (bench_artifact, bench_kernels, bench_kmips,
                             bench_params, bench_rkmips, bench_roofline)

@@ -44,6 +44,8 @@ def main():
     print(f"SAH index built in {eng.build_seconds:.2f}s "
           f"(partitions={int(eng.index.alsh.n_parts)}, "
           f"cone blocks={eng.index.n_blocks})")
+    # per-stage breakdown of the staged build pipeline (DESIGN.md SS11)
+    print(eng.build_timings.format())
 
     res = eng.query_batch(queries, args.k)
     dt = res.seconds / args.queries

@@ -121,6 +121,34 @@ def build_cone_blocks(users_unit: jnp.ndarray, key: jax.Array,
     return blocks, padded, mask
 
 
+def norm_blocks(users_unit: jnp.ndarray, leaf_size: int = 32
+                ) -> tuple[ConeBlocks, jnp.ndarray, jnp.ndarray]:
+    """Simpfer-style blocking: contiguous leaf_size chunks in input order.
+
+    With unit users, Simpfer's norm intervals degenerate to a single
+    interval, so its blocks are arbitrary contiguous runs (DESIGN.md SS3).
+    The chunks still get honest cone statistics (center / omega / theta of
+    whatever users landed together), so Lemmas 2-3 apply unchanged — the
+    blocks just prune worse than Cone-Tree leaves.
+
+    Same return contract as ``build_cone_blocks``: (blocks, padded_users,
+    user_mask), with ``perm`` the identity (no reordering). One helper for
+    both the legacy ``sah.build`` path and the staged build pipeline
+    (``engine/build.py``), which must agree bitwise.
+    """
+    padded, mask, n_leaves = pad_users(users_unit, leaf_size)
+    perm = jnp.arange(padded.shape[0], dtype=jnp.int32)
+    xl = padded.reshape(n_leaves, leaf_size, -1)
+    center = jnp.mean(xl, axis=1)
+    cnorm = jnp.linalg.norm(center, axis=-1, keepdims=True)
+    cos = jnp.einsum("bld,bd->bl", xl, center) / jnp.maximum(cnorm, 1e-12)
+    theta_2d = jnp.arccos(jnp.clip(cos, -1.0, 1.0))
+    omega = jnp.max(theta_2d, axis=-1)
+    blocks = ConeBlocks(perm=perm, center=center, omega=omega,
+                        theta=theta_2d.reshape(-1))
+    return blocks, padded, mask
+
+
 def node_upper_bound(q: jnp.ndarray, blocks: ConeBlocks) -> jnp.ndarray:
     """Lemma 2: max_{u in B} <u, q> <= ||q|| cos({phi - omega}_+), per block.
 

@@ -36,7 +36,7 @@ free.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -103,10 +103,38 @@ def _pad_rows(x: jnp.ndarray, n_pad: int, fill=0):
     return jnp.pad(x, widths, constant_values=fill)
 
 
+class PreparedItems(NamedTuple):
+    """Item-side build state minus the SRP codes (stage 2a of the staged
+    build pipeline, DESIGN.md SS11).
+
+    Everything here is the output of one jitted, sequential computation
+    (norm sort + partition scan + asymmetric transform). What remains --
+    hashing ``transformed`` row-by-row against a projection -- is
+    embarrassingly row-parallel, so the staged pipeline
+    (``engine/build.py``) shards exactly that step over the mesh.
+
+    All row-shaped fields are already padded to ``n_pad`` rows; padding
+    rows of ``transformed`` are zero, so their codes are the hash of the
+    zero vector no matter how rows are sharded.
+    """
+
+    items: jnp.ndarray          # (n_pad, d) descending-norm order
+    item_ids: jnp.ndarray       # (n_pad,) int32, -1 padding
+    norms: jnp.ndarray          # (n_pad,) f32
+    item_mask: jnp.ndarray      # (n_pad,) bool
+    part_id: jnp.ndarray        # (n_pad,) int32
+    part_max_norm: jnp.ndarray  # (T,) f32
+    part_centroid: jnp.ndarray  # (T, d) f32
+    part_radius: jnp.ndarray    # (T,) f32
+    n_parts: jnp.ndarray        # () int32
+    tile_max_norm: jnp.ndarray  # (n_tiles,) f32
+    transformed: jnp.ndarray    # (n_pad, d+1) f32 rows to hash; 0 padding
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("b", "n_bits", "max_partitions", "tile",
+                   static_argnames=("b", "max_partitions", "tile",
                                     "transform", "n_pad"))
-def _build(items, key, *, b, n_bits, max_partitions, tile, transform, n_pad):
+def _prepare(items, *, b, max_partitions, tile, transform, n_pad):
     n, d = items.shape
     norms = jnp.linalg.norm(items, axis=-1)
     order = jnp.argsort(-norms)
@@ -115,8 +143,6 @@ def _build(items, key, *, b, n_bits, max_partitions, tile, transform, n_pad):
 
     parts = _parts.build_partitions(items_sorted, norms_sorted, b,
                                     max_partitions)
-
-    proj = _srp.make_projection(key, d + 1, n_bits)
 
     # Per-item asymmetric transform using its partition's centroid / scale.
     if transform == "sat":
@@ -132,37 +158,72 @@ def _build(items, key, *, b, n_bits, max_partitions, tile, transform, n_pad):
         raise ValueError(f"unknown transform {transform!r}")
     transformed = jnp.concatenate([shifted, jnp.sqrt(ext2)[:, None]], -1)
 
-    codes = kops.srp_hash(_pad_rows(transformed, n_pad), proj)
-
     item_mask = _pad_rows(jnp.ones((n,), bool), n_pad)
     norms_p = _pad_rows(norms_sorted, n_pad)
     tile_max = jnp.max(norms_p.reshape(-1, tile), axis=-1)
 
-    return SAALSHIndex(
+    return PreparedItems(
         items=_pad_rows(items_sorted, n_pad),
         item_ids=_pad_rows(order.astype(jnp.int32), n_pad, fill=-1),
         norms=norms_p,
         item_mask=item_mask,
-        codes=codes,
-        proj=proj,
         part_id=_pad_rows(parts.part_id, n_pad, fill=max_partitions - 1),
         part_max_norm=parts.max_norm,
         part_centroid=parts.centroid,
         part_radius=parts.radius,
         n_parts=parts.n_parts,
         tile_max_norm=tile_max,
+        transformed=_pad_rows(transformed, n_pad),
+    )
+
+
+def prepare_items(items: jnp.ndarray, *, b: float = 0.5,
+                  max_partitions: int = 64, tile: int = 512,
+                  transform: str = "sat") -> PreparedItems:
+    """Stage 2a: norm-sort, partition and transform items (no hashing)."""
+    n = items.shape[0]
+    n_pad = -(-n // tile) * tile
+    return _prepare(items, b=b, max_partitions=max_partitions, tile=tile,
+                    transform=transform, n_pad=n_pad)
+
+
+def assemble_index(prep: PreparedItems, codes: jnp.ndarray,
+                   proj: jnp.ndarray) -> SAALSHIndex:
+    """Stage 2c: combine prepared item state with its SRP codes."""
+    return SAALSHIndex(
+        items=prep.items,
+        item_ids=prep.item_ids,
+        norms=prep.norms,
+        item_mask=prep.item_mask,
+        codes=codes,
+        proj=proj,
+        part_id=prep.part_id,
+        part_max_norm=prep.part_max_norm,
+        part_centroid=prep.part_centroid,
+        part_radius=prep.part_radius,
+        n_parts=prep.n_parts,
+        tile_max_norm=prep.tile_max_norm,
     )
 
 
 def build_index(items: jnp.ndarray, key: jax.Array, *, b: float = 0.5,
                 n_bits: int = 128, max_partitions: int = 64,
-                tile: int = 512, transform: str = "sat") -> SAALSHIndex:
-    """Build an SA-ALSH (transform="sat") or H2-ALSH-style (="qnf") index."""
-    n = items.shape[0]
-    n_pad = -(-n // tile) * tile
-    return _build(items, key, b=b, n_bits=n_bits,
-                  max_partitions=max_partitions, tile=tile,
-                  transform=transform, n_pad=n_pad)
+                tile: int = 512, transform: str = "sat",
+                hash_rows: Callable[[jnp.ndarray, jnp.ndarray],
+                                    jnp.ndarray] | None = None
+                ) -> SAALSHIndex:
+    """Build an SA-ALSH (transform="sat") or H2-ALSH-style (="qnf") index.
+
+    hash_rows(rows, proj) -> codes overrides the SRP hashing step (stage
+    2b); the staged build pipeline passes a mesh-sharded row hasher here.
+    Row hashing is independent per row, so any row-sliced hasher is
+    bitwise equal to the default full-array ``kops.srp_hash``.
+    """
+    prep = prepare_items(items, b=b, max_partitions=max_partitions,
+                         tile=tile, transform=transform)
+    proj = _srp.make_projection(key, items.shape[1] + 1, n_bits)
+    codes = (hash_rows or kops.srp_hash)(prep.transformed, proj)
+    return assemble_index(prep, codes, proj)
 
 
 def user_codes(index: SAALSHIndex, users: jnp.ndarray) -> jnp.ndarray:

@@ -87,73 +87,144 @@ class SAHIndex(NamedTuple):
         return self.users.shape[0]
 
 
-def build(items: jnp.ndarray, users: jnp.ndarray, key: jax.Array, *,
-          k_max: int = 50, n_top: int | None = None, leaf_size: int = 32,
-          b: float = 0.5, n_bits: int = 128, tile: int = 512,
-          max_partitions: int = 64, transform: str = "sat",
-          blocking: str = "cone") -> SAHIndex:
-    """Build the SAH index (Algorithm 4). items (n,d), users (m,d)."""
-    if n_top is None:
-        n_top = 2 * k_max
-    k_idx, k_cone = jax.random.split(jax.random.fold_in(key, 0))
+# ---------------------------------------------------------------------------
+# Build stages (Algorithm 4 as a pipeline).
+#
+# ``build`` below composes four pure stage functions. engine/build.py
+# composes the SAME functions with per-stage timing and optional mesh
+# sharding of the row-parallel steps (SRP hashing over items, lower-bound
+# rows over users); both compositions are bitwise identical by
+# construction. Stage contract: DESIGN.md SS11.
+# ---------------------------------------------------------------------------
 
+
+class NormSplit(NamedTuple):
+    """Stage 1 output: items split into P' (top n_top by norm) and the rest.
+
+    ``order`` maps sorted position -> original item row (the argsort of
+    descending norm); ``rest`` rows are positions n_top.. of that order.
+    """
+
+    order: jnp.ndarray       # (n,) sorted position -> original row
+    top_items: jnp.ndarray   # (n_top, d) P' vectors, descending norm
+    top_ids: jnp.ndarray     # (n_top,) int32 original rows of P'
+    top_norms: jnp.ndarray   # (n_top,) f32 descending
+    rest: jnp.ndarray        # (n - n_top, d) remaining items, sorted
+
+
+class UserBlocking(NamedTuple):
+    """Stage 3 output: users blocked into leaves (cone or norm order)."""
+
+    users: jnp.ndarray       # (m_pad, d) unit users, leaf order
+    user_ids: jnp.ndarray    # (m_pad,) int32 original user row
+    user_mask: jnp.ndarray   # (m_pad,) real (non-duplicate) users
+    center: jnp.ndarray      # (n_blocks, d)
+    omega: jnp.ndarray       # (n_blocks,)
+    theta: jnp.ndarray       # (m_pad,)
+
+
+def build_keys(key: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(k_idx, k_cone): the per-stage keys every build path must derive
+    identically -- part of the fingerprint-stability contract."""
+    k_idx, k_cone = jax.random.split(jax.random.fold_in(key, 0))
+    return k_idx, k_cone
+
+
+def split_items_by_norm(items: jnp.ndarray, n_top: int) -> NormSplit:
+    """Stage 1: descending-norm sort + top-``n_top`` split (P' vs rest)."""
     norms = jnp.linalg.norm(items, axis=-1)
     order = jnp.argsort(-norms)
     items_sorted = items[order]
-    top_items = items_sorted[:n_top]
-    top_ids = order[:n_top].astype(jnp.int32)
-    top_norms = norms[order][:n_top]
-    rest = items_sorted[n_top:]
+    return NormSplit(order=order,
+                     top_items=items_sorted[:n_top],
+                     top_ids=order[:n_top].astype(jnp.int32),
+                     top_norms=norms[order][:n_top],
+                     rest=items_sorted[n_top:])
 
-    alsh = _alsh.build_index(rest, k_idx, b=b, n_bits=n_bits, tile=tile,
-                             max_partitions=max_partitions,
-                             transform=transform)
-    # alsh.item_ids index `rest`; shift them back to original rows.
-    alsh = alsh._replace(item_ids=jnp.where(
+
+def shift_item_ids(alsh: _alsh.SAALSHIndex, order: jnp.ndarray,
+                   n_top: int) -> _alsh.SAALSHIndex:
+    """Stage 2 epilogue: alsh.item_ids index ``rest``; shift them back to
+    original item rows (padding stays -1)."""
+    return alsh._replace(item_ids=jnp.where(
         alsh.item_ids >= 0,
         jnp.take(order.astype(jnp.int32),
                  jnp.clip(alsh.item_ids, 0, None) + n_top),
         -1))
 
+
+def block_users(users: jnp.ndarray, key: jax.Array, *, leaf_size: int = 32,
+                blocking: str = "cone") -> UserBlocking:
+    """Stage 3: unit-normalize users and block them (cone tree or
+    Simpfer-style contiguous "norm" chunks)."""
     unorm = jnp.linalg.norm(users, axis=-1, keepdims=True)
     users_unit = users / jnp.maximum(unorm, 1e-12)
 
     if blocking == "cone":
-        blocks, padded, mask = _cone.build_cone_blocks(users_unit, k_cone,
+        blocks, padded, mask = _cone.build_cone_blocks(users_unit, key,
                                                        leaf_size)
-        perm = blocks.perm
-        center, omega, theta = blocks.center, blocks.omega, blocks.theta
     elif blocking == "norm":
-        # Simpfer-style blocking: contiguous chunks (unit users degenerate
-        # Simpfer's norm intervals to a single interval; see DESIGN.md).
-        padded, mask, n_leaves = _cone.pad_users(users_unit, leaf_size)
-        perm = jnp.arange(padded.shape[0], dtype=jnp.int32)
-        xl = padded.reshape(n_leaves, leaf_size, -1)
-        center = jnp.mean(xl, axis=1)
-        cnorm = jnp.linalg.norm(center, axis=-1, keepdims=True)
-        cos = jnp.einsum("bld,bd->bl", xl, center) / jnp.maximum(cnorm, 1e-12)
-        theta_2d = jnp.arccos(jnp.clip(cos, -1.0, 1.0))
-        omega = jnp.max(theta_2d, axis=-1)
-        theta = theta_2d.reshape(-1)
+        blocks, padded, mask = _cone.norm_blocks(users_unit, leaf_size)
     else:
         raise ValueError(f"unknown blocking {blocking!r}")
 
-    users_leaf = padded[perm]
+    perm = blocks.perm
     m = users.shape[0]
-    user_ids = (perm % m).astype(jnp.int32)
-    user_mask = mask[perm]
+    return UserBlocking(users=padded[perm],
+                        user_ids=(perm % m).astype(jnp.int32),
+                        user_mask=mask[perm],
+                        center=blocks.center, omega=blocks.omega,
+                        theta=blocks.theta)
 
-    lb = _simpfer.user_lower_bounds(users_leaf, top_items, k_max)
-    n_blocks = center.shape[0]
+
+def lower_bounds(users_leaf: jnp.ndarray, user_mask: jnp.ndarray,
+                 top_items: jnp.ndarray, k_max: int, n_blocks: int, *,
+                 lb_rows=None) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Stage 4: Simpfer per-user and per-block lower bounds over P'.
+
+    lb_rows(users, top_items, k_max) -> (m, k_max) overrides the
+    lower-bound computation; the staged pipeline passes a user-sharded
+    version of ``simpfer.user_lower_bounds_impl`` here (each row is
+    independent, so any row slicing is bitwise equal)."""
+    lb_fn = lb_rows or _simpfer.user_lower_bounds
+    lb = lb_fn(users_leaf, top_items, k_max)
     block_lb = _simpfer.block_lower_bounds(
         jnp.where(user_mask[:, None], lb, jnp.inf), n_blocks)
     # All-padding blocks (impossible with cyclic padding, but be safe):
     block_lb = jnp.where(jnp.isfinite(block_lb), block_lb, -jnp.inf)
+    return lb, block_lb
 
-    return SAHIndex(alsh=alsh, users=users_leaf, user_ids=user_ids,
-                    user_mask=user_mask, center=center, omega=omega,
-                    theta=theta, user_lb=lb, block_lb=block_lb,
-                    top_norms=top_norms, top_items=top_items, top_ids=top_ids)
+
+def build(items: jnp.ndarray, users: jnp.ndarray, key: jax.Array, *,
+          k_max: int = 50, n_top: int | None = None, leaf_size: int = 32,
+          b: float = 0.5, n_bits: int = 128, tile: int = 512,
+          max_partitions: int = 64, transform: str = "sat",
+          blocking: str = "cone") -> SAHIndex:
+    """Build the SAH index (Algorithm 4). items (n,d), users (m,d).
+
+    Single-device composition of the build stages; engine/build.py runs
+    the same stages with timing and optional mesh sharding.
+    """
+    if n_top is None:
+        n_top = 2 * k_max
+    k_idx, k_cone = build_keys(key)
+
+    split = split_items_by_norm(items, n_top)
+    alsh = _alsh.build_index(split.rest, k_idx, b=b, n_bits=n_bits,
+                             tile=tile, max_partitions=max_partitions,
+                             transform=transform)
+    alsh = shift_item_ids(alsh, split.order, n_top)
+
+    ub = block_users(users, k_cone, leaf_size=leaf_size, blocking=blocking)
+
+    lb, block_lb = lower_bounds(ub.users, ub.user_mask, split.top_items,
+                                k_max, ub.center.shape[0])
+
+    return SAHIndex(alsh=alsh, users=ub.users, user_ids=ub.user_ids,
+                    user_mask=ub.user_mask, center=ub.center, omega=ub.omega,
+                    theta=ub.theta, user_lb=lb, block_lb=block_lb,
+                    top_norms=split.top_norms, top_items=split.top_items,
+                    top_ids=split.top_ids)
 
 
 class QueryStats(NamedTuple):

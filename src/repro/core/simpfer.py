@@ -26,10 +26,9 @@ import jax
 import jax.numpy as jnp
 
 
-@functools.partial(jax.jit, static_argnames=("kmax",))
-def user_lower_bounds(users_unit: jnp.ndarray, top_items: jnp.ndarray,
-                      kmax: int, *, mask: jnp.ndarray | None = None
-                      ) -> jnp.ndarray:
+def user_lower_bounds_impl(users_unit: jnp.ndarray, top_items: jnp.ndarray,
+                           kmax: int, *, mask: jnp.ndarray | None = None
+                           ) -> jnp.ndarray:
     """L (m, kmax) descending: top-kmax IPs of each user over P'.
 
     mask (n_top,) excludes retired P' members (their IPs become -inf, so
@@ -38,12 +37,23 @@ def user_lower_bounds(users_unit: jnp.ndarray, top_items: jnp.ndarray,
     (engine/artifact.py). When fewer than kmax members survive, the -inf
     tail keeps every bound vacuous and init_count exact over the
     survivors.
+
+    Every row is independent (one dot per (user, item) pair plus a per-row
+    top_k), which is what makes the stage trivially row-parallel over
+    users: the staged build pipeline (engine/build.py) runs this
+    undecorated body per user shard under ``shard_map``, bitwise equal to
+    the full-matrix call. Call ``user_lower_bounds`` (the jitted alias)
+    everywhere else.
     """
     ips = users_unit @ top_items.T                       # (m, n_top)
     if mask is not None:
         ips = jnp.where(mask[None, :], ips, -jnp.inf)
     vals, _ = jax.lax.top_k(ips, kmax)
     return vals
+
+
+user_lower_bounds = functools.partial(
+    jax.jit, static_argnames=("kmax",))(user_lower_bounds_impl)
 
 
 def block_lower_bounds(user_lb_perm: jnp.ndarray, n_blocks: int

@@ -99,6 +99,15 @@ class ShardingPolicy:
         """Size of the tensor/model-parallel axis (1 without a mesh)."""
         return self.axis_size(TP_AXIS_NAME)
 
+    @property
+    def device_count(self) -> int:
+        """Total device count of the mesh (1 without a mesh) — the shard
+        count of anything row-sharded over every mesh axis (the RkMIPS
+        engine's user/item rows, the staged build's row-parallel stages)."""
+        if self.mesh is None:
+            return 1
+        return int(self.mesh.devices.size)
+
 
 NO_SHARDING = ShardingPolicy(mesh=None, rules={})
 

@@ -12,6 +12,11 @@ This package is the only public way to run (R)kMIPS (DESIGN.md SS7):
     checkpoints, attach to engines on any mesh, stage streaming corpus
     deltas (``insert_items`` / ``delete_items`` / ``compact``), hot-swap
     into live servers;
+  * the **staged build pipeline** (engine/build.py, DESIGN.md SS11) —
+    Algorithm 4 as four pure stages with declared sharding axes;
+    ``build_sah_index`` runs the row-parallel stages single-device or over
+    a mesh (``EngineConfig.build_sharding``) with a bitwise-identical
+    artifact either way, and reports a per-stage ``BuildTimings``;
   * ``RkMIPSEngine`` — build / attach / query / query_batch / kmips /
     oracle, with predictions always in original user-id space and an
     optional ``ShardingPolicy`` that shards the heavy scans over a mesh;
@@ -32,6 +37,8 @@ arrays, timings, lazy kMIPS index, pending serving tickets) lives here.
 
 from repro.engine.artifact import (IndexArtifact, corpus_fingerprint,
                                    load_artifact)
+from repro.engine.build import (BuildTimings, build_sah_index,
+                                validate_build_knobs)
 from repro.engine.config import (EngineConfig, PAPER_BASELINES, TIE_EPS_DEFAULT,
                                  display_name, get_config, method_names,
                                  register)
@@ -43,6 +50,7 @@ from repro.engine.serving import (RetrievalServer, ReverseResult,
                                   state_from_index)
 
 __all__ = [
+    "BuildTimings",
     "EngineConfig",
     "IndexArtifact",
     "KMIPSResult",
@@ -57,6 +65,7 @@ __all__ = [
     "ServingCache",
     "ServingState",
     "TIE_EPS_DEFAULT",
+    "build_sah_index",
     "build_serving_state",
     "corpus_fingerprint",
     "display_name",
@@ -66,4 +75,5 @@ __all__ = [
     "register",
     "serving_codes",
     "state_from_index",
+    "validate_build_knobs",
 ]

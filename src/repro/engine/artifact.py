@@ -53,6 +53,8 @@ import numpy as np
 from repro.core import sa_alsh as _alsh
 from repro.core import sah as _sah
 from repro.core import simpfer as _simpfer
+from repro.dist.policy import NO_SHARDING, ShardingPolicy
+from repro.engine import build as _build
 from repro.engine.config import EngineConfig, get_config
 from repro.train import checkpoint as _ckpt
 
@@ -157,6 +159,10 @@ class IndexArtifact:
         self.delta_items = delta_items      # (capacity, d) staged rows
         self.delta_mask = delta_mask        # (capacity,) bool live rows
         self.delta_used = int(delta_used)   # slots consumed (append-only)
+        # Transient diagnostics of the build that made this version (a
+        # BuildTimings, engine/build.py), None when wired from pieces or
+        # loaded from disk; never part of the fingerprint or the manifest.
+        self.build_timings = None
         self._kmips = kmips_index           # lazy memo (derived content)
         self._kmips_view = None
         self._base_fp: str | None = None    # hash of the built base content
@@ -168,10 +174,15 @@ class IndexArtifact:
     @classmethod
     def build(cls, items: jnp.ndarray, users: jnp.ndarray | None,
               key: jax.Array, *, config: EngineConfig | str = "sah",
-              delta_capacity: int | None = None) -> "IndexArtifact":
-        """Build a fresh artifact: ``sah.build`` exactly as the raw core
-        path would consume (items, users, key, config) — an engine built
-        ``from_artifact`` is bit-for-bit the legacy ``build()`` engine.
+              delta_capacity: int | None = None,
+              policy: ShardingPolicy = NO_SHARDING) -> "IndexArtifact":
+        """Build a fresh artifact through the staged build pipeline
+        (engine/build.py) — bitwise the legacy ``sah.build`` result, so an
+        engine built ``from_artifact`` is bit-for-bit the ``build()``
+        engine, and ``policy`` (with ``config.build_sharding``) only
+        changes *where* the row-parallel stages run, never the artifact's
+        content or fingerprint (DESIGN.md SS11). The per-stage wall-time
+        breakdown lands on ``self.build_timings``.
 
         ``users=None`` builds a kMIPS-only artifact (the SA-ALSH index over
         the full corpus is built eagerly; with users it stays lazy).
@@ -182,23 +193,28 @@ class IndexArtifact:
         if isinstance(config, str):
             config = get_config(config)
         _validate_corpus(items, users)
+        _build.validate_build_knobs(config)
         cap = config.delta_capacity if delta_capacity is None \
             else int(delta_capacity)
         if cap < 1:
             raise ValueError(f"delta_capacity must be >= 1, got {cap}")
-        index = kmips = None
+        index = kmips = timings = None
         if users is None:
             kmips = _alsh.build_index(
                 items, jax.random.fold_in(key, KMIPS_KEY_TAG),
                 **config.kmips_build_kwargs(items.shape[0]))
         else:
-            index = _sah.build(items, users, key, **config.build_kwargs())
+            index, timings = _build.build_sah_index(items, users, key,
+                                                    config=config,
+                                                    policy=policy)
         n, d = items.shape
-        return cls(config=config, key=key, items=items, users=users,
-                   index=index, kmips_index=kmips,
-                   deleted=jnp.zeros((n,), bool),
-                   delta_items=jnp.zeros((cap, d), items.dtype),
-                   delta_mask=jnp.zeros((cap,), bool), delta_used=0)
+        art = cls(config=config, key=key, items=items, users=users,
+                  index=index, kmips_index=kmips,
+                  deleted=jnp.zeros((n,), bool),
+                  delta_items=jnp.zeros((cap, d), items.dtype),
+                  delta_mask=jnp.zeros((cap,), bool), delta_used=0)
+        art.build_timings = timings
+        return art
 
     def _evolve(self, **overrides) -> "IndexArtifact":
         kw = dict(config=self.config, key=self.key, items=self.items,
@@ -214,6 +230,7 @@ class IndexArtifact:
         # hot-swaps stay O(cap*d)
         child._base_fp = self._base_fp
         child._users_unit = self._users_unit
+        child.build_timings = self.build_timings
         return child
 
     # -- identity ----------------------------------------------------------
@@ -267,7 +284,11 @@ class IndexArtifact:
         if self._fingerprint is None:
             if self._base_fp is None:
                 b = hashlib.sha256(f"{_KIND}-v{_FORMAT}".encode())
-                b.update(repr(dataclasses.astuple(self.config)).encode())
+                # build_sharding is execution-only: the built content is
+                # bitwise identical either way (DESIGN.md SS11), so a
+                # sharded build must fingerprint-match a single-device one
+                cfg = self.config.replace(build_sharding="auto")
+                b.update(repr(dataclasses.astuple(cfg)).encode())
                 b.update(_array_bytes(self.key))
                 b.update(_array_bytes(self.items))
                 b.update(b"users" if self.users is None
@@ -478,17 +499,23 @@ class IndexArtifact:
             deleted=self.deleted.at[base].set(True),
             delta_mask=self.delta_mask.at[slots].set(False))
 
-    def compact(self) -> "IndexArtifact":
+    def compact(self, *, policy: ShardingPolicy = NO_SHARDING
+                ) -> "IndexArtifact":
         """Fold every staged change into a fresh from-scratch build on the
         effective corpus (same users, same key, same config) — bitwise the
         artifact a cold ``build`` would produce on the mutated corpus —
         and reset the delta buffer. Returns self when nothing is staged.
+
+        ``policy``: run the rebuild's row-parallel stages on a mesh
+        (engine/build.py) — same artifact bitwise, smaller stop-the-world
+        window for hot-swap serving.
         """
         if self.delta_used == 0 and not bool(np.asarray(self.deleted).any()):
             return self
         return IndexArtifact.build(self.effective_items(), self.users,
                                    self.key, config=self.config,
-                                   delta_capacity=self.delta_capacity)
+                                   delta_capacity=self.delta_capacity,
+                                   policy=policy)
 
     # -- serving surface ---------------------------------------------------
 

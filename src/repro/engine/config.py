@@ -35,6 +35,7 @@ TIE_EPS_DEFAULT = 1e-5
 _TRANSFORMS = ("sat", "qnf")
 _BLOCKINGS = ("cone", "norm")
 _SCANS = ("sketch", "exact")
+_BUILD_SHARDINGS = ("auto", "single", "sharded")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -75,6 +76,17 @@ class EngineConfig:
                       matter how often the corpus churns. Not part of any
                       build recipe (two configs differing only here share
                       serving state and produce identical indexes).
+
+    Build-execution knobs (engine/build.py, DESIGN.md SS11):
+      build_sharding: how the staged build pipeline runs its row-parallel
+                      stages — "auto" (shard when the policy carries a
+                      multi-device mesh, the default), "single" (always
+                      single-device), or "sharded" (require a mesh).
+                      Execution-only: the built index is bitwise identical
+                      either way, so the knob is excluded from the
+                      artifact fingerprint and from ``attach`` config
+                      equality (like ``delta_capacity``, it is not part of
+                      the build recipe).
     """
 
     k_max: int = 50
@@ -93,8 +105,13 @@ class EngineConfig:
     serve_batch_size: int = 8
     serve_cache_capacity: int = 4
     delta_capacity: int = 256
+    build_sharding: str = "auto"
 
     def __post_init__(self):
+        if self.build_sharding not in _BUILD_SHARDINGS:
+            raise ValueError(f"build_sharding must be one of "
+                             f"{_BUILD_SHARDINGS}, "
+                             f"got {self.build_sharding!r}")
         if self.transform not in _TRANSFORMS:
             raise ValueError(f"transform must be one of {_TRANSFORMS}, "
                              f"got {self.transform!r}")

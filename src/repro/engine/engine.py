@@ -211,18 +211,23 @@ class RkMIPSEngine:
         """Index ``items`` (n, d) for ``users`` (m, d). Returns self.
 
         Sugar for ``attach(IndexArtifact.build(items, users, key,
-        config=self.config))`` — bit-for-bit the raw ``sah.build`` path
-        with this config's kwargs. ``users=None`` builds a kMIPS-only
-        engine (no user-side SAH index): ``kmips()`` works, ``query*()``
-        raise. The kMIPS index key is derived with the same ``fold_in``
-        tag whether it is built eagerly (users=None) or lazily on first
-        ``kmips()``, so ``server()`` and every kMIPS path rank with the
-        identical SRP codes. Inputs are validated up front (2-D, floating,
-        matching dimensionality) with a clear ``ValueError``.
+        config=self.config, policy=self.policy))`` — bit-for-bit the raw
+        ``sah.build`` path with this config's kwargs (the staged pipeline
+        of engine/build.py; under a mesh policy the row-parallel stages
+        shard per ``config.build_sharding``, same artifact bitwise).
+        ``users=None`` builds a kMIPS-only engine (no user-side SAH
+        index): ``kmips()`` works, ``query*()`` raise. The kMIPS index
+        key is derived with the same ``fold_in`` tag whether it is built
+        eagerly (users=None) or lazily on first ``kmips()``, so
+        ``server()`` and every kMIPS path rank with the identical SRP
+        codes. Inputs are validated up front (2-D, floating, matching
+        dimensionality; positive build knobs) with a clear ``ValueError``.
+        The per-stage wall-time breakdown lands on ``self.build_timings``.
         """
         t0 = time.perf_counter()
         art = _artifact.IndexArtifact.build(items, users, key,
-                                            config=self.config)
+                                            config=self.config,
+                                            policy=self.policy)
         self.attach(art)
         self.build_seconds = time.perf_counter() - t0
         return self
@@ -250,11 +255,13 @@ class RkMIPSEngine:
         if not isinstance(artifact, _artifact.IndexArtifact):
             raise TypeError(f"attach expects an IndexArtifact, got "
                             f"{type(artifact).__name__}")
-        # delta_capacity is a lifecycle knob, not a build/query recipe
-        # field (engine/config.py): the artifact's own buffer governs, so
-        # configs differing only there are interchangeable here
+        # delta_capacity and build_sharding are lifecycle/execution knobs,
+        # not build/query recipe fields (engine/config.py): the artifact's
+        # own buffer governs, the built content is sharding-independent,
+        # so configs differing only there are interchangeable here
         if artifact.config.replace(
-                delta_capacity=self.config.delta_capacity) != self.config:
+                delta_capacity=self.config.delta_capacity,
+                build_sharding=self.config.build_sharding) != self.config:
             raise ValueError(
                 "artifact config does not match this engine's config; use "
                 "RkMIPSEngine.from_artifact(artifact) (or rebuild the "
@@ -305,6 +312,13 @@ class RkMIPSEngine:
         """The full-base-corpus SA-ALSH index (built lazily on first use,
         memoized on the attached artifact)."""
         return self._require_artifact().ensure_kmips_index()
+
+    @property
+    def build_timings(self):
+        """Per-stage ``BuildTimings`` of the attached artifact's build
+        (engine/build.py), or None when the artifact was loaded from disk
+        / wired from pieces rather than built this process."""
+        return None if self.artifact is None else self.artifact.build_timings
 
     def _check_k(self, k: int) -> None:
         if not 1 <= k <= self.config.k_max:

@@ -67,9 +67,7 @@ _BLOCK_AXIS_FIELDS = ("center", "omega", "block_lb")
 
 def n_shards(policy: ShardingPolicy) -> int:
     """Total device count of the policy's mesh (1 without a mesh)."""
-    if policy.mesh is None:
-        return 1
-    return policy.mesh.devices.size
+    return policy.device_count
 
 
 def pad_index(index: _sah.SAHIndex, shards: int) -> _sah.SAHIndex:

@@ -1,0 +1,366 @@
+"""Staged build pipeline tests (engine/build.py, DESIGN.md SS11).
+
+The contract under test: ``build_sah_index`` composes the same stage
+functions as ``core/sah.py::build``, so (a) the single-device staged build
+is bitwise identical to the legacy monolith for every registry method, and
+(b) sharding the row-parallel stages — SRP hashing over item rows, Simpfer
+lower bounds over user rows — changes nothing, bit for bit, for ANY shard
+count and ANY (prime, non-divisible) m/n. (a)+(b) are what make the
+sharded-on-a-mesh artifact fingerprint-identical (and leaf-for-leaf
+bitwise identical) to the single-device one; the real 8-device mesh is
+pinned by the slow subprocess test at the bottom, the in-process tests
+pin the same row-slicing through the ``shards`` simulation seam.
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cone as cone_lib
+from repro.core import sah as sah_lib
+from repro.engine import (IndexArtifact, RkMIPSEngine, get_config,
+                          method_names)
+from repro.engine.build import (BuildTimings, build_sah_index,
+                                validate_build_knobs)
+
+KEY = jax.random.PRNGKey(11)
+# Primes on purpose: nothing divides the shard counts below.
+N_ITEMS, M_USERS, DIM = 509, 131, 16
+
+
+def _corpus(n=N_ITEMS, m=M_USERS, d=DIM):
+    ki, ku = jax.random.split(KEY)
+    items = jax.random.normal(ki, (n, d)) * \
+        jnp.linspace(0.5, 2.0, n)[:, None]
+    users = jax.random.normal(ku, (m, d))
+    return items, users
+
+
+def _cfg(method="sah", **kw):
+    base = dict(k_max=4, tile=64, n_bits=64, leaf_size=8)
+    base.update(kw)
+    return get_config(method).replace(**base)
+
+
+def _assert_index_equal(a, b, ctx=""):
+    paths = [str(p) for p, _ in jax.tree_util.tree_flatten_with_path(a)[0]]
+    for name, la, lb in zip(paths, jax.tree.leaves(a), jax.tree.leaves(b)):
+        la, lb = np.asarray(la), np.asarray(lb)
+        assert la.dtype == lb.dtype and la.shape == lb.shape, (ctx, name)
+        np.testing.assert_array_equal(la, lb, err_msg=f"{ctx} leaf {name}")
+
+
+# ---------------------------------------------------------------------------
+# Staged composition == legacy monolith, per registry method.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("method", method_names())
+def test_staged_build_matches_legacy_bitwise(method):
+    items, users = _corpus()
+    cfg = _cfg(method)
+    kb = jax.random.fold_in(KEY, 3)
+    staged, timings = build_sah_index(items, users, kb, config=cfg)
+    legacy = sah_lib.build(items, users, kb, **cfg.build_kwargs())
+    _assert_index_equal(staged, legacy, ctx=method)
+    assert isinstance(timings, BuildTimings) and not timings.sharded
+    assert timings.total >= 0 and "single-device" in timings.format()
+
+
+# ---------------------------------------------------------------------------
+# Sharded == single-device, bitwise (simulated row slicing; the real-mesh
+# shard_map is pinned by the slow subprocess test).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("shards", [2, 3, 5, 8])
+def test_sharded_build_bitwise_equal(shards):
+    items, users = _corpus()
+    cfg = _cfg()
+    kb = jax.random.fold_in(KEY, 3)
+    single, t0 = build_sah_index(items, users, kb, config=cfg)
+    sharded, t1 = build_sah_index(items, users, kb, config=cfg,
+                                  shards=shards)
+    assert not t0.sharded and t1.sharded and "sharded" in t1.format()
+    _assert_index_equal(sharded, single, ctx=f"shards={shards}")
+
+
+@pytest.mark.parametrize("n,m", [(97, 7), (130, 64), (259, 101)])
+def test_sharded_build_bitwise_equal_odd_sizes(n, m):
+    # Non-shard-divisible and prime row counts ride the dead zero-row
+    # padding of row_parallel; the padding must never leak into results.
+    items, users = _corpus(n=n, m=m)
+    cfg = _cfg(k_max=3, tile=32, leaf_size=4)
+    kb = jax.random.fold_in(KEY, 5)
+    single, _ = build_sah_index(items, users, kb, config=cfg)
+    for shards in (3, 8):
+        sharded, _ = build_sah_index(items, users, kb, config=cfg,
+                                     shards=shards)
+        _assert_index_equal(sharded, single, ctx=f"n={n} m={m} s={shards}")
+
+
+def test_sharded_build_property():
+    """Hypothesis property: arbitrary (n, m, shards) -> bitwise equality."""
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    cfg = _cfg(k_max=2, tile=16, leaf_size=4, n_bits=32)
+    kb = jax.random.fold_in(KEY, 7)
+
+    @hypothesis.settings(max_examples=15, deadline=None,
+                         suppress_health_check=[
+                             hypothesis.HealthCheck.too_slow])
+    @hypothesis.given(n=st.integers(8, 120), m=st.integers(2, 60),
+                      shards=st.integers(2, 9))
+    def prop(n, m, shards):
+        items, users = _corpus(n=n, m=m, d=8)
+        single, _ = build_sah_index(items, users, kb, config=cfg)
+        sharded, _ = build_sah_index(items, users, kb, config=cfg,
+                                     shards=shards)
+        _assert_index_equal(sharded, single,
+                            ctx=f"n={n} m={m} s={shards}")
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: cone.norm_blocks parity with the reference inline math.
+# ---------------------------------------------------------------------------
+
+
+def test_norm_blocks_parity():
+    _, users = _corpus()
+    uu = users / jnp.linalg.norm(users, axis=-1, keepdims=True)
+    leaf = 8
+    blocks, padded, mask = cone_lib.norm_blocks(uu, leaf)
+    # Reference: the math sah.build used to inline for blocking="norm".
+    ref_padded, ref_mask, n_leaves = cone_lib.pad_users(uu, leaf)
+    xl = ref_padded.reshape(n_leaves, leaf, -1)
+    center = jnp.mean(xl, axis=1)
+    cnorm = jnp.linalg.norm(center, axis=-1, keepdims=True)
+    cos = jnp.einsum("bld,bd->bl", xl, center) / jnp.maximum(cnorm, 1e-12)
+    theta = jnp.arccos(jnp.clip(cos, -1.0, 1.0))
+    np.testing.assert_array_equal(np.asarray(blocks.perm),
+                                  np.arange(ref_padded.shape[0]))
+    np.testing.assert_array_equal(np.asarray(padded), np.asarray(ref_padded))
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(ref_mask))
+    np.testing.assert_array_equal(np.asarray(blocks.center),
+                                  np.asarray(center))
+    np.testing.assert_array_equal(np.asarray(blocks.omega),
+                                  np.asarray(jnp.max(theta, axis=-1)))
+    np.testing.assert_array_equal(np.asarray(blocks.theta),
+                                  np.asarray(theta.reshape(-1)))
+    assert blocks.n_blocks == n_leaves and blocks.leaf_size == leaf
+
+
+def test_norm_blocks_same_contract_as_cone():
+    # Both helpers must return the (blocks, padded, mask) triple sah.build
+    # consumes, with perm/theta indexing the padded array.
+    _, users = _corpus(m=37)
+    uu = users / jnp.linalg.norm(users, axis=-1, keepdims=True)
+    for helper in (cone_lib.norm_blocks,
+                   lambda u, l: cone_lib.build_cone_blocks(
+                       u, jax.random.fold_in(KEY, 1), l)):
+        blocks, padded, mask = helper(uu, 8)
+        m_pad = padded.shape[0]
+        assert blocks.perm.shape == (m_pad,)
+        assert blocks.theta.shape == (m_pad,)
+        assert mask.shape == (m_pad,)
+        assert int(np.asarray(mask).sum()) == 37
+        assert blocks.center.shape[0] * blocks.leaf_size == m_pad
+
+
+# ---------------------------------------------------------------------------
+# Satellite: build-knob validation before tracing.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("knob", ["k_max", "leaf_size", "n_bits", "tile"])
+@pytest.mark.parametrize("bad", [0, -3])
+def test_build_rejects_nonpositive_knobs(knob, bad):
+    items, users = _corpus(n=64, m=8)
+    cfg = _cfg()
+    # EngineConfig validates at construction; corrupt the frozen instance
+    # to model a config that reached build() without passing __post_init__.
+    object.__setattr__(cfg, knob, bad)
+    with pytest.raises(ValueError,
+                       match=f"build knob {knob} must be a positive int"):
+        validate_build_knobs(cfg)
+    with pytest.raises(ValueError,
+                       match=f"build knob {knob} must be a positive int"):
+        IndexArtifact.build(items, users, jax.random.fold_in(KEY, 2),
+                            config=cfg)
+    with pytest.raises(ValueError, match=f"build knob {knob}"):
+        build_sah_index(items, users, jax.random.fold_in(KEY, 2),
+                        config=cfg)
+
+
+def test_build_rejects_unaligned_n_bits():
+    cfg = _cfg()
+    object.__setattr__(cfg, "n_bits", 48)
+    with pytest.raises(ValueError, match="multiple of 32"):
+        validate_build_knobs(cfg)
+
+
+def test_build_rejects_small_n_top():
+    cfg = _cfg()
+    object.__setattr__(cfg, "n_top", 2)   # < k_max = 4
+    with pytest.raises(ValueError, match="n_top .* must be >= k_max"):
+        validate_build_knobs(cfg)
+
+
+def test_engine_config_validates_build_sharding():
+    with pytest.raises(ValueError, match="build_sharding must be one of"):
+        _cfg(build_sharding="mesh")
+    for mode in ("auto", "single", "sharded"):
+        assert _cfg(build_sharding=mode).build_sharding == mode
+
+
+# ---------------------------------------------------------------------------
+# build_sharding semantics + lifecycle integration.
+# ---------------------------------------------------------------------------
+
+
+def test_build_sharding_single_overrides_shards():
+    items, users = _corpus(n=64, m=16)
+    cfg = _cfg(build_sharding="single")
+    _, timings = build_sah_index(items, users, jax.random.fold_in(KEY, 2),
+                                 config=cfg, shards=4)
+    assert not timings.sharded
+
+
+def test_build_sharding_sharded_requires_mesh():
+    items, users = _corpus(n=64, m=16)
+    cfg = _cfg(build_sharding="sharded")
+    with pytest.raises(ValueError, match="requires a multi-device mesh"):
+        build_sah_index(items, users, jax.random.fold_in(KEY, 2),
+                        config=cfg)
+    # ... but the shards testing seam satisfies it.
+    _, timings = build_sah_index(items, users, jax.random.fold_in(KEY, 2),
+                                 config=cfg, shards=2)
+    assert timings.sharded
+
+
+def test_fingerprint_ignores_build_sharding():
+    items, users = _corpus(n=64, m=16)
+    kb = jax.random.fold_in(KEY, 2)
+    fps = {IndexArtifact.build(items, users, kb,
+                               config=_cfg(build_sharding=m)).fingerprint
+           for m in ("auto", "single")}
+    assert len(fps) == 1
+
+
+def test_attach_ignores_build_sharding():
+    items, users = _corpus(n=64, m=16)
+    kb = jax.random.fold_in(KEY, 2)
+    art = IndexArtifact.build(items, users, kb,
+                              config=_cfg(build_sharding="single"))
+    eng = RkMIPSEngine(_cfg(build_sharding="auto")).attach(art)
+    assert eng.artifact is art
+
+
+def test_engine_build_exposes_timings():
+    items, users = _corpus(n=64, m=16)
+    eng = RkMIPSEngine(_cfg()).build(items, users,
+                                     jax.random.fold_in(KEY, 2))
+    tm = eng.build_timings
+    assert isinstance(tm, BuildTimings)
+    assert tm.total == pytest.approx(tm.norm_split + tm.item_codes
+                                     + tm.user_blocking + tm.lower_bounds)
+    assert "norm-split" in tm.format()
+    # compact() on a mutated artifact rebuilds through the pipeline:
+    art2 = eng.artifact.insert_items(items[:2]).compact()
+    assert isinstance(art2.build_timings, BuildTimings)
+    # lifecycle mutations inherit the base build's timings
+    assert art2.insert_items(items[:1]).build_timings is art2.build_timings
+
+
+# ---------------------------------------------------------------------------
+# Real 8-device host mesh (subprocess; CI job distributed-build).
+# ---------------------------------------------------------------------------
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import tempfile
+import jax, jax.numpy as jnp, numpy as np
+import repro
+from repro.dist.policy import ShardingPolicy
+from repro.engine import IndexArtifact, RkMIPSEngine, get_config, \
+    method_names
+
+key = jax.random.PRNGKey(11)
+ki, ku = jax.random.split(key)
+# primes: neither axis divides 8 devices or the 2x4 mesh
+items = jax.random.normal(ki, (509, 16)) * \
+    jnp.linspace(0.5, 2.0, 509)[:, None]
+users = jax.random.normal(ku, (131, 16))
+kb = jax.random.fold_in(key, 3)
+
+meshes = [jax.make_mesh((8,), ("data",)),
+          jax.make_mesh((2, 4), ("data", "model"))]
+
+for method in method_names():
+    cfg = get_config(method).replace(k_max=4, tile=64, n_bits=64,
+                                     leaf_size=8)
+    single = IndexArtifact.build(items, users, kb, config=cfg)
+    assert not single.build_timings.sharded
+    for mesh in meshes:
+        pol = ShardingPolicy(mesh=mesh, rules={})
+        art = IndexArtifact.build(items, users, kb, config=cfg, policy=pol)
+        assert art.build_timings.sharded
+        assert art.fingerprint == single.fingerprint, (method, mesh.shape)
+        for a, b in zip(jax.tree.leaves(art.index),
+                        jax.tree.leaves(single.index)):
+            a, b = np.asarray(a), np.asarray(b)
+            assert a.dtype == b.dtype and np.array_equal(a, b), \
+                (method, mesh.shape)
+    print(f"{method} mesh-build bitwise OK")
+print("all registry methods fingerprint-identical OK")
+
+# build_sharding="single" under a mesh: same artifact, no shard_map
+pol = ShardingPolicy(mesh=meshes[0], rules={})
+cfg = get_config("sah").replace(k_max=4, tile=64, n_bits=64, leaf_size=8)
+forced = IndexArtifact.build(items, users, kb,
+                             config=cfg.replace(build_sharding="single"),
+                             policy=pol)
+assert not forced.build_timings.sharded
+base = IndexArtifact.build(items, users, kb, config=cfg)
+assert forced.fingerprint == base.fingerprint
+print("build_sharding=single override OK")
+
+# save on mesh -> load + serve on a single device
+sharded = IndexArtifact.build(items, users, kb, config=cfg, policy=pol)
+with tempfile.TemporaryDirectory() as d:
+    sharded.save(d)
+    back = IndexArtifact.load(d)
+    assert back.fingerprint == sharded.fingerprint
+    eng_s = RkMIPSEngine.from_artifact(back)          # NO_SHARDING
+    eng_0 = RkMIPSEngine.from_artifact(base)
+    q = items[:4]
+    r_s = eng_s.query_batch(q, 3)
+    r_0 = eng_0.query_batch(q, 3)
+    np.testing.assert_array_equal(np.asarray(r_s.predictions),
+                                  np.asarray(r_0.predictions))
+print("save-on-mesh/load-on-single roundtrip OK")
+print("ALL DISTRIBUTED BUILD OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_build_equivalence():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", _MESH_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "ALL DISTRIBUTED BUILD OK" in out.stdout
+    assert "all registry methods fingerprint-identical OK" in out.stdout
+    assert "build_sharding=single override OK" in out.stdout
+    assert "save-on-mesh/load-on-single roundtrip OK" in out.stdout
