@@ -5,7 +5,8 @@ Prints ``name,us_per_call,derived`` CSV. Scale with --scale {smoke,bench}.
 JSON — the format of the checked-in perf baselines (BENCH_rkmips.json):
 
     PYTHONPATH=src python -m benchmarks.run --scale smoke \
-        --only rkmips,artifact --host-devices 8 --json BENCH_rkmips.json
+        --only rkmips,artifact,serving --host-devices 8 \
+        --json BENCH_rkmips.json
 
 ``--host-devices N`` forces an N-device host (CPU) backend before jax
 initializes, which turns on the mesh-sharded build columns of the rkmips
@@ -31,8 +32,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", choices=("smoke", "bench"), default="bench")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: rkmips,artifact,kmips,"
-                         "params,kernels,roofline")
+                    help="comma-separated subset: rkmips,artifact,serving,"
+                         "kmips,params,kernels,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + run metadata as JSON")
     ap.add_argument("--host-devices", type=int, default=None, metavar="N",
@@ -50,7 +51,8 @@ def main() -> None:
               f"={args.host_devices}").strip()
 
     from benchmarks import (bench_artifact, bench_kernels, bench_kmips,
-                            bench_params, bench_rkmips, bench_roofline)
+                            bench_params, bench_rkmips, bench_roofline,
+                            bench_serving)
 
     small = args.scale == "smoke"
     suites = {
@@ -61,6 +63,10 @@ def main() -> None:
         "artifact": lambda: bench_artifact.run(
             n=2048 if small else 8192, m=4096 if small else 16384,
             nq=8 if small else 16, cap=128 if small else 256),
+        "serving": lambda: bench_serving.run(
+            n=2048 if small else 8192, m=4096 if small else 16384,
+            nq=8 if small else 16, cap=128 if small else 256,
+            steady_rounds=48 if small else 128),
         "kmips": lambda: bench_kmips.run(
             n=4096 if small else 16384, m=4096 if small else 16384,
             nq=8 if small else 32,

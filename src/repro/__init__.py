@@ -37,6 +37,8 @@ __all__ = [
     "IndexArtifact",
     "PAPER_BASELINES",
     "RkMIPSEngine",
+    "ServingRuntime",
+    "TicketExpired",
     "display_name",
     "get_config",
     "load_artifact",

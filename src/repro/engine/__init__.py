@@ -27,6 +27,14 @@ This package is the only public way to run (R)kMIPS (DESIGN.md SS7):
     (``ServingCache`` / ``build_serving_state``); ``ReverseServer`` does
     the same for RkMIPS over the batched plan/execute pipeline (DESIGN.md
     SS9); both hot-swap artifact versions between flushes;
+  * the **threaded serving runtime** (engine/runtime.py, DESIGN.md SS12) —
+    ``ServingRuntime`` wraps either server in a thread pipeline: tickets
+    become futures (``ServeTicket``), worker threads dispatch micro-batches
+    through the servers' own flush path (bitwise-identical answers), and a
+    maintenance thread compacts the delta buffer off-thread and hot-swaps
+    the next ``IndexArtifact`` version in between flushes
+    (``reconcile_compaction``), with ``drain``/``close`` semantics and
+    per-ticket deadlines;
   * ``serving_codes`` — deprecated shim over
     ``IndexArtifact.serving_codes`` (the offline sketch build behind
     ``launch/serve.py::build_candidate_index``).
@@ -36,7 +44,7 @@ arrays, timings, lazy kMIPS index, pending serving tickets) lives here.
 """
 
 from repro.engine.artifact import (IndexArtifact, corpus_fingerprint,
-                                   load_artifact)
+                                   load_artifact, reconcile_compaction)
 from repro.engine.build import (BuildTimings, build_sah_index,
                                 validate_build_knobs)
 from repro.engine.config import (EngineConfig, PAPER_BASELINES, TIE_EPS_DEFAULT,
@@ -44,10 +52,12 @@ from repro.engine.config import (EngineConfig, PAPER_BASELINES, TIE_EPS_DEFAULT,
                                  register)
 from repro.engine.engine import (KMIPSResult, PruningFunnel, QueryResult,
                                  RkMIPSEngine, serving_codes)
+from repro.engine.runtime import (RuntimeStats, ServeTicket, ServingRuntime,
+                                  TicketExpired)
 from repro.engine.serving import (RetrievalServer, ReverseResult,
                                   ReverseServer, ServeResult, ServingCache,
                                   ServingState, build_serving_state,
-                                  state_from_index)
+                                  state_from_index, validate_query_rows)
 
 __all__ = [
     "BuildTimings",
@@ -61,10 +71,14 @@ __all__ = [
     "ReverseResult",
     "ReverseServer",
     "RkMIPSEngine",
+    "RuntimeStats",
     "ServeResult",
+    "ServeTicket",
     "ServingCache",
+    "ServingRuntime",
     "ServingState",
     "TIE_EPS_DEFAULT",
+    "TicketExpired",
     "build_sah_index",
     "build_serving_state",
     "corpus_fingerprint",
@@ -72,6 +86,7 @@ __all__ = [
     "get_config",
     "load_artifact",
     "method_names",
+    "reconcile_compaction",
     "register",
     "serving_codes",
     "state_from_index",

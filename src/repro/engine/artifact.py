@@ -303,6 +303,17 @@ class IndexArtifact:
         return self._fingerprint
 
     @property
+    def base_fingerprint(self) -> str:
+        """Content hash of the built *base* (corpus, users, key, recipe)
+        only — shared by every delta-descendant of one build, and changed
+        only by ``compact()``/``build``. The forward serving cache keys on
+        it (engine/serving.py): staged deltas move the overlay, never the
+        cached base state, so streaming churn rebinds in O(1)."""
+        if self._base_fp is None:
+            self.fingerprint  # computes and memoizes _base_fp
+        return self._base_fp
+
+    @property
     def manifest(self) -> dict:
         """The JSON-serializable description ``save`` persists (and
         ``load`` verifies the restored content against)."""
@@ -520,13 +531,27 @@ class IndexArtifact:
     # -- serving surface ---------------------------------------------------
 
     def serving_corpus(self) -> tuple[jnp.ndarray, jax.Array, str]:
-        """``(effective items, serving key, fingerprint)`` — what the
-        forward serving stack builds its state from. The key derivation
-        matches every other kMIPS surface, so a delta-free artifact's
-        server scans the engine's own codes."""
+        """``(effective items, serving key, fingerprint)`` — the mutated
+        corpus snapshot plus this version's full-content hash. The key
+        derivation matches every other kMIPS surface. Consumers that want
+        incremental delta serving bind ``serving_base()`` instead; this
+        accessor is for surfaces that need the materialized effective
+        corpus (e.g. an offline rebuild of exactly this version)."""
         return (self.effective_items(),
                 jax.random.fold_in(self.key, KMIPS_KEY_TAG),
                 self.fingerprint)
+
+    def serving_base(self) -> tuple[jnp.ndarray, jax.Array, str]:
+        """``(base items, serving key, base fingerprint)`` — what the
+        forward serving stack binds its ``ServingCache`` to
+        (engine/serving.py). Deltas ride as an incremental overlay
+        (deletion mask + exactly-scanned staged rows), so every
+        delta-descendant of one build shares one cached state and a
+        streaming hot-swap never rebuilds. The key derivation matches
+        every other kMIPS surface."""
+        return (self.items,
+                jax.random.fold_in(self.key, KMIPS_KEY_TAG),
+                self.base_fingerprint)
 
     def serving_codes(self) -> tuple[jnp.ndarray, jnp.ndarray]:
         """Offline sketch build for the serving stack
@@ -557,14 +582,29 @@ class IndexArtifact:
             _flatten_named("kmips/", self._kmips, out)
         return out
 
-    def save(self, artifact_dir: str, *, step: int = 0) -> str:
+    def save(self, artifact_dir: str, *, step: int = 0,
+             keep: int | None = None) -> str:
         """Persist this version under ``artifact_dir`` (atomic: npz +
         fsynced manifest via ``train/checkpoint.py``). Arrays are
         host-gathered, so saving works from any mesh; the stored layout is
         mesh-agnostic and ``RkMIPSEngine.attach`` re-places it under any
-        ``ShardingPolicy`` on load. Returns the checkpoint path."""
-        return _ckpt.save(artifact_dir, step, self._flat_arrays(),
+        ``ShardingPolicy`` on load. Returns the checkpoint path.
+
+        ``keep=N`` applies the GC/retention policy after a successful
+        save: the directory's version history is pruned to the N newest
+        steps (``train/checkpoint.py::prune``), with the just-saved step
+        always protected — a background compactor streaming versions to
+        disk can never GC the artifact it just persisted, whatever its
+        step number. ``keep=None`` (default) retains everything.
+        """
+        if keep is not None and keep < 1:
+            raise ValueError(f"keep must be >= 1 (the saved version always "
+                             f"survives), got {keep}")
+        path = _ckpt.save(artifact_dir, step, self._flat_arrays(),
                           metadata=self.manifest)
+        if keep is not None:
+            _ckpt.prune(artifact_dir, keep, protect=(step,))
+        return path
 
     @classmethod
     def load(cls, artifact_dir: str, *,
@@ -613,6 +653,68 @@ class IndexArtifact:
                 f"n_users={self.n_users}, pending="
                 f"{'yes' if self.has_pending else 'no'}, "
                 f"fingerprint={fp})")
+
+
+def reconcile_compaction(snapshot: IndexArtifact, current: IndexArtifact,
+                         compacted: IndexArtifact) -> IndexArtifact:
+    """Re-stage the churn between ``snapshot`` and ``current`` onto
+    ``compacted`` — the off-thread compaction handshake.
+
+    The background compactor (engine/runtime.py) snapshots the live
+    version V, builds ``C = V.compact()`` off-thread while traffic keeps
+    staging inserts/deletes on top of V (producing V'), and must swap in
+    an artifact equivalent to V' — not V. This maps V-space ids into
+    C-space (V's ascending ``effective_ids`` order IS C's row order, so a
+    searchsorted translates), re-applies post-snapshot deletions, and
+    re-inserts post-snapshot staged rows in insertion order. O(churn)
+    staging, no rebuild — cheap enough to run under the swap lock.
+
+    ``current`` must be a delta-descendant of ``snapshot`` (same base,
+    monotone deletions/slots) and ``compacted`` a delta-free compaction of
+    ``snapshot``; anything else raises ``ValueError``.
+    """
+    if current is snapshot:
+        return compacted
+    if current.items is not snapshot.items and \
+            current.base_fingerprint != snapshot.base_fingerprint:
+        raise ValueError("reconcile_compaction: current is not a "
+                         "delta-descendant of snapshot (different base "
+                         "build)")
+    if compacted.has_pending or compacted.n_base != snapshot.n_items:
+        raise ValueError(
+            f"reconcile_compaction: compacted ({compacted.n_base} base "
+            f"rows, pending={compacted.has_pending}) is not a delta-free "
+            f"compaction of snapshot ({snapshot.n_items} effective rows)")
+    snap_del = np.asarray(snapshot.deleted)
+    cur_del = np.asarray(current.deleted)
+    snap_live = np.asarray(snapshot.delta_mask)
+    cur_live = np.asarray(current.delta_mask)
+    if current.delta_used < snapshot.delta_used \
+            or (snap_del & ~cur_del).any() \
+            or (~snap_live & cur_live)[:snapshot.delta_used].any():
+        raise ValueError("reconcile_compaction: current is not a "
+                         "delta-descendant of snapshot (deletions/staged "
+                         "slots are not monotone)")
+    out = compacted
+    # post-snapshot deletions, as V-space ids: base rows newly retired,
+    # plus snapshot-live staged slots since retired
+    new_base_dead = np.where(cur_del & ~snap_del)[0]
+    new_slot_dead = np.where(snap_live & ~cur_live)[0] + snapshot.n_base
+    dead = np.concatenate([new_base_dead, new_slot_dead])
+    if dead.size:
+        ids_v = snapshot.effective_ids()  # ascending by construction
+        pos = np.searchsorted(ids_v, dead)
+        if (pos >= ids_v.size).any() or (ids_v[pos.clip(max=ids_v.size - 1)]
+                                         != dead).any():
+            raise ValueError("reconcile_compaction: post-snapshot deletion "
+                             "targets a row the snapshot never served")
+        out = out.delete_items(pos)
+    # post-snapshot inserts: slots appended after the snapshot, still live
+    fresh = np.where(cur_live[snapshot.delta_used:current.delta_used])[0] \
+        + snapshot.delta_used
+    if fresh.size:
+        out = out.insert_items(jnp.asarray(current.delta_items)[fresh])
+    return out
 
 
 def load_artifact(artifact_dir: str, *, step: int | None = None

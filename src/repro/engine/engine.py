@@ -488,6 +488,22 @@ class RkMIPSEngine:
         from repro.engine import serving as _serving
         return _serving.ReverseServer(self)
 
+    def async_server(self, **runtime_kwargs):
+        """A threaded ``ServingRuntime`` over ``server()`` — forward
+        serving as a loop: futures on submit, worker-thread flushes,
+        optional background compaction (engine/runtime.py, DESIGN.md
+        SS12). Keyword args go to ``ServingRuntime``."""
+        from repro.engine import runtime as _runtime
+        return _runtime.ServingRuntime(self.server(), **runtime_kwargs)
+
+    def async_reverse_server(self, **runtime_kwargs):
+        """A threaded ``ServingRuntime`` over ``reverse_server()`` —
+        RkMIPS serving as a loop (engine/runtime.py, DESIGN.md SS12).
+        Keyword args go to ``ServingRuntime``."""
+        from repro.engine import runtime as _runtime
+        return _runtime.ServingRuntime(self.reverse_server(),
+                                       **runtime_kwargs)
+
     # -- ground truth ------------------------------------------------------
 
     def oracle(self, queries: jnp.ndarray, k: int) -> jnp.ndarray:

@@ -28,7 +28,16 @@ swapped-in shapes match the live ones the compiled dispatch is reused
 (``compile_count`` += 0). The cache key's fingerprint prefix is what makes
 this safe: built states of *different* corpus versions can coexist in one
 LRU, so swapping back to a cached version is a hit, and a stale state can
-never be served as a "hit" for new content.
+never be served as a "hit" for new content. For artifact-backed forward
+servers the prefix is the **base** fingerprint and staged deltas are served
+as an incremental overlay (deletion mask + exactly-scanned staged rows), so
+streaming churn never rebuilds serving state — the cache key only moves at
+``compact()``, when the base actually changes.
+
+The synchronous path here is also the substrate of the threaded serving
+runtime (engine/runtime.py, DESIGN.md SS12): runtime workers dispatch
+through the same ``_flush_batch`` the synchronous ``flush`` uses, which is
+what makes runtime answers bitwise identical to library-mode serving.
 
 Reverse (RkMIPS) serving rides the batched plan/execute pipeline
 (DESIGN.md SS9): ``ReverseServer`` accumulates promoted-item queries and
@@ -52,6 +61,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import sa_alsh as _alsh
@@ -130,6 +140,28 @@ def build_serving_state(items: jnp.ndarray, key: jax.Array,
     idx = _alsh.build_index(items, key,
                             **config.kmips_build_kwargs(items.shape[0]))
     return state_from_index(idx, config, policy=policy)
+
+
+def validate_query_rows(q, dim: int | None, what: str) -> jnp.ndarray:
+    """Submit-time validation shared by every ticket surface.
+
+    Rejects wrong-dtype / wrong-shape queries with a clear ``ValueError``
+    at ``submit`` time — before they sit in the queue — instead of failing
+    inside a later flush, which (by the retry contract) would leave the
+    whole batch pending behind one malformed row. Returns the query as a
+    jnp array (1-D single query or 2-D block).
+    """
+    q = jnp.asarray(q)
+    if not jnp.issubdtype(q.dtype, jnp.floating):
+        raise ValueError(f"{what}: queries must have a floating dtype, "
+                         f"got {q.dtype}")
+    if q.ndim not in (1, 2):
+        raise ValueError(f"{what}: queries must be one row (d,) or a "
+                         f"block (nq, d), got shape {q.shape}")
+    if dim is not None and q.shape[-1] != dim:
+        raise ValueError(f"{what}: query dimensionality {q.shape[-1]} != "
+                         f"corpus dimensionality {dim}")
+    return q
 
 
 def _index_recipe(config: EngineConfig, n_items: int) -> tuple:
@@ -244,11 +276,16 @@ class _TicketQueue:
     a retry answers them all). One implementation, so the ticket
     arithmetic and failure contract can never drift between the forward
     and reverse servers.
+
+    ``submit`` validates dtype/shape up front (``validate_query_rows``):
+    a malformed query raises immediately instead of poisoning a later
+    flush — the queue only ever holds dispatchable rows.
     """
 
-    def __init__(self):
+    def __init__(self, dim: int | None = None):
         self._pending: list[jnp.ndarray] = []
         self._next_ticket = 0
+        self._dim = dim  # corpus dimensionality; None skips the dim check
 
     @property
     def pending(self) -> int:
@@ -260,9 +297,10 @@ class _TicketQueue:
 
         Tickets are served strictly in submission order by the next
         ``flush``; a ticket's position in flush's result list is
-        ``ticket - first_pending_ticket``.
+        ``ticket - first_pending_ticket``. Wrong dtype/shape raises a
+        ``ValueError`` here, at submit time.
         """
-        q = jnp.asarray(q)
+        q = validate_query_rows(q, self._dim, "submit")
         if q.ndim == 1:
             self._pending.append(q)
             self._next_ticket += 1
@@ -302,20 +340,32 @@ class RetrievalServer(_TicketQueue):
     lookup is O(1) on a hit, so swapping ``config`` between flushes (e.g.
     an A/B of presets) costs one build each, once. ``swap(artifact)``
     makes a new corpus version live between flushes (DESIGN.md SS10).
+
+    Artifact-backed servers serve the delta buffer *incrementally*: the
+    cached ``ServingState`` is built from (and keyed by) the artifact's
+    **base** corpus (``base_fingerprint``), so staged inserts/deletes
+    never trigger a state rebuild. Deletions mask rows out of the scan
+    (same shapes — the compiled dispatch is reused), staged inserts are
+    folded in by an exact jitted scan of the fixed-capacity buffer
+    (``sa_alsh.merge_topk`` — one extra executable ever, its capacity
+    being static), and answers come back natively in artifact id space.
+    Every delta-descendant of one build shares one cached state: a
+    streaming ``swap`` is O(1), not O(rebuild).
     """
 
     def __init__(self, items: jnp.ndarray, key: jax.Array, *,
                  config: EngineConfig | str = "sah",
                  policy: ShardingPolicy = NO_SHARDING,
                  fingerprint: str | None = None):
-        super().__init__()
+        super().__init__(dim=items.shape[1])
         if isinstance(config, str):
             config = get_config(config)
         self.config = config
         self.policy = policy
         self.artifact: IndexArtifact | None = None
-        # artifact-space id per served row; None when rows == corpus rows
-        self._id_map: jnp.ndarray | None = None
+        self._delta = (None, None)   # live staged rows (items, mask) | None
+        self._deleted = None         # host (n_base,) bool; None = no deletes
+        self._mask_memo = None       # (ServingState, masked item_mask)
         self.cache = ServingCache(items, key, policy=policy,
                                   capacity=config.serve_cache_capacity,
                                   fingerprint=fingerprint)
@@ -334,22 +384,38 @@ class RetrievalServer(_TicketQueue):
         self._dispatch = jax.jit(_scan,
                                  static_argnames=("k", "n_cand", "scan"))
 
+        def _merge(vals, ids, queries, d_items, d_mask, *, k, n_base):
+            # Exact fold-in of the staged delta buffer — the same merge
+            # RkMIPSEngine.kmips applies, so ids agree id-for-id. The
+            # buffer's capacity is static: one trace per (batch, k,
+            # n_base) ever, however much churn streams through.
+            self.compile_count += 1
+            d_vals = jnp.where(d_mask[None, :], queries @ d_items.T,
+                               -jnp.inf)
+            d_ids = jnp.broadcast_to(
+                n_base + jnp.arange(d_items.shape[0], dtype=ids.dtype),
+                d_vals.shape)
+            return _alsh.merge_topk(vals, ids, d_vals, d_ids, k)
+
+        self._merge = jax.jit(_merge, static_argnames=("k", "n_base"))
+
     @classmethod
     def from_artifact(cls, artifact: IndexArtifact, *,
                       policy: ShardingPolicy = NO_SHARDING
                       ) -> "RetrievalServer":
-        """A server over an ``IndexArtifact``'s effective corpus.
+        """A server over an ``IndexArtifact``'s corpus.
 
         The serving key derivation matches every other kMIPS surface, and
-        the cache is keyed by the artifact fingerprint — when the
-        artifact's kMIPS index is already built (and no deltas are
-        staged), the cache is seeded from it, so the server scans the
-        exact codes the engine ranks with, with zero extra builds.
-        Answers come back in **artifact id space** (base ids; staged row
-        j is n_base + j), agreeing id-for-id with ``RkMIPSEngine.kmips``
-        even when the artifact carries pending deltas.
+        the cache is keyed by the artifact **base** fingerprint — when the
+        artifact's kMIPS index is already built, the cache is seeded from
+        it, so the server scans the exact codes the engine ranks with,
+        with zero extra builds. Staged deltas ride as an incremental
+        overlay (class docstring); answers are natively in **artifact id
+        space** (base ids; staged row j is n_base + j), agreeing
+        id-for-id with ``RkMIPSEngine.kmips`` even when the artifact
+        carries pending deltas.
         """
-        items, key, fp = artifact.serving_corpus()
+        items, key, fp = artifact.serving_base()
         srv = cls(items, key, config=artifact.config, policy=policy,
                   fingerprint=fp)
         srv._bind_artifact(artifact)
@@ -357,34 +423,55 @@ class RetrievalServer(_TicketQueue):
 
     def _bind_artifact(self, artifact: IndexArtifact) -> None:
         self.artifact = artifact
-        self._id_map = (jnp.asarray(artifact.effective_ids())
-                        if artifact.has_pending else None)
-        if artifact.kmips_index is not None and not artifact.has_pending \
+        self._delta = artifact.kmips_delta()
+        deleted = np.asarray(artifact.deleted)
+        self._deleted = deleted if deleted.any() else None
+        self._mask_memo = None
+        if artifact.kmips_index is not None \
                 and artifact.config not in self.cache:
             self.cache.put(artifact.config, state_from_index(
                 artifact.kmips_index, artifact.config, policy=self.policy))
 
-    def _to_artifact_ids(self, ids: jnp.ndarray) -> jnp.ndarray:
-        """Served rows index the effective-corpus snapshot; translate back
-        to artifact ids (identity without pending deltas; -1 passes)."""
-        if self._id_map is None:
-            return ids
-        return jnp.where(ids >= 0, jnp.take(self._id_map,
-                                            jnp.clip(ids, 0)), -1)
+    def _masked_item_mask(self, state: ServingState) -> jnp.ndarray:
+        """The state's scan mask with the artifact's deleted base rows
+        retired — same shape, so the compiled dispatch is reused.
+
+        Computed host-side (artifact ``deleted`` is host layout; eager ops
+        on mesh-committed arrays are the jax 0.4.x hazard engine/build.py
+        documents) and memoized per bound (state, artifact): one O(n)
+        pass per swap, zero per flush.
+        """
+        if self._deleted is None:
+            return state.item_mask
+        if self._mask_memo is not None and self._mask_memo[0] is state:
+            return self._mask_memo[1]
+        ids = np.asarray(jax.device_get(state.item_ids))
+        dead = (ids >= 0) & self._deleted[np.clip(ids, 0, None)]
+        mask = np.asarray(jax.device_get(state.item_mask)) & ~dead
+        marr = jnp.asarray(mask)
+        if self.policy.mesh is not None:
+            axes = tuple(self.policy.mesh.axis_names)
+            marr = jax.device_put(marr, NamedSharding(self.policy.mesh,
+                                                      P(axes)))
+        self._mask_memo = (state, marr)
+        return marr
 
     def swap(self, artifact: IndexArtifact) -> "RetrievalServer":
         """Make a new artifact version live between flushes.
 
         Pending tickets survive and are answered against the new version
         by the next ``flush``; previously built versions stay in the cache
-        under their fingerprints (swapping back is a hit). When the new
-        version's built shapes match the live ones, the compiled dispatch
-        is reused — ``compile_count`` += 0 (pinned in tests).
+        under their base fingerprints (swapping back is a hit). Delta
+        mutations of the live base are served from the *same* cached
+        state — rebind is O(1) — and when a new base's built shapes match
+        the live ones, the compiled dispatch is reused — ``compile_count``
+        += 0 (pinned in tests).
         """
-        items, key, fp = artifact.serving_corpus()
+        items, key, fp = artifact.serving_base()
         self.config = artifact.config
         self.cache.capacity = artifact.config.serve_cache_capacity
         self.cache.rebind(items, key, fingerprint=fp)
+        self._dim = items.shape[1]
         self._bind_artifact(artifact)
         return self
 
@@ -393,6 +480,39 @@ class RetrievalServer(_TicketQueue):
         """The micro-batch size — read from the *current* config, so a
         config swapped between flushes brings its own batching along."""
         return self.config.serve_batch_size
+
+    def _flush_batch(self, group: list, k: int, *,
+                     n_cand: int | None = None,
+                     scan: str | None = None) -> list[ServeResult]:
+        """Answer one micro-batch (<= ``batch_size`` queries) through the
+        compiled dispatch — THE flush path: the synchronous ``flush`` and
+        the threaded runtime's workers (engine/runtime.py) both call this,
+        so their answers are bitwise identical by construction (same
+        padding, same executables, same delta fold-in).
+        """
+        state = self.cache.get(self.config)
+        bound = (state.n_items if self.artifact is None
+                 else self.artifact.n_items)
+        if not 1 <= k <= bound:
+            raise ValueError(f"k={k} outside [1, {bound}] "
+                             f"supported by this corpus")
+        n_cand = self.config.n_cand if n_cand is None else n_cand
+        scan = self.config.scan if scan is None else scan
+        batch = self.batch_size
+        qs = jnp.stack(group)
+        if len(group) < batch:
+            qs = jnp.concatenate(
+                [qs, jnp.zeros((batch - len(group), qs.shape[1]),
+                               qs.dtype)])
+        vals, ids = self._dispatch(state.items, state.item_ids,
+                                   self._masked_item_mask(state),
+                                   state.codes, state.proj_q, qs, k=k,
+                                   n_cand=n_cand, scan=scan)
+        d_items, d_mask = self._delta
+        if d_items is not None:
+            vals, ids = self._merge(vals, ids, qs, d_items, d_mask, k=k,
+                                    n_base=self.artifact.n_base)
+        return [ServeResult(vals[j], ids[j], k) for j in range(len(group))]
 
     def flush(self, k: int, *, n_cand: int | None = None,
               scan: str | None = None) -> list[ServeResult]:
@@ -410,29 +530,12 @@ class RetrievalServer(_TicketQueue):
         """
         if not self._pending:
             return []
-        state = self.cache.get(self.config)
-        if not 1 <= k <= state.n_items:
-            raise ValueError(f"k={k} outside [1, {state.n_items}] "
-                             f"supported by this corpus")
-        n_cand = self.config.n_cand if n_cand is None else n_cand
-        scan = self.config.scan if scan is None else scan
         batch = self.batch_size
         queue = list(self._pending)
         out: list[ServeResult] = []
         for i in range(0, len(queue), batch):
-            group = queue[i:i + batch]
-            qs = jnp.stack(group)
-            if len(group) < batch:
-                qs = jnp.concatenate(
-                    [qs, jnp.zeros((batch - len(group), qs.shape[1]),
-                                   qs.dtype)])
-            vals, ids = self._dispatch(state.items, state.item_ids,
-                                       state.item_mask, state.codes,
-                                       state.proj_q, qs, k=k,
-                                       n_cand=n_cand, scan=scan)
-            ids = self._to_artifact_ids(ids)
-            out.extend(ServeResult(vals[j], ids[j], k)
-                       for j in range(len(group)))
+            out.extend(self._flush_batch(queue[i:i + batch], k,
+                                         n_cand=n_cand, scan=scan))
         del self._pending[:len(queue)]
         return out
 
@@ -485,8 +588,8 @@ class ReverseServer(_TicketQueue):
     """
 
     def __init__(self, engine):
-        super().__init__()
         engine.index                      # raises unless built for RkMIPS
+        super().__init__(dim=engine.index.users.shape[-1])
         self.engine = engine
 
     def swap(self, artifact: IndexArtifact) -> "ReverseServer":
@@ -504,6 +607,7 @@ class ReverseServer(_TicketQueue):
                 "cannot swap a kMIPS-only artifact into a ReverseServer: "
                 "the artifact is not built for RkMIPS (users=None)")
         self.engine.attach(artifact)
+        self._dim = self.engine.index.users.shape[-1]
         return self
 
     @property
@@ -517,6 +621,25 @@ class ReverseServer(_TicketQueue):
         (batch shape, k); serving adds no executables of its own)."""
         return self.engine.rkmips_compile_count
 
+    def _flush_batch(self, group: list, k: int) -> list[ReverseResult]:
+        """Answer one micro-batch (<= ``batch_size`` queries) through the
+        engine's batched dispatch — THE flush path shared by the
+        synchronous ``flush`` and the threaded runtime's workers
+        (engine/runtime.py): same repeat-padding, same executable, so
+        their answers are bitwise identical by construction."""
+        batch = self.batch_size
+        qs = jnp.stack(group)
+        if len(group) < batch:
+            qs = jnp.concatenate(
+                [qs, jnp.broadcast_to(qs[:1], (batch - len(group),)
+                                      + qs.shape[1:])])
+        res = self.engine.query_batch(qs, k)
+        return [
+            ReverseResult(res.predictions[j],
+                          jax.tree.map(lambda s, j=j: s[j], res.stats),
+                          k)
+            for j in range(len(group))]
+
     def flush(self, k: int) -> list[ReverseResult]:
         """Answer every pending ticket; results in submission order."""
         if not self._pending:
@@ -525,18 +648,7 @@ class ReverseServer(_TicketQueue):
         queue = list(self._pending)
         out: list[ReverseResult] = []
         for i in range(0, len(queue), batch):
-            group = queue[i:i + batch]
-            qs = jnp.stack(group)
-            if len(group) < batch:
-                qs = jnp.concatenate(
-                    [qs, jnp.broadcast_to(qs[:1], (batch - len(group),)
-                                          + qs.shape[1:])])
-            res = self.engine.query_batch(qs, k)
-            out.extend(
-                ReverseResult(res.predictions[j],
-                              jax.tree.map(lambda s, j=j: s[j], res.stats),
-                              k)
-                for j in range(len(group)))
+            out.extend(self._flush_batch(queue[i:i + batch], k))
         del self._pending[:len(queue)]
         return out
 

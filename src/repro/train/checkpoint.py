@@ -157,13 +157,24 @@ def restore(ckpt_dir: str, step: int, like,
     return jax.tree_util.tree_unflatten(treedef, leaves), manifest["metadata"]
 
 
-def prune(ckpt_dir: str, keep: int = 3) -> None:
-    """Delete all but the newest `keep` complete checkpoints."""
+def prune(ckpt_dir: str, keep: int = 3,
+          protect: tuple | list | set = ()) -> None:
+    """Delete all but the newest `keep` complete checkpoints.
+
+    Steps in `protect` are never deleted, on top of the keep budget —
+    the artifact GC (engine/artifact.py::IndexArtifact.save(keep=...))
+    protects the step it just wrote, so a retention policy can never
+    delete the live version, whatever its step number.
+    """
     if not os.path.isdir(ckpt_dir):
         return
     steps = sorted(
         int(n[5:]) for n in os.listdir(ckpt_dir)
         if n.startswith("step_")
         and os.path.exists(os.path.join(ckpt_dir, n, "manifest.json")))
-    for s in steps[:-keep]:
+    protected = set(protect)
+    doomed = steps if keep <= 0 else steps[:-keep]
+    for s in doomed:
+        if s in protected:
+            continue
         shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"))

@@ -158,6 +158,33 @@ def test_roundtrip_fingerprint_and_manifest(workload, tmp_path):
         IndexArtifact.load(str(tmp_path / "nothing-here"))
 
 
+def test_save_retention_never_deletes_live(workload, tmp_path):
+    """save(dir, step=, keep=) prunes old versions, but the just-saved
+    version always survives — even when its step number is the lowest in
+    the directory — and keep < 1 is rejected before anything is written."""
+    items, users, _ = workload
+    art = IndexArtifact.build(items, users, _BUILD_KEY, config=_cfg("sketch"))
+    adir = str(tmp_path / "vers")
+
+    def steps():
+        return sorted(int(n[5:]) for n in os.listdir(adir)
+                      if n.startswith("step_"))
+
+    for s in (1, 2, 3, 4):
+        art.save(adir, step=s)
+    art.save(adir, step=5, keep=2)
+    assert steps() == [4, 5]
+    # saving a LOWER step under a one-slot budget: the budget retains the
+    # newest step (5), and protection keeps the version just written (1)
+    art.save(adir, step=1, keep=1)
+    assert steps() == [1, 5]
+    back = IndexArtifact.load(adir, step=1)
+    assert back.fingerprint == art.fingerprint
+    with pytest.raises(ValueError, match=r"keep must be >= 1"):
+        art.save(adir, step=9, keep=0)
+    assert 9 not in steps()
+
+
 def test_delta_exact_equivalence_precompact(workload):
     """THE streaming contract (hypothesis-free mirror): for exact-scan
     configs, insert_items/delete_items followed by queries are bitwise a
@@ -384,7 +411,7 @@ def test_server_swap_keeps_tickets_and_executables(workload):
     assert len(out) == 2
     assert fsrv.compile_count == cc                # same (batch, k) shapes
     assert fsrv.cache.builds == b0 + 1             # v2 built once
-    assert fsrv.cache.fingerprint == art2.fingerprint
+    assert fsrv.cache.fingerprint == art2.base_fingerprint
     fsrv.swap(art)                                 # swap back: still cached
     fsrv.submit(queries[0])
     fsrv.flush(3)

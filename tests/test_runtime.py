@@ -1,0 +1,360 @@
+"""ServingRuntime concurrency contracts (engine/runtime.py, DESIGN.md SS12).
+
+Pins the async-serving guarantees: (1) runtime answers are bitwise the
+synchronous ``flush`` on the same ticket stream (forward and reverse), with
+compile counts pinned at one trace per batch shape; (2) results never cross
+tickets — each future resolves with its own query's row, in admission
+order; (3) a ``swap`` lands *between* flushes: an in-flight batch finishes
+against the version it was dispatched on, pending tickets survive, and
+post-swap tickets answer against the new version with zero retraces;
+(4) background compaction never blocks a flush or a mutation — churn that
+races the rebuild is re-staged onto the compacted base
+(``reconcile_compaction``), and the compacted version persists through the
+``keep=`` GC policy; (5) deadlines expire tickets pre-dispatch with
+``TicketExpired``; (6) ``drain``/``close`` semantics and submit-time
+validation.
+
+Threading discipline: every blocking wait in this file carries an explicit
+timeout (no pytest-timeout dependency), and gates patched into the dispatch
+path are released in ``finally`` so a failing assert can never wedge the
+worker threads.
+"""
+
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.engine import (IndexArtifact, RetrievalServer, RkMIPSEngine,
+                          ServingRuntime, TicketExpired, get_config,
+                          load_artifact, reconcile_compaction)
+
+D = 16
+
+
+def _cfg(scan="sketch"):
+    return get_config("sah").replace(tile=32, n_bits=32, k_max=8, n_top=8,
+                                     leaf_size=8, n_cand=16, scan=scan,
+                                     delta_capacity=8, serve_batch_size=4)
+
+
+_BUILD_KEY = jax.random.PRNGKey(31)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    key = jax.random.PRNGKey(23)
+    ki, kq = jax.random.split(key)
+    items, users = synthetic.recommendation_data(ki, 120, 64, D)
+    queries = synthetic.queries_from_items(kq, items, 12)
+    return items, users, queries
+
+
+@pytest.fixture(scope="module")
+def artifact(workload):
+    items, users, _ = workload
+    return IndexArtifact.build(items, users, _BUILD_KEY, config=_cfg())
+
+
+def _assert_same_serve(got, ref):
+    np.testing.assert_array_equal(np.asarray(got.values),
+                                  np.asarray(ref.values))
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(ref.ids))
+    assert got.k == ref.k
+
+
+def test_forward_runtime_matches_sync_flush_bitwise(workload, artifact):
+    """THE async contract: the same ticket stream through the runtime and
+    through the library-mode submit+flush resolves bitwise identically,
+    ticket for ticket, with the same executables."""
+    _, _, queries = workload
+    sync = RetrievalServer.from_artifact(artifact)
+    sync.submit(queries)
+    ref = sync.flush(3)
+    rt = ServingRuntime(RetrievalServer.from_artifact(artifact), k=3)
+    try:
+        tickets = rt.submit(queries)
+        for t, r in zip(tickets, ref):
+            _assert_same_serve(t.result(timeout=60), r)
+            assert t.done() and t.exception(0) is None
+            assert t.latency is not None and t.latency >= 0
+        st = rt.stats
+        assert st.submitted == st.completed == len(queries)
+        assert st.expired == 0 and st.failed == 0 and st.batches >= 1
+        assert rt.pending == 0
+        # same flush path, padded partial batches => same trace count
+        assert rt.server.compile_count == sync.compile_count
+    finally:
+        rt.close()
+
+
+def test_reverse_runtime_matches_sync_flush_bitwise(workload, artifact):
+    """Reverse tickets through the runtime are bitwise the synchronous
+    ReverseServer flush — user-space predictions row for row."""
+    _, _, queries = workload
+    sync = RkMIPSEngine.from_artifact(artifact).reverse_server()
+    sync.submit(queries[:8])
+    ref = sync.flush(3)
+    with RkMIPSEngine.from_artifact(artifact).async_reverse_server(k=3) as rt:
+        tickets = rt.submit(queries[:8])
+        for t, r in zip(tickets, ref):
+            got = t.result(timeout=120)
+            np.testing.assert_array_equal(np.asarray(got.predictions),
+                                          np.asarray(r.predictions))
+            assert got.k == 3
+        assert rt.server.compile_count == sync.compile_count
+        assert rt.stats.completed == 8
+
+
+def test_mixed_signature_tickets_fragment_not_corrupt(workload, artifact):
+    """Tickets with different k interleaved: batches fragment at signature
+    boundaries, but every future still resolves with its own query's
+    answer for its own k."""
+    _, _, queries = workload
+    sync = RetrievalServer.from_artifact(artifact)
+    ref = {}
+    for k in (2, 5):
+        sync.submit(queries)
+        ref[k] = sync.flush(k)
+    rt = ServingRuntime(RetrievalServer.from_artifact(artifact))
+    try:
+        ks = [2 if i % 2 == 0 else 5 for i in range(len(queries))]
+        tickets = [rt.submit(queries[i], k=k) for i, k in enumerate(ks)]
+        for i, (k, t) in enumerate(zip(ks, tickets)):
+            got = t.result(timeout=60)
+            assert got.k == k
+            _assert_same_serve(got, ref[k][i])
+        # alternating signatures can never share a micro-batch
+        assert rt.stats.batches >= 2
+        assert rt.server.compile_count == sync.compile_count
+    finally:
+        rt.close()
+
+
+def test_submit_validation_and_ctor_guards(workload, artifact):
+    items, _, queries = workload
+    with pytest.raises(ValueError, match=r"workers must be >= 1"):
+        ServingRuntime(RetrievalServer.from_artifact(artifact), k=3,
+                       workers=0)
+    with pytest.raises(ValueError, match=r"compact_fill must be in"):
+        ServingRuntime(RetrievalServer.from_artifact(artifact), k=3,
+                       compact_fill=0.0)
+    with pytest.raises(ValueError, match=r"needs artifact_dir="):
+        ServingRuntime(RetrievalServer.from_artifact(artifact), k=3, keep=2)
+    bare = RetrievalServer(items, jax.random.fold_in(_BUILD_KEY, 9),
+                           config=_cfg())
+    with pytest.raises(ValueError, match=r"artifact-backed"):
+        ServingRuntime(bare, k=3, compaction=True)
+    rt = ServingRuntime(RetrievalServer.from_artifact(artifact))
+    try:
+        with pytest.raises(ValueError, match=r"no k for this ticket"):
+            rt.submit(queries[0])
+        with pytest.raises(ValueError, match=r"runtime.submit: query "
+                                             r"dimensionality"):
+            rt.submit(queries[0][:-1], k=3)
+        assert rt.pending == 0 and rt.stats.submitted == 0
+    finally:
+        rt.close()
+    with RkMIPSEngine.from_artifact(artifact).async_reverse_server(k=3) \
+            as rrt:
+        with pytest.raises(ValueError, match=r"forward-serving knobs"):
+            rrt.submit(queries[0], n_cand=8)
+
+
+def test_swap_lands_between_flushes_and_tickets_survive(workload, artifact):
+    """Hold the dispatch lock hostage via a gated in-flight batch, swap a
+    mutated version underneath: the in-flight batch completes against the
+    version it was dispatched on, the blocked swap lands right after, and
+    post-swap tickets answer against the new version — zero retraces."""
+    _, _, queries = workload
+    sync = RetrievalServer.from_artifact(artifact)
+    sync.submit(queries[:8])
+    ref_old = sync.flush(3)
+    # retire the top answers of queries 4/5 so the swap provably matters
+    dels = sorted({int(ref_old[4].ids[0]), int(ref_old[5].ids[0])})
+    a2 = artifact.delete_items(dels)
+    sync.swap(a2)
+    sync.submit(queries[4:8])
+    ref_new = sync.flush(3)
+    assert any(not np.array_equal(np.asarray(a.ids), np.asarray(b.ids))
+               for a, b in zip(ref_old[4:], ref_new))
+
+    srv = RetrievalServer.from_artifact(artifact)
+    rt = ServingRuntime(srv, k=3, batch_linger=0.0)
+    orig = srv._flush_batch
+    inflight, gate = threading.Event(), threading.Event()
+    armed = [True]
+
+    def gated(group, k, **kw):
+        if armed[0]:
+            armed[0] = False
+            inflight.set()
+            assert gate.wait(30)
+        return orig(group, k, **kw)
+
+    srv._flush_batch = gated
+    swapper = threading.Thread(target=rt.swap, args=(a2,))
+    try:
+        first = rt.submit(queries[:4])          # exactly one full batch
+        assert inflight.wait(10)                # dispatched, gated in-flight
+        swapper.start()                         # blocked on the dispatch lock
+        time.sleep(0.1)
+        assert swapper.is_alive() and not first[0].done()
+        gate.set()
+        swapper.join(30)
+        assert not swapper.is_alive()
+        # the in-flight batch was answered on the version it dispatched with
+        for t, r in zip(first, ref_old):
+            _assert_same_serve(t.result(timeout=30), r)
+        # post-swap tickets answer on the new version
+        for t, r in zip(rt.submit(queries[4:8]), ref_new):
+            _assert_same_serve(t.result(timeout=30), r)
+        assert rt.stats.swaps == 1
+        # one trace for the (batch, k) shape across both waves: delete-only
+        # churn on a same-base version costs zero new executables
+        assert srv.compile_count == 1
+    finally:
+        gate.set()
+        srv._flush_batch = orig
+        rt.close()
+        if swapper.ident is not None:
+            swapper.join(5)
+
+
+def test_compaction_races_mutations_and_never_blocks_flushes(
+        workload, artifact, monkeypatch, tmp_path):
+    """Gate the off-thread rebuild open: while it runs, tickets resolve and
+    mutations stage (compaction never blocks either); when it lands, the
+    churn that raced it is re-staged onto the compacted base and the merged
+    version is persisted under the keep= GC policy."""
+    _, _, queries = workload
+    rows = jax.random.normal(jax.random.PRNGKey(7), (5, D)) * 1.1
+    started, release = threading.Event(), threading.Event()
+    orig_compact = IndexArtifact.compact
+
+    def gated_compact(self, **kw):
+        started.set()
+        assert release.wait(120)
+        return orig_compact(self, **kw)
+
+    monkeypatch.setattr(IndexArtifact, "compact", gated_compact)
+    adir = str(tmp_path / "versions")
+    rt = ServingRuntime(RetrievalServer.from_artifact(artifact), k=3,
+                        compaction=True, compact_fill=1.0,
+                        poll_interval=0.01, artifact_dir=adir, keep=2)
+    try:
+        snapshot = rt.insert_items(rows[:4])
+        rt.request_compaction()
+        assert started.wait(20)              # compactor snapshotted + building
+        # serving keeps flowing while the rebuild runs
+        t = rt.submit(queries[0])
+        first = t.result(timeout=30)
+        # ... and so do mutations, staging onto descendants of the snapshot
+        rt.insert_items(rows[4:])
+        top = int(first.ids[0])
+        rt.delete_items([top])
+        assert rt.stats.compactions == 0
+        release.set()
+        deadline = time.monotonic() + 120
+        while rt.stats.compactions < 1:
+            assert time.monotonic() < deadline, "compaction never landed"
+            time.sleep(0.02)
+        merged = rt.artifact
+        # merged = compacted snapshot base + exactly the raced churn
+        assert merged.n_base == snapshot.n_items
+        assert merged.delta_used == 1 and merged.has_pending
+        assert merged.n_items == artifact.n_items + 5 - 1
+        assert rt.stats.swaps == 4           # 3 mutations + the compaction
+        # post-compaction serving == a cold server on the merged version
+        ref_srv = RetrievalServer.from_artifact(merged)
+        ref_srv.submit(queries[:4])
+        refs = ref_srv.flush(3)
+        for tt, r in zip(rt.submit(queries[:4]), refs):
+            _assert_same_serve(tt.result(timeout=30), r)
+        # the merged version was persisted (atomic save, GC-protected)
+        deadline = time.monotonic() + 60
+        step0 = os.path.join(adir, "step_00000000", "manifest.json")
+        while not os.path.exists(step0):
+            assert time.monotonic() < deadline, "compacted save never landed"
+            time.sleep(0.02)
+        assert load_artifact(adir).fingerprint == merged.fingerprint
+    finally:
+        release.set()
+        rt.close()
+
+
+def test_deadline_expires_tickets_before_dispatch(workload, artifact):
+    _, _, queries = workload
+    with ServingRuntime(RetrievalServer.from_artifact(artifact), k=3) as rt:
+        dead = rt.submit(queries[0], deadline=0.0)
+        with pytest.raises(TicketExpired, match=r"missed its deadline"):
+            dead.result(timeout=30)
+        assert isinstance(dead.exception(1), TicketExpired)
+        live = rt.submit(queries[1])         # runtime default: no deadline
+        assert live.result(timeout=60).k == 3
+        assert rt.drain(timeout=60)
+        st = rt.stats
+        assert st.expired == 1 and st.completed == 1 and st.failed == 0
+
+
+def test_dispatch_errors_route_to_futures_not_threads(workload, artifact):
+    """A bad k fails the affected tickets with the server's own ValueError
+    instead of killing a worker thread; later tickets still complete."""
+    _, _, queries = workload
+    with ServingRuntime(RetrievalServer.from_artifact(artifact)) as rt:
+        bad = rt.submit(queries[0], k=10_000)
+        with pytest.raises(ValueError, match=r"outside \[1,"):
+            bad.result(timeout=60)
+        good = rt.submit(queries[1], k=3)
+        assert good.result(timeout=60).k == 3
+        st = rt.stats
+        assert st.failed == 1 and st.completed == 1
+
+
+def test_close_drains_then_refuses_new_tickets(workload, artifact):
+    _, _, queries = workload
+    rt = ServingRuntime(RetrievalServer.from_artifact(artifact), k=3)
+    tickets = rt.submit(queries[:6])
+    rt.close()                               # drains by default
+    for t in tickets:
+        assert t.done() and t.exception(0) is None
+    with pytest.raises(RuntimeError, match=r"runtime is closed"):
+        rt.submit(queries[0])
+    rt.close()                               # idempotent
+    assert rt.stats.completed == 6 and rt.pending == 0
+
+
+def test_reconcile_compaction_validates_and_restages(workload):
+    """reconcile_compaction unit contracts: identity when nothing raced,
+    descendant/monotonicity/delta-free validation, and — the real point —
+    the merged version serves the same effective corpus as the raced
+    lineage (user-space predictions are id-space-free, so they must be
+    bitwise equal under exact scan)."""
+    items, users, queries = workload
+    art = IndexArtifact.build(items, users, _BUILD_KEY, config=_cfg("exact"))
+    rows = jax.random.normal(jax.random.PRNGKey(3), (4, D))
+    snap = art.insert_items(rows[:2]).delete_items([5])
+    compacted = snap.compact()
+    # churn racing the build: one more insert, one base + one staged delete
+    cur = snap.insert_items(rows[2:]).delete_items([0, art.n_items + 1])
+    assert reconcile_compaction(snap, snap, compacted) is compacted
+    with pytest.raises(ValueError, match=r"delta-free compaction"):
+        reconcile_compaction(snap, cur, snap)      # still has pending churn
+    with pytest.raises(ValueError, match=r"different base build"):
+        reconcile_compaction(snap, compacted, compacted)
+    with pytest.raises(ValueError, match=r"not monotone"):
+        reconcile_compaction(snap, art, compacted)  # ancestor, not descendant
+
+    merged = reconcile_compaction(snap, cur, compacted)
+    assert merged.n_base == snap.n_items
+    assert merged.delta_used == 2               # rows[2:] re-staged
+    assert merged.n_items == cur.n_items
+    r_cur = RkMIPSEngine.from_artifact(cur).query_batch(queries, 3)
+    r_mrg = RkMIPSEngine.from_artifact(merged).query_batch(queries, 3)
+    np.testing.assert_array_equal(np.asarray(r_cur.predictions),
+                                  np.asarray(r_mrg.predictions))

@@ -218,6 +218,40 @@ def test_kmips_rejects_batch_without_enqueuing(corpus, server_cfg):
     assert len(res) == 1
 
 
+def test_submit_validates_queries_up_front(corpus, server_cfg):
+    """Malformed queries are rejected AT SUBMIT with message-asserted
+    ValueErrors — never enqueued, so they can't strand a later flush
+    (which, by the retry contract, would leave the whole batch pending)."""
+    items, queries = corpus
+    srv = RetrievalServer(items, jax.random.PRNGKey(15), config=server_cfg)
+    with pytest.raises(ValueError, match=r"submit: queries must have a "
+                                         r"floating dtype, got int32"):
+        srv.submit(np.ones((2, 24), np.int32))
+    with pytest.raises(ValueError, match=r"submit: queries must be one row "
+                                         r"\(d,\) or a block \(nq, d\), "
+                                         r"got shape \(2, 3, 24\)"):
+        srv.submit(np.ones((2, 3, 24), np.float32))
+    with pytest.raises(ValueError, match=r"submit: query dimensionality 23 "
+                                         r"!= corpus dimensionality 24"):
+        srv.submit(np.ones((23,), np.float32))
+    assert srv.pending == 0                        # nothing leaked in
+    srv.submit(queries[0])                         # good rows still pass
+    assert srv.pending == 1 and len(srv.flush(5)) == 1
+
+
+def test_reverse_submit_validates_queries_up_front(reverse_engine):
+    eng, queries = reverse_engine
+    srv = eng.reverse_server()
+    with pytest.raises(ValueError, match=r"floating dtype"):
+        srv.submit(np.ones((2, 16), np.int64))
+    with pytest.raises(ValueError, match=r"query dimensionality 8 != "
+                                         r"corpus dimensionality 16"):
+        srv.submit(np.ones((8,), np.float32))
+    assert srv.pending == 0
+    srv.submit(queries[0])
+    assert srv.pending == 1 and len(srv.flush(3)) == 1
+
+
 def test_one_compile_per_batch_size(corpus, server_cfg):
     items, queries = corpus
     srv = RetrievalServer(items, jax.random.PRNGKey(6), config=server_cfg)

@@ -119,6 +119,28 @@ def test_checkpoint_prune(tmp_path):
     assert steps == [4, 5]
 
 
+def test_checkpoint_prune_protect(tmp_path):
+    """protect= steps survive any keep budget — the artifact GC's
+    guarantee that a retention policy can never delete the version it
+    just saved, even one with a lower step number than existing steps."""
+    def steps():
+        return sorted(int(n[5:]) for n in os.listdir(tmp_path)
+                      if n.startswith("step_"))
+
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, {"a": jnp.zeros(1)})
+    ckpt.prune(str(tmp_path), keep=2, protect=(1,))
+    assert steps() == [1, 4, 5]                    # 1 survives the budget
+    ckpt.prune(str(tmp_path), keep=1, protect=(1, 4))
+    assert steps() == [1, 4, 5]
+    ckpt.prune(str(tmp_path), keep=1)
+    assert steps() == [5]
+    # keep <= 0 deletes everything unprotected
+    ckpt.save(str(tmp_path), 6, {"a": jnp.zeros(1)})
+    ckpt.prune(str(tmp_path), keep=0, protect=(6,))
+    assert steps() == [6]
+
+
 def test_failure_recovery_resumes_identically(tmp_path):
     """Train 10 steps with a crash at step 6 + restart == uninterrupted."""
     loss, params_proto, _ = _quadratic_problem()
