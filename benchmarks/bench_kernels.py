@@ -2,16 +2,27 @@
 Pallas kernels themselves target TPU; interpret-mode timing is meaningless,
 so we time the dispatch path the CPU benchmarks actually use, plus report
 the bytes-reduction each kernel achieves on TPU by construction).
+
+The ``kernel/fused_scan`` grid times the decide_count hot loop itself
+(DESIGN.md SS13) per (k, nq, m): the f32 tile scan is the floor row and the
+int8 row carries ``speedup=`` against it — on CPU that compares the lax
+mirror of the fused kernel (iterated-argmin selection + int8 gathers)
+against the stock ``lax.top_k`` + f32 gather scan, the honest CPU version
+of the bandwidth win the Pallas kernel realizes on TPU. Taus sit at a high
+quantile so lanes stay undecided across most norm-ordered tiles — the
+deep-scan regime ROADMAP names as dominant at large m.
 """
 
 from __future__ import annotations
 
+import functools
 import time
 
 import jax
 import jax.numpy as jnp
 
 from benchmarks import common
+from repro.core import sa_alsh
 from repro.kernels import ops
 
 
@@ -25,7 +36,44 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps
 
 
-def run(n=65536, d=128, n_bits=256, q=64):
+def _fused_scan_rows(m, d, ks_nqs, reps=2):
+    key = jax.random.PRNGKey(7)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    items = jax.random.normal(k1, (m, d)) * \
+        jax.random.uniform(k2, (m, 1), minval=0.2, maxval=1.5)
+    idx = sa_alsh.build_index(items, k3, tile=512, n_bits=256)
+    nq_max = max(nq for _, nq in ks_nqs)
+    users = jax.random.normal(k4, (nq_max, d))
+    users = users / jnp.linalg.norm(users, axis=-1, keepdims=True)
+    # few enough beaters that large-k lanes must walk most tiles
+    taus = jnp.quantile(users @ items.T, 0.999, axis=-1)
+
+    rows = []
+    for k, nq in ks_nqs:
+        u, t = users[:nq], taus[:nq]
+        init = jnp.zeros(nq, jnp.int32)
+        active = jnp.ones(nq, bool)
+        dts = {}
+        for prec in ("f32", "int8"):
+            fn = functools.partial(sa_alsh.decide_count, idx, u, t, init,
+                                   active, k, n_cand=64, scan="sketch",
+                                   scan_precision=prec)
+            dts[prec] = _time(fn, reps=reps)
+        _, tiles = sa_alsh.decide_count(idx, u, t, init, active, k,
+                                        n_cand=64, scan="sketch")
+        base = f"k{k}/nq{nq}/m{m}"
+        rows.append(common.fmt_row(
+            f"kernel/fused_scan/f32/{base}", dts["f32"] * 1e6,
+            f"tiles={int(tiles)};floor=1.00"))
+        rows.append(common.fmt_row(
+            f"kernel/fused_scan/int8/{base}", dts["int8"] * 1e6,
+            f"tiles={int(tiles)};"
+            f"speedup={dts['f32'] / dts['int8']:.2f}x_vs_f32"))
+    return rows
+
+
+def run(n=65536, d=128, n_bits=256, q=64, fused_m=65536,
+        fused_grid=((10, 64), (50, 256))):
     key = jax.random.PRNGKey(0)
     k1, k2, k3 = jax.random.split(key, 3)
     x = jax.random.normal(k1, (n, d))
@@ -49,4 +97,8 @@ def run(n=65536, d=128, n_bits=256, q=64):
 
     dt = _time(lambda a, b: ops.ip_topk(a, b, 100), queries, x)
     rows.append(common.fmt_row("kernel/ip_topk", dt * 1e6, f"k=100;n={n}"))
+
+    # fused_m stays at the paper's large-m point even at smoke scale: the
+    # committed BENCH cells must show the int8 scan's win where it matters
+    rows.extend(_fused_scan_rows(fused_m, d, fused_grid))
     return rows

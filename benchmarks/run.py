@@ -5,7 +5,7 @@ Prints ``name,us_per_call,derived`` CSV. Scale with --scale {smoke,bench}.
 JSON — the format of the checked-in perf baselines (BENCH_rkmips.json):
 
     PYTHONPATH=src python -m benchmarks.run --scale smoke \
-        --only rkmips,artifact,serving --host-devices 8 \
+        --only rkmips,artifact,serving,kernels --host-devices 8 \
         --json BENCH_rkmips.json
 
 ``--host-devices N`` forces an N-device host (CPU) backend before jax

@@ -71,6 +71,16 @@ class SAALSHIndex(NamedTuple):
                   global order is norm-descending, tile t's max also bounds
                   every row of every later tile t' > t, which is what makes
                   it the scan's early-termination bound.
+      qitems:     (n_pad, d) int8 per-partition symmetric quantization of
+                  ``items`` (DESIGN.md SS13): row i is
+                  round(items[i] / qscale[i]), zero for padding. The
+                  ``scan_precision="int8"`` screen reads these instead of
+                  the f32 rows (~4x less bandwidth on the scan hot path).
+      qscale:     (n_pad,) f32 dequantization scale of each row -- shared
+                  within a partition (max |coord| in the partition / 127),
+                  stored per row so candidate gathers need no second
+                  ``part_id`` indirection; 0 for padding and all-zero
+                  partitions.
     """
 
     items: jnp.ndarray
@@ -85,6 +95,8 @@ class SAALSHIndex(NamedTuple):
     part_radius: jnp.ndarray
     n_parts: jnp.ndarray
     tile_max_norm: jnp.ndarray
+    qitems: jnp.ndarray
+    qscale: jnp.ndarray
 
     @property
     def tile(self) -> int:
@@ -101,6 +113,43 @@ def _pad_rows(x: jnp.ndarray, n_pad: int, fill=0):
         return x
     widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
     return jnp.pad(x, widths, constant_values=fill)
+
+
+def _quantize_with_scale(rows: jnp.ndarray, scale: jnp.ndarray):
+    """round(rows / scale) as int8; all-zero rows (scale 0) quantize to 0."""
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(rows / safe[:, None]), -127.0, 127.0)
+    return q.astype(jnp.int8)
+
+
+def quantize_rows(rows: jnp.ndarray):
+    """Per-row symmetric int8 quantization: ``(qrows int8, scale f32)``.
+
+    ``scale[i] = max|rows[i]| / 127`` (0 for an all-zero row, which
+    quantizes to zeros). This is the staged-delta convention
+    (engine/artifact.py::insert_items): delta rows have no norm partition,
+    so each carries its own scale -- the error ball
+    0.5 * scale * sqrt(d) * ||u|| (see ``decide_count``) holds per row
+    either way.
+    """
+    scale = jnp.max(jnp.abs(rows), axis=-1) / 127.0
+    return _quantize_with_scale(rows, scale), scale.astype(jnp.float32)
+
+
+def quantize_partitioned(rows: jnp.ndarray, part_id: jnp.ndarray,
+                         max_partitions: int):
+    """Per-partition symmetric int8 quantization: ``(qrows, scale)`` with
+    one shared scale per norm partition (max |coord| in the partition /
+    127), broadcast back to a per-row (n,) array. Coarser than per-row --
+    the scan gathers one scale per candidate with no ``part_id``
+    indirection, and a partition's rows stay mutually comparable in code
+    space."""
+    absmax = jnp.max(jnp.abs(rows), axis=-1)
+    pmax = jax.ops.segment_max(absmax, part_id,
+                               num_segments=max_partitions)
+    pmax = jnp.where(pmax > 0, pmax, 0.0)     # empty segments hold -inf
+    scale = (pmax / 127.0)[part_id]
+    return _quantize_with_scale(rows, scale), scale.astype(jnp.float32)
 
 
 class PreparedItems(NamedTuple):
@@ -129,6 +178,8 @@ class PreparedItems(NamedTuple):
     n_parts: jnp.ndarray        # () int32
     tile_max_norm: jnp.ndarray  # (n_tiles,) f32
     transformed: jnp.ndarray    # (n_pad, d+1) f32 rows to hash; 0 padding
+    qitems: jnp.ndarray         # (n_pad, d) int8 quantized rows; 0 padding
+    qscale: jnp.ndarray         # (n_pad,) f32 per-row dequant scale
 
 
 @functools.partial(jax.jit,
@@ -161,6 +212,8 @@ def _prepare(items, *, b, max_partitions, tile, transform, n_pad):
     item_mask = _pad_rows(jnp.ones((n,), bool), n_pad)
     norms_p = _pad_rows(norms_sorted, n_pad)
     tile_max = jnp.max(norms_p.reshape(-1, tile), axis=-1)
+    qitems, qscale = quantize_partitioned(items_sorted, parts.part_id,
+                                          max_partitions)
 
     return PreparedItems(
         items=_pad_rows(items_sorted, n_pad),
@@ -174,6 +227,8 @@ def _prepare(items, *, b, max_partitions, tile, transform, n_pad):
         n_parts=parts.n_parts,
         tile_max_norm=tile_max,
         transformed=_pad_rows(transformed, n_pad),
+        qitems=_pad_rows(qitems, n_pad),
+        qscale=_pad_rows(qscale, n_pad),
     )
 
 
@@ -203,6 +258,8 @@ def assemble_index(prep: PreparedItems, codes: jnp.ndarray,
         part_radius=prep.part_radius,
         n_parts=prep.n_parts,
         tile_max_norm=prep.tile_max_norm,
+        qitems=prep.qitems,
+        qscale=prep.qscale,
     )
 
 
@@ -268,10 +325,93 @@ def _tile_candidates(index: SAALSHIndex, ucodes, users, t, *, n_cand: int,
     return ips, valid, cand.astype(jnp.int32)
 
 
+# Headroom multiplier on the quantization error ball: the ball bounds the
+# *real-arithmetic* rounding residual; the extra 1% covers the f32 rounding
+# of both the dequantized and the exact inner-product evaluations (each is
+# ~127 * d * eps_f32 relative to the ball's own radius, < 0.5% at d = 4096).
+_QERR_SLACK = 1.01
+
+_SCAN_PRECISIONS = ("f32", "int8")
+
+
+def _tile_beat_int8(index: SAALSHIndex, ucodes, users, unorm, thr, t, *,
+                    n_cand: int, scan: str):
+    """Per-lane survivor count of tile t under the quantized screen
+    (DESIGN.md SS13) -- bitwise the f32 scan's count.
+
+    Candidates are classified against ``thr`` with their dequantized int8
+    inner products and the conservative error ball
+    ``qerr = 0.5 * scale * sqrt(d) * ||u|| * slack`` (Cauchy-Schwarz on the
+    per-coordinate rounding residual |delta_i| <= scale/2): a *definite*
+    beat (qips - qerr > thr) counts immediately, a definite miss
+    (qips + qerr <= thr) drops, and only the band in between is re-ranked
+    with exact f32 rows. The ball can only widen the band (over-admission),
+    never misclassify, so the count matches the f32 path's.
+    """
+    tile = index.tile
+    radius = 0.5 * float(index.dim) ** 0.5 * _QERR_SLACK
+    items_t = _tile_slice(index.items, t, tile)           # (tile, d)
+    mask_t = _tile_slice(index.item_mask, t, tile)        # (tile,)
+    qitems_t = _tile_slice(index.qitems, t, tile)         # (tile, d)
+    qscale_t = _tile_slice(index.qscale, t, tile)         # (tile,)
+    if scan == "exact":
+        # Dense quantized screen over the whole tile. The band re-ranks
+        # against the SAME (C, tile) f32 GEMM the f32 path computes (a
+        # gathered-row einsum is not bitwise-stable against a GEMM), so
+        # exact-scan int8 exercises the screen as a correctness mode; the
+        # bandwidth win lives on the sketch path, where the exact re-rank
+        # touches only the band rows.
+        qips = (users @ qitems_t.T.astype(jnp.float32)) * qscale_t[None, :]
+        qerr = (radius * qscale_t)[None, :] * unorm[:, None]
+        valid = mask_t[None, :]
+        definite = valid & (qips - qerr > thr[:, None])
+        band = valid & ~definite & (qips + qerr > thr[:, None])
+        ips = users @ items_t.T
+        return (jnp.sum(definite, axis=-1)
+                + jnp.sum(band & (ips > thr[:, None]), axis=-1))
+
+    codes_t = _tile_slice(index.codes, t, tile)
+    cand, qips = kops.fused_scan(ucodes, codes_t, mask_t, qitems_t,
+                                 qscale_t, users, n_cand=n_cand)
+    valid = jnp.take(mask_t, cand, axis=0)                # (C, n_cand)
+    qerr = radius * jnp.take(qscale_t, cand, axis=0) * unorm[:, None]
+    definite = valid & (qips - qerr > thr[:, None])
+    band = valid & ~definite & (qips + qerr > thr[:, None])
+    count = jnp.sum(definite, axis=-1)
+
+    # Exact f32 re-rank of the band, <= s_slots rows per lane per pass
+    # (one pass in practice: the band is the thin shell |ip - thr| < qerr).
+    # s_slots >= 8 keeps the gathered (C, s, d) einsum bitwise equal to the
+    # f32 path's (C, n_cand, d) einsum on this backend -- pinned by
+    # tests/test_kernels.py::test_band_einsum_bitwise_stable; s == n_cand
+    # is the identical shape outright.
+    s_slots = min(16, n_cand)
+
+    def have_band(state):
+        left, _ = state
+        return jnp.any(left)
+
+    def rerank(state):
+        left, c = state
+        prio, pos = jax.lax.top_k(left.astype(jnp.int32), s_slots)
+        real = prio > 0
+        rows = jnp.take_along_axis(cand, pos, axis=-1)    # (C, s)
+        vecs = jnp.take(items_t, rows, axis=0)            # (C, s, d)
+        eips = jnp.einsum("cnd,cd->cn", vecs, users)
+        c = c + jnp.sum(real & (eips > thr[:, None]), axis=-1)
+        hit = jax.nn.one_hot(pos, n_cand, dtype=bool) & real[..., None]
+        return left & ~jnp.any(hit, axis=-2), c
+
+    _, band_count = jax.lax.while_loop(
+        have_band, rerank, (band, jnp.zeros_like(count)))
+    return count + band_count
+
+
 def decide_count_impl(index: SAALSHIndex, users: jnp.ndarray,
                       taus: jnp.ndarray, init_count: jnp.ndarray,
                       active: jnp.ndarray, k: int, *, n_cand: int = 64,
-                      scan: str = "sketch", eps: jnp.ndarray | float = 0.0):
+                      scan: str = "sketch", eps: jnp.ndarray | float = 0.0,
+                      scan_precision: str = "f32"):
     """RkMIPS decision for a chunk of user lanes against their thresholds.
 
     users (C, d) -- unit user vectors; taus (C,) = <u, q>; init_count (C,) --
@@ -295,11 +435,21 @@ def decide_count_impl(index: SAALSHIndex, users: jnp.ndarray,
       no  <=> #{p : <u,p> > tau + eps} >= k
       yes <=> scan exhausted / bound mu_tile <= tau with count < k.
 
+    scan_precision selects the tile screen (DESIGN.md SS13): "f32" (the
+    stock float scan) or "int8" (the quantized screen + banded exact
+    re-rank of ``_tile_beat_int8``, fed by the fused kernel
+    ``repro.kernels.fused_scan``). Execution-only: both produce bitwise
+    identical decisions, the early-exit bound and the tile walk are
+    precision-independent, and the plan phase never sees the knob.
+
     This is the undecorated body; call ``decide_count`` (the jitted alias)
     directly. The impl exists for composition inside outer transforms --
     the batched driver traces it raw so the whole query phase stays a
     single-jit computation that is safe under ``shard_map`` (DESIGN.md SS9).
     """
+    if scan_precision not in _SCAN_PRECISIONS:
+        raise ValueError(f"scan_precision must be one of {_SCAN_PRECISIONS},"
+                         f" got {scan_precision!r}")
     n_tiles = index.tile_max_norm.shape[0]
     n_cand_eff = index.tile if scan == "exact" else n_cand
     ucodes = user_codes(index, users) if scan == "sketch" else \
@@ -307,6 +457,8 @@ def decide_count_impl(index: SAALSHIndex, users: jnp.ndarray,
     # (taus + eps) broadcasts for scalar and per-lane eps alike, and is
     # bitwise the f32 additions the scalar-eps form performed.
     thr = taus + eps                                      # (C,)
+    unorm = (jnp.linalg.norm(users, axis=-1)
+             if scan_precision == "int8" else None)
 
     def cond(state):
         t, count, undecided = state
@@ -318,9 +470,13 @@ def decide_count_impl(index: SAALSHIndex, users: jnp.ndarray,
         # Lanes whose tau already dominates the bound are decided "yes".
         bound_done = mu <= taus
         still = undecided & ~bound_done
-        ips, valid, _ = _tile_candidates(index, ucodes, users, t,
-                                         n_cand=n_cand_eff, scan=scan)
-        beat = jnp.sum((ips > thr[:, None]) & valid, axis=-1)
+        if scan_precision == "int8":
+            beat = _tile_beat_int8(index, ucodes, users, unorm, thr, t,
+                                   n_cand=n_cand_eff, scan=scan)
+        else:
+            ips, valid, _ = _tile_candidates(index, ucodes, users, t,
+                                             n_cand=n_cand_eff, scan=scan)
+            beat = jnp.sum((ips > thr[:, None]) & valid, axis=-1)
         count = count + jnp.where(still, beat, 0)
         undecided = still & (count < k)
         return t + 1, count, undecided
@@ -334,7 +490,8 @@ def decide_count_impl(index: SAALSHIndex, users: jnp.ndarray,
 
 
 decide_count = functools.partial(
-    jax.jit, static_argnames=("k", "n_cand", "scan"))(decide_count_impl)
+    jax.jit, static_argnames=("k", "n_cand", "scan", "scan_precision"),
+)(decide_count_impl)
 
 
 @functools.partial(jax.jit, static_argnames=("k",))

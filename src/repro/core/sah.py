@@ -303,7 +303,7 @@ def _plan_one(index: SAHIndex, q: jnp.ndarray, k: int, tie_eps: float,
 
 def rkmips_impl(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
                 scan: str = "sketch", chunk: int = 256,
-                tie_eps: float = 0.0,
+                tie_eps: float = 0.0, scan_precision: str = "f32",
                 delta_items: jnp.ndarray | None = None,
                 delta_mask: jnp.ndarray | None = None):
     """Algorithm 5 for one query, undecorated: the per-query REFERENCE
@@ -349,7 +349,8 @@ def rkmips_impl(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
         counts_c = jnp.take(count0, ids)
         is_yes, t_vis = _alsh.decide_count_impl(
             index.alsh, users_c, taus_c, counts_c, active, k,
-            n_cand=n_cand, scan=scan, eps=eps)
+            n_cand=n_cand, scan=scan, eps=eps,
+            scan_precision=scan_precision)
         pred = pred.at[ids].set(jnp.where(active, is_yes, pred[ids]))
         return ci + 1, pred, tiles + t_vis
 
@@ -370,7 +371,8 @@ def rkmips_impl(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
 
 
 rkmips = functools.partial(
-    jax.jit, static_argnames=("k", "n_cand", "scan", "chunk", "tie_eps"),
+    jax.jit, static_argnames=("k", "n_cand", "scan", "chunk", "tie_eps",
+                              "scan_precision"),
 )(rkmips_impl)
 
 
@@ -464,7 +466,7 @@ rkmips_plan = functools.partial(
 
 def rkmips_execute_impl(index: SAHIndex, plan: RkMIPSPlan, k: int, *,
                         n_cand: int = 64, scan: str = "sketch",
-                        chunk: int = 256):
+                        chunk: int = 256, scan_precision: str = "f32"):
     """Phase 2 (execute): ONE while_loop over fixed-size, possibly
     mixed-query chunks of the flat work queue. Returns
     (pred (nq, m_pad) bool, QueryStats with (nq,) counters).
@@ -506,7 +508,8 @@ def rkmips_execute_impl(index: SAHIndex, plan: RkMIPSPlan, k: int, *,
         eps_c = jnp.take(plan.eps, qid)
         is_yes, t_vis = _alsh.decide_count_impl(
             index.alsh, users_c, taus_c, counts_c, active, k,
-            n_cand=n_cand, scan=scan, eps=eps_c)
+            n_cand=n_cand, scan=scan, eps=eps_c,
+            scan_precision=scan_precision)
         pred = pred.at[ids].set(jnp.where(active, is_yes, pred[ids]))
         present = jnp.zeros((nq,), bool).at[qid].max(active)
         tiles_q = tiles_q + jnp.where(present, t_vis, 0)
@@ -531,13 +534,15 @@ def rkmips_execute_impl(index: SAHIndex, plan: RkMIPSPlan, k: int, *,
 
 
 rkmips_execute = functools.partial(
-    jax.jit, static_argnames=("k", "n_cand", "scan", "chunk"),
+    jax.jit, static_argnames=("k", "n_cand", "scan", "chunk",
+                              "scan_precision"),
 )(rkmips_execute_impl)
 
 
 def rkmips_batch_impl(index: SAHIndex, queries: jnp.ndarray, k: int, *,
                       n_cand: int = 64, scan: str = "sketch",
                       chunk: int = 256, tie_eps: float = 0.0,
+                      scan_precision: str = "f32",
                       delta_items: jnp.ndarray | None = None,
                       delta_mask: jnp.ndarray | None = None):
     """Batched Algorithm 5, undecorated: plan + execute (DESIGN.md SS9).
@@ -557,14 +562,15 @@ def rkmips_batch_impl(index: SAHIndex, queries: jnp.ndarray, k: int, *,
     plan = rkmips_plan_impl(index, queries, k, tie_eps=tie_eps,
                             delta_items=delta_items, delta_mask=delta_mask)
     return rkmips_execute_impl(index, plan, k, n_cand=n_cand, scan=scan,
-                               chunk=chunk)
+                               chunk=chunk, scan_precision=scan_precision)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "n_cand", "scan", "chunk", "tie_eps"))
+    jax.jit, static_argnames=("k", "n_cand", "scan", "chunk", "tie_eps",
+                              "scan_precision"))
 def rkmips_batch(index: SAHIndex, queries: jnp.ndarray, k: int, *,
                  n_cand: int = 64, scan: str = "sketch", chunk: int = 256,
-                 tie_eps: float = 0.0,
+                 tie_eps: float = 0.0, scan_precision: str = "f32",
                  delta_items: jnp.ndarray | None = None,
                  delta_mask: jnp.ndarray | None = None):
     """Jitted batched Algorithm 5 — see ``rkmips_batch_impl``. (A wrapper
@@ -572,12 +578,14 @@ def rkmips_batch(index: SAHIndex, queries: jnp.ndarray, k: int, *,
     wrap it to prove one body invocation per trace.)"""
     return rkmips_batch_impl(index, queries, k, n_cand=n_cand, scan=scan,
                              chunk=chunk, tie_eps=tie_eps,
+                             scan_precision=scan_precision,
                              delta_items=delta_items, delta_mask=delta_mask)
 
 
 def rkmips_batch_mapped(index: SAHIndex, queries: jnp.ndarray, k: int, *,
                         n_cand: int = 64, scan: str = "sketch",
                         chunk: int = 256, tie_eps: float = 0.0,
+                        scan_precision: str = "f32",
                         delta_items: jnp.ndarray | None = None,
                         delta_mask: jnp.ndarray | None = None):
     """The legacy batch driver: ``lax.map`` of independent per-query
@@ -588,6 +596,7 @@ def rkmips_batch_mapped(index: SAHIndex, queries: jnp.ndarray, k: int, *,
     batched-vs-mapped wall time against."""
     fn = functools.partial(rkmips, index, k=k, n_cand=n_cand, scan=scan,
                            chunk=chunk, tie_eps=tie_eps,
+                           scan_precision=scan_precision,
                            delta_items=delta_items, delta_mask=delta_mask)
     return jax.lax.map(lambda q: fn(q), queries)
 

@@ -159,6 +159,14 @@ class IndexArtifact:
         self.delta_items = delta_items      # (capacity, d) staged rows
         self.delta_mask = delta_mask        # (capacity,) bool live rows
         self.delta_used = int(delta_used)   # slots consumed (append-only)
+        # Staged rows quantized at insert (every insert evolves a new
+        # artifact through here). Per-row scales -- partitions are a
+        # compacted-index notion; dead slots quantize to zeros/scale 0.
+        # Persisted with the version and consumed by the int8 screen once
+        # a delta-aware execute phase lands; today's plan phase counts
+        # deltas in f32 (DESIGN.md SS13), so this is derived state only.
+        self.delta_qitems, self.delta_qscale = \
+            _alsh.quantize_rows(delta_items)
         # Transient diagnostics of the build that made this version (a
         # BuildTimings, engine/build.py), None when wired from pieces or
         # loaded from disk; never part of the fingerprint or the manifest.
@@ -284,10 +292,13 @@ class IndexArtifact:
         if self._fingerprint is None:
             if self._base_fp is None:
                 b = hashlib.sha256(f"{_KIND}-v{_FORMAT}".encode())
-                # build_sharding is execution-only: the built content is
-                # bitwise identical either way (DESIGN.md SS11), so a
-                # sharded build must fingerprint-match a single-device one
-                cfg = self.config.replace(build_sharding="auto")
+                # build_sharding and scan_precision are execution-only:
+                # the built content (DESIGN.md SS11) and the predictions
+                # (SS13) are bitwise identical either way, so a sharded
+                # build or an int8-scanning config must fingerprint-match
+                # the defaults
+                cfg = self.config.replace(build_sharding="auto",
+                                          scan_precision="f32")
                 b.update(repr(dataclasses.astuple(cfg)).encode())
                 b.update(_array_bytes(self.key))
                 b.update(_array_bytes(self.items))
@@ -573,7 +584,9 @@ class IndexArtifact:
     def _flat_arrays(self) -> dict:
         out = {"items": self.items, "key": self.key,
                "deleted": self.deleted, "delta_items": self.delta_items,
-               "delta_mask": self.delta_mask}
+               "delta_mask": self.delta_mask,
+               "delta_qitems": self.delta_qitems,
+               "delta_qscale": self.delta_qscale}
         if self.users is not None:
             out["users"] = self.users
         if self.index is not None:

@@ -36,6 +36,7 @@ _TRANSFORMS = ("sat", "qnf")
 _BLOCKINGS = ("cone", "norm")
 _SCANS = ("sketch", "exact")
 _BUILD_SHARDINGS = ("auto", "single", "sharded")
+_SCAN_PRECISIONS = ("f32", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +60,12 @@ class EngineConfig:
       n_cand:  sketch candidates re-ranked per tile.
       chunk:   survivor-compaction chunk size.
       tie_eps: relative tie tolerance, shared with the oracle (core/exact.py).
+      scan_precision: "f32" (stock float tile scan) or "int8" (quantized
+               screen + banded exact re-rank fed by the fused Pallas
+               kernel, DESIGN.md SS13). Execution-only: predictions are
+               bitwise identical either way, so — like ``build_sharding``
+               — it is excluded from the artifact fingerprint and from
+               ``attach`` config equality, and the plan phase ignores it.
 
     Online-serving knobs (engine/serving.py, DESIGN.md SS8):
       serve_batch_size:     micro-batch size the RetrievalServer pads
@@ -106,6 +113,7 @@ class EngineConfig:
     serve_cache_capacity: int = 4
     delta_capacity: int = 256
     build_sharding: str = "auto"
+    scan_precision: str = "f32"
 
     def __post_init__(self):
         if self.build_sharding not in _BUILD_SHARDINGS:
@@ -121,6 +129,10 @@ class EngineConfig:
         if self.scan not in _SCANS:
             raise ValueError(f"scan must be one of {_SCANS}, "
                              f"got {self.scan!r}")
+        if self.scan_precision not in _SCAN_PRECISIONS:
+            raise ValueError(f"scan_precision must be one of "
+                             f"{_SCAN_PRECISIONS}, "
+                             f"got {self.scan_precision!r}")
         for name in ("k_max", "leaf_size", "n_bits", "tile",
                      "max_partitions", "n_cand", "chunk",
                      "serve_batch_size", "serve_cache_capacity",
@@ -153,7 +165,8 @@ class EngineConfig:
     def query_kwargs(self) -> dict:
         """Kwargs for core/sah.py::rkmips / rkmips_batch."""
         return dict(scan=self.scan, n_cand=self.n_cand, chunk=self.chunk,
-                    tie_eps=self.tie_eps)
+                    tie_eps=self.tie_eps,
+                    scan_precision=self.scan_precision)
 
     def kmips_build_kwargs(self, n_items: int) -> dict:
         """Kwargs for core/sa_alsh.py::build_index over ``n_items`` rows.

@@ -255,13 +255,15 @@ class RkMIPSEngine:
         if not isinstance(artifact, _artifact.IndexArtifact):
             raise TypeError(f"attach expects an IndexArtifact, got "
                             f"{type(artifact).__name__}")
-        # delta_capacity and build_sharding are lifecycle/execution knobs,
-        # not build/query recipe fields (engine/config.py): the artifact's
-        # own buffer governs, the built content is sharding-independent,
-        # so configs differing only there are interchangeable here
+        # delta_capacity, build_sharding and scan_precision are lifecycle/
+        # execution knobs, not build/query recipe fields (engine/config.py):
+        # the artifact's own buffer governs, the built content is sharding-
+        # independent, and both scan precisions predict bitwise alike, so
+        # configs differing only there are interchangeable here
         if artifact.config.replace(
                 delta_capacity=self.config.delta_capacity,
-                build_sharding=self.config.build_sharding) != self.config:
+                build_sharding=self.config.build_sharding,
+                scan_precision=self.config.scan_precision) != self.config:
             raise ValueError(
                 "artifact config does not match this engine's config; use "
                 "RkMIPSEngine.from_artifact(artifact) (or rebuild the "

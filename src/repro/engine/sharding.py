@@ -162,7 +162,7 @@ def shard_index(index: _sah.SAHIndex, policy: ShardingPolicy
 def rkmips_batch(index: _sah.SAHIndex, queries: jnp.ndarray, k: int,
                  policy: ShardingPolicy, *, n_cand: int = 64,
                  scan: str = "sketch", chunk: int = 256,
-                 tie_eps: float = 0.0,
+                 tie_eps: float = 0.0, scan_precision: str = "f32",
                  delta_items: jnp.ndarray | None = None,
                  delta_mask: jnp.ndarray | None = None):
     """Sharded Algorithm 5 over a query batch (one trace per batch shape).
@@ -191,6 +191,7 @@ def rkmips_batch(index: _sah.SAHIndex, queries: jnp.ndarray, k: int,
     if policy.mesh is None:
         return _sah.rkmips_batch(index, queries, k, n_cand=n_cand,
                                  scan=scan, chunk=chunk, tie_eps=tie_eps,
+                                 scan_precision=scan_precision,
                                  delta_items=delta_items,
                                  delta_mask=delta_mask)
     index = pad_index(index, n_shards(policy))
@@ -202,7 +203,8 @@ def rkmips_batch(index: _sah.SAHIndex, queries: jnp.ndarray, k: int,
         d_items, d_mask = delta if delta else (None, None)
         pred_l, stats_l = _sah.rkmips_batch_impl(
             idx_l, qs, k, n_cand=n_cand, scan=scan, chunk=chunk,
-            tie_eps=tie_eps, delta_items=d_items, delta_mask=d_mask)
+            tie_eps=tie_eps, scan_precision=scan_precision,
+            delta_items=d_items, delta_mask=d_mask)
         pred = jax.lax.all_gather(pred_l, axes, axis=1, tiled=True)
         stats = jax.tree.map(lambda s: jax.lax.psum(s, axes), stats_l)
         return pred, stats

@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: fused Hamming filter + quantized IP for decide_count.
+
+This is the int8 hot path of the RkMIPS execute loop (DESIGN.md SS13). For a
+chunk of user lanes and one norm-ordered item tile it fuses three stages that
+the f32 path runs as separate lax ops:
+
+  1. popcount(xor(codes))         -- the SA-ALSH sketch filter,
+  2. top-``n_cand`` selection     -- survivor compaction per lane,
+  3. int8 gather + dequantized IP -- the quantized screening scores.
+
+The caller (core/sa_alsh.py::_tile_beat_int8) classifies the returned scores
+against its error ball and re-ranks only the ambiguous band in exact f32, so
+nothing here needs to be bitwise anything -- correctness of the final counts
+depends only on ``|qips - <qitems[cand], u> * qscale[cand]|`` staying inside
+the float error the ball's 1% slack absorbs (see _QERR_SLACK).
+
+Selection uses iterated argmin rather than a sort: argmin takes the lowest
+index on ties, which is exactly ``jax.lax.top_k``'s tie-break on negated
+distances, so the lax mirror below is candidate-for-candidate identical to
+the ref.py oracle. Selected lanes are masked to INT32_MAX; unselected
+entries are at most _BIG_HAMMING (1 << 30) < INT32_MAX, so a row can never
+be picked twice while any unpicked row remains.
+
+Tiling: grid (C // block_q,). Each program instance owns ``block_q`` user
+lanes and the whole (T, W) code tile / (T, d) int8 tile -- T is the core
+library's partition tile (<= 4096), so at T=4096, d=128, W=8 the resident
+VMEM is 4096*8*4 + 4096*128 + 4096*4 + block_q*(W*4 + d*4) ~ 0.7 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref as _ref
+
+# Python ints, not jnp scalars: the Pallas kernel body may not capture
+# traced constants, and weak-typed literals fold into int32 ops anyway.
+_BIG_HAMMING = 1 << 30
+_INT_MAX = 2**31 - 1
+
+
+def fused_scan_lax(ucodes: jnp.ndarray, item_codes: jnp.ndarray,
+                   item_mask: jnp.ndarray, qitems: jnp.ndarray,
+                   qscale: jnp.ndarray, users: jnp.ndarray,
+                   *, n_cand: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """lax mirror of the kernel; bitwise equal to ref.fused_scan.
+
+    Same signature/result as ref.fused_scan but selects by iterated argmin
+    instead of ``lax.top_k`` -- on CPU the O(T log T) sort inside top_k
+    dominates the whole scan (BENCH kernel/fused_scan cells), while n_cand
+    argmin sweeps stay O(n_cand * T) with trivial constants. Scores the
+    selected rows with the identical gather + einsum the oracle uses, so the
+    qips halves agree bitwise too. Not jitted: called inside already-jitted
+    decide_count traces.
+    """
+    dist = _ref.hamming_scores(ucodes, item_codes)        # (C, T)
+    dist = jnp.where(item_mask[None, :], dist, _BIG_HAMMING)
+    c, t = dist.shape
+    cand0 = jnp.zeros((c, n_cand), dtype=jnp.int32)
+
+    def pick(i, state):
+        d_, cand = state
+        arg = jnp.argmin(d_, axis=-1)                     # ties -> lowest row
+        cand = cand.at[:, i].set(arg.astype(jnp.int32))
+        onehot = jax.nn.one_hot(arg, t, dtype=jnp.bool_)
+        return jnp.where(onehot, _INT_MAX, d_), cand
+
+    _, cand = jax.lax.fori_loop(0, n_cand, pick, (dist, cand0))
+    qvecs = jnp.take(qitems, cand, axis=0).astype(jnp.float32)
+    qips = jnp.einsum("cnd,cd->cn", qvecs, users)
+    qips = qips * jnp.take(qscale, cand, axis=0)
+    return cand, qips
+
+
+def _fused_scan_kernel(uc_ref, codes_ref, mask_ref, qitems_ref, qscale_ref,
+                       users_ref, cand_ref, qips_ref, *, n_cand):
+    uc = uc_ref[...]                     # (bq, W) uint32
+    codes = codes_ref[...]               # (T, W) uint32
+    mask = mask_ref[...]                 # (1, T) int32
+    qf = qitems_ref[...].astype(jnp.float32)   # (T, d)
+    qs = qscale_ref[...]                 # (1, T) f32
+    u = users_ref[...]                   # (bq, d) f32
+    bq, t = uc.shape[0], codes.shape[0]
+
+    x = jnp.bitwise_xor(uc[:, None, :], codes[None, :, :])
+    dist = jnp.sum(jax.lax.population_count(x), axis=-1).astype(jnp.int32)
+    dist = jnp.where(mask > 0, dist, _BIG_HAMMING)        # (bq, T)
+
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bq, t), 1)
+
+    def pick(i, d_):
+        arg = jnp.argmin(d_, axis=-1).astype(jnp.int32)   # (bq,)
+        onehot = cols == arg[:, None]                     # (bq, T)
+        # dynamic row gather as a one-hot matmul: MXU-friendly, no
+        # per-lane scatter/gather addressing inside the kernel
+        row = jnp.dot(onehot.astype(jnp.float32), qf,
+                      preferred_element_type=jnp.float32)  # (bq, d)
+        scale = jnp.sum(jnp.where(onehot, qs, 0.0), axis=-1)
+        ip = jnp.sum(row * u, axis=-1) * scale
+        cand_ref[:, i] = arg
+        qips_ref[:, i] = ip
+        return jnp.where(onehot, _INT_MAX, d_)
+
+    jax.lax.fori_loop(0, n_cand, pick, dist)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_cand", "block_q", "interpret"))
+def fused_scan_tiles(ucodes: jnp.ndarray, item_codes: jnp.ndarray,
+                     item_mask: jnp.ndarray, qitems: jnp.ndarray,
+                     qscale: jnp.ndarray, users: jnp.ndarray,
+                     *, n_cand: int, block_q: int = 8,
+                     interpret: bool = False
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """ucodes (C, W) u32, item_codes (T, W) u32, item_mask (T,) bool,
+    qitems (T, d) int8, qscale (T,) f32, users (C, d) f32
+    -> (cand (C, n_cand) int32, qips (C, n_cand) f32).
+
+    C must be a multiple of block_q (ops.py falls back to block_q=1).
+    cand matches ref.fused_scan exactly; qips matches to float tolerance
+    (the one-hot matmul gather reassociates the dot product).
+    """
+    c, w = ucodes.shape
+    t, w2 = item_codes.shape
+    d = qitems.shape[1]
+    assert w == w2, (w, w2)
+    assert c % block_q == 0, (c, block_q)
+    mask2 = item_mask.astype(jnp.int32).reshape(1, t)
+    qscale2 = qscale.reshape(1, t)
+    grid = (c // block_q,)
+    return pl.pallas_call(
+        functools.partial(_fused_scan_kernel, n_cand=n_cand),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, w), lambda i: (i, 0)),
+            pl.BlockSpec((t, w), lambda i: (0, 0)),
+            pl.BlockSpec((1, t), lambda i: (0, 0)),
+            pl.BlockSpec((t, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, t), lambda i: (0, 0)),
+            pl.BlockSpec((block_q, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, n_cand), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, n_cand), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((c, n_cand), jnp.int32),
+            jax.ShapeDtypeStruct((c, n_cand), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ucodes, item_codes, mask2, qitems, qscale2, users)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _flash
+from repro.kernels import fused_scan as _fused
 from repro.kernels import hamming_scan as _hamming
 from repro.kernels import ip_topk as _ip_topk
 from repro.kernels import ref as _ref
@@ -44,6 +45,28 @@ def hamming_scores(query_codes: jnp.ndarray,
         return _hamming.hamming_scores(query_codes, item_codes, block_q=bq,
                                        block_n=bn, interpret=_interpret())
     return _ref.hamming_scores(query_codes, item_codes)
+
+
+def fused_scan(ucodes: jnp.ndarray, item_codes: jnp.ndarray,
+               item_mask: jnp.ndarray, qitems: jnp.ndarray,
+               qscale: jnp.ndarray, users: jnp.ndarray,
+               *, n_cand: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused Hamming filter + top-n_cand + dequantized int8 IP per lane.
+
+    (C, W) u32 x (T, W) u32 codes with (T,) mask, (T, d) int8 + (T,) scale
+    -> (cand (C, n_cand) int32, qips (C, n_cand) f32). The CPU fallback is
+    the lax mirror, not ref.py: identical results (cand bitwise, qips
+    bitwise too -- same gather + einsum) but without lax.top_k's sort,
+    which dominates the scan on CPU (see BENCH kernel/fused_scan cells).
+    """
+    if _use_pallas():
+        c = users.shape[0]
+        bq = min(8, c) if c % min(8, c) == 0 else 1
+        return _fused.fused_scan_tiles(ucodes, item_codes, item_mask,
+                                       qitems, qscale, users, n_cand=n_cand,
+                                       block_q=bq, interpret=_interpret())
+    return _fused.fused_scan_lax(ucodes, item_codes, item_mask, qitems,
+                                 qscale, users, n_cand=n_cand)
 
 
 def srp_hash(x: jnp.ndarray, proj: jnp.ndarray) -> jnp.ndarray:

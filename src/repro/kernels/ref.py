@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 _POW2 = (2 ** jnp.arange(32, dtype=jnp.uint32)).astype(jnp.uint32)
+_BIG_HAMMING = jnp.int32(1 << 30)
 
 
 def hamming_scores(query_codes: jnp.ndarray,
@@ -47,6 +48,37 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bhkd->bhqd", p,
                       v.astype(jnp.float32)).astype(q.dtype)
+
+
+def fused_scan(ucodes: jnp.ndarray, item_codes: jnp.ndarray,
+               item_mask: jnp.ndarray, qitems: jnp.ndarray,
+               qscale: jnp.ndarray, users: jnp.ndarray,
+               n_cand: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused quantized sketch-scan oracle (DESIGN.md SS13).
+
+    Hamming-filters one item tile against a chunk of user lanes, selects
+    each lane's ``n_cand`` closest rows, and scores them with dequantized
+    int8 inner products:
+
+    ucodes (C, W) uint32, item_codes (T, W) uint32, item_mask (T,) bool,
+    qitems (T, d) int8, qscale (T,) f32, users (C, d) f32
+    -> (cand (C, n_cand) int32 tile-local rows, qips (C, n_cand) f32).
+
+    Candidate order is ``jax.lax.top_k``'s: ascending Hamming distance,
+    ties broken by lower row. Masked rows rank behind every live row
+    (distance forced to +BIG) but still yield deterministic candidates, so
+    all-masked tiles are well-defined. ``qips[c, j]`` is
+    ``<float(qitems[cand[c, j]]), users[c]> * qscale[cand[c, j]]`` -- the
+    scale multiplies *after* the integer-valued dot, which is what the
+    error ball of ``core/sa_alsh.py::_tile_beat_int8`` assumes.
+    """
+    dist = hamming_scores(ucodes, item_codes)             # (C, T)
+    dist = jnp.where(item_mask[None, :], dist, _BIG_HAMMING)
+    _, cand = jax.lax.top_k(-dist, n_cand)                # (C, n_cand)
+    qvecs = jnp.take(qitems, cand, axis=0).astype(jnp.float32)
+    qips = jnp.einsum("cnd,cd->cn", qvecs, users)
+    qips = qips * jnp.take(qscale, cand, axis=0)
+    return cand.astype(jnp.int32), qips
 
 
 def ip_topk(queries: jnp.ndarray, items: jnp.ndarray,

@@ -1,5 +1,14 @@
 """Pallas kernel correctness: interpret-mode vs jnp oracle over shape/dtype
-sweeps (per-kernel allclose, exact equality for integer outputs)."""
+sweeps (per-kernel allclose, exact equality for integer outputs).
+
+Two execution modes are covered for each kernel: *interpret* (the Pallas
+body run per grid step — what CPU CI exercises, ``ci.yml`` kernels job) and
+*compiled* (the jitted dispatch path of ``kernels/ops.py``; on CPU that is
+the jit-compiled lax mirror, on TPU the same calls hit the compiled Pallas
+kernels). Hypothesis properties live at the bottom behind a soft import —
+the hypothesis-free parametrized mirrors above them keep tier-1 coverage
+on minimal installs.
+"""
 
 import jax
 import jax.numpy as jnp
@@ -7,8 +16,18 @@ import numpy as np
 import pytest
 
 from repro.kernels import flash_attention as fa
+from repro.kernels import fused_scan as fs
 from repro.kernels import hamming_scan, ip_topk, ref, srp_hash
+from repro.kernels import ops as kops
 from repro.kernels.ops import _merge_topk
+
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp  # noqa: F401  (kept for strategies)
+    import hypothesis.strategies as st
+    HAVE_HYP = True
+except ImportError:
+    HAVE_HYP = False
 
 
 def _codes(key, n, w):
@@ -126,3 +145,214 @@ def test_ip_topk_with_duplicate_scores():
     rv, ri = ref.ip_topk(queries, items, 8)
     np.testing.assert_allclose(np.asarray(bv), np.asarray(rv))
     np.testing.assert_array_equal(np.asarray(bi), np.asarray(ri))
+
+
+# ---------------------------------------------------------------------------
+# fused_scan (DESIGN.md SS13): Hamming filter + top-n_cand + dequantized IP.
+# ---------------------------------------------------------------------------
+
+
+def _fused_inputs(seed, c, t, w, d, live=0.8):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    ucodes = _codes(ks[0], c, w)
+    icodes = _codes(ks[1], t, w)
+    mask = jax.random.bernoulli(ks[2], live, (t,))
+    qitems = jax.random.randint(ks[3], (t, d), -127, 128,
+                                dtype=jnp.int32).astype(jnp.int8)
+    qscale = jax.random.uniform(ks[4], (t,), minval=0.0, maxval=0.1)
+    users = jax.random.normal(ks[5], (c, d))
+    return ucodes, icodes, mask, qitems, qscale, users
+
+
+# prime / non-power-of-2 candidate counts, tile sizes and dims throughout:
+# nothing in the kernel may assume lane-width alignment.
+_FUSED_SHAPES = [
+    # (C, T, W, d, n_cand)
+    (16, 97, 3, 19, 7),
+    (8, 256, 4, 32, 16),
+    (4, 513, 1, 5, 64),
+    (32, 144, 8, 24, 13),
+    (3, 31, 2, 17, 31),     # n_cand == T: every live row selected
+]
+
+
+@pytest.mark.parametrize("c,t,w,d,n_cand", _FUSED_SHAPES)
+def test_fused_scan_lax_matches_ref(c, t, w, d, n_cand):
+    # the lax mirror is the compiled CPU hot path: cand AND qips must be
+    # bitwise the oracle's (same selection tie-breaks, same gather+einsum)
+    args = _fused_inputs(c + t + d, c, t, w, d)
+    rc, rq = ref.fused_scan(*args, n_cand)
+    lc, lq = jax.jit(fs.fused_scan_lax, static_argnames=("n_cand",))(
+        *args, n_cand=n_cand)
+    np.testing.assert_array_equal(np.asarray(lc), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(lq), np.asarray(rq))
+
+
+@pytest.mark.parametrize("c,t,w,d,n_cand,bq", [
+    (16, 97, 3, 19, 7, 8),
+    (8, 64, 4, 32, 16, 8),
+    (6, 129, 2, 11, 5, 3),
+    (5, 100, 1, 8, 10, 1),   # block_q=1: the tail-chunk fallback
+])
+def test_fused_scan_tiles_matches_ref(c, t, w, d, n_cand, bq):
+    # interpret-mode Pallas: cand bitwise, qips allclose (the in-kernel
+    # one-hot matmul gather reassociates the dot product; only the error
+    # ball's slack, not bitwiseness, is contractual for qips here)
+    args = _fused_inputs(c * t, c, t, w, d)
+    rc, rq = ref.fused_scan(*args, n_cand)
+    pc, pq = fs.fused_scan_tiles(*args, n_cand=n_cand, block_q=bq,
+                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(pc), np.asarray(rc))
+    np.testing.assert_allclose(np.asarray(pq), np.asarray(rq),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("impl", ["lax", "tiles"])
+def test_fused_scan_all_masked_lanes(impl, monkeypatch):
+    # a fully dead tile must still produce the oracle's deterministic
+    # candidates (all distances +BIG -> lowest rows win) without NaNs
+    args = list(_fused_inputs(11, 8, 53, 2, 9))
+    args[2] = jnp.zeros((53,), bool)
+    rc, rq = ref.fused_scan(*args, 6)
+    if impl == "lax":
+        oc, oq = fs.fused_scan_lax(*args, n_cand=6)
+        np.testing.assert_array_equal(np.asarray(oq), np.asarray(rq))
+    else:
+        oc, oq = fs.fused_scan_tiles(*args, n_cand=6, block_q=4,
+                                     interpret=True)
+        assert np.isfinite(np.asarray(oq)).all()
+    np.testing.assert_array_equal(np.asarray(oc), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(rc),
+                                  np.tile(np.arange(6, dtype=np.int32),
+                                          (8, 1)))
+
+
+def test_fused_scan_masked_rows_never_selected():
+    # with >= n_cand live rows, no masked row can appear among candidates
+    args = list(_fused_inputs(23, 12, 64, 2, 7, live=0.5))
+    mask = np.asarray(args[2])
+    n_cand = 8
+    assert mask.sum() >= n_cand
+    for fn in (lambda: ref.fused_scan(*args, n_cand),
+               lambda: fs.fused_scan_lax(*args, n_cand=n_cand),
+               lambda: fs.fused_scan_tiles(*args, n_cand=n_cand,
+                                           block_q=4, interpret=True)):
+        cand, _ = fn()
+        assert mask[np.asarray(cand)].all()
+
+
+def test_fused_scan_ops_dispatch(monkeypatch):
+    # the public entry point: compiled lax path by default on CPU (bitwise
+    # equal to the oracle), interpret-mode Pallas under the env override --
+    # C prime so the dispatch exercises its block_q=1 fallback
+    args = _fused_inputs(5, 7, 96, 4, 16)
+    rc, rq = ref.fused_scan(*args, 9)
+    monkeypatch.delenv("REPRO_FORCE_INTERPRET", raising=False)
+    lc, lq = kops.fused_scan(*args, n_cand=9)
+    np.testing.assert_array_equal(np.asarray(lc), np.asarray(rc))
+    np.testing.assert_array_equal(np.asarray(lq), np.asarray(rq))
+    monkeypatch.setenv("REPRO_FORCE_INTERPRET", "1")
+    pc, pq = kops.fused_scan(*args, n_cand=9)
+    np.testing.assert_array_equal(np.asarray(pc), np.asarray(rc))
+    np.testing.assert_allclose(np.asarray(pq), np.asarray(rq),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("c,n,d", [(7, 64, 128), (5, 24, 300)])
+def test_band_einsum_bitwise_stable(c, n, d):
+    """Pin the backend property core/sa_alsh.py::_tile_beat_int8 leans on:
+    a gathered-subset ``einsum("cnd,cd->cn")`` with candidate-axis width
+    S >= 8 is bitwise equal, element for element, to the full-width einsum
+    the f32 scan computes. (Widths 1/2/4 are NOT stable on this backend —
+    XLA picks a different reduction shape — which is why the band re-rank
+    uses s_slots = min(16, n_cand), never fewer than 8.)"""
+    ks = jax.random.split(jax.random.PRNGKey(c * d), 3)
+    vecs = jax.random.normal(ks[0], (c, n, d))
+    users = jax.random.normal(ks[1], (c, d))
+    full = jnp.einsum("cnd,cd->cn", vecs, users)
+    for s in (8, 16):
+        pos = jnp.argsort(jax.random.uniform(ks[2], (c, n)), axis=-1)[:, :s]
+        sub_vecs = jnp.take_along_axis(vecs, pos[..., None], axis=1)
+        sub = jnp.einsum("cnd,cd->cn", sub_vecs, users)
+        want = jnp.take_along_axis(full, pos, axis=-1)
+        np.testing.assert_array_equal(np.asarray(sub), np.asarray(want))
+
+
+def test_hamming_and_ip_topk_dispatch_tail_shapes(monkeypatch):
+    # prime (non-tile-multiple) shapes through the public dispatch in both
+    # modes: the block-size fallbacks must keep results exactly the oracle's
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+    qc, ic = _codes(k1, 13, 2), _codes(k2, 17, 2)
+    queries = jax.random.normal(k3, (13, 29))
+    items = jax.random.normal(jax.random.fold_in(k3, 1), (89, 29))
+    for env in (None, "1"):
+        if env is None:
+            monkeypatch.delenv("REPRO_FORCE_INTERPRET", raising=False)
+        else:
+            monkeypatch.setenv("REPRO_FORCE_INTERPRET", env)
+        np.testing.assert_array_equal(
+            np.asarray(kops.hamming_scores(qc, ic)),
+            np.asarray(ref.hamming_scores(qc, ic)))
+        vals, ids = kops.ip_topk(queries, items, 11)
+        rv, ri = ref.ip_topk(queries, items, 11)
+        np.testing.assert_allclose(np.asarray(vals), np.asarray(rv),
+                                   rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(ids), np.asarray(ri))
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis properties (soft dependency; mirrors above keep tier-1 coverage).
+# ---------------------------------------------------------------------------
+
+
+if HAVE_HYP:
+    hypothesis.settings.register_profile(
+        "kernels", deadline=None, max_examples=25,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow,
+                               hypothesis.HealthCheck.data_too_large])
+    hypothesis.settings.load_profile("kernels")
+
+    # Shapes + a PRNG seed are the drawn quantities; array contents come
+    # from jax.random so example generation stays cheap and shrinkable.
+    @hypothesis.given(st.integers(1, 12), st.integers(1, 80),
+                      st.integers(1, 4), st.integers(1, 24),
+                      st.integers(1, 16), st.integers(0, 2**16),
+                      st.floats(0.0, 1.0))
+    def test_fused_scan_property(c, t, w, d, n_cand, seed, live):
+        hypothesis.assume(n_cand <= t)
+        args = _fused_inputs(seed, c, t, w, d, live=live)
+        rc, rq = ref.fused_scan(*args, n_cand)
+        lc, lq = fs.fused_scan_lax(*args, n_cand=n_cand)
+        np.testing.assert_array_equal(np.asarray(lc), np.asarray(rc))
+        np.testing.assert_array_equal(np.asarray(lq), np.asarray(rq))
+        pc, pq = fs.fused_scan_tiles(*args, n_cand=n_cand, block_q=1,
+                                     interpret=True)
+        np.testing.assert_array_equal(np.asarray(pc), np.asarray(rc))
+        np.testing.assert_allclose(np.asarray(pq), np.asarray(rq),
+                                   rtol=1e-5, atol=1e-5)
+
+    @hypothesis.given(st.integers(1, 16), st.integers(1, 32),
+                      st.integers(1, 8), st.integers(0, 2**16))
+    def test_hamming_property(q, n, w, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        qc, ic = _codes(k1, q, w), _codes(k2, n, w)
+        out = hamming_scan.hamming_scores(qc, ic, block_q=q, block_n=n,
+                                          interpret=True)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.asarray(ref.hamming_scores(qc, ic)))
+
+    @hypothesis.given(st.integers(1, 8), st.integers(1, 48),
+                      st.integers(1, 24), st.integers(1, 48),
+                      st.integers(0, 2**16))
+    def test_ip_topk_property(q, n, d, k, seed):
+        hypothesis.assume(k <= n)
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        queries = jax.random.normal(k1, (q, d))
+        items = jax.random.normal(k2, (n, d))
+        vals, ids = ip_topk.ip_topk_tiles(queries, items, k, block_q=q,
+                                          block_n=n, interpret=True)
+        bv, bi = _merge_topk(vals, ids, k)
+        rv, ri = ref.ip_topk(queries, items, k)
+        np.testing.assert_allclose(np.asarray(bv), np.asarray(rv),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(bi), np.asarray(ri))

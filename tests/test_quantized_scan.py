@@ -1,0 +1,260 @@
+"""The scan_precision="int8" contract (DESIGN.md SS13).
+
+Pins the three promises of the quantized execute path: (1) the quantized
+screen only ever over-admits — every f32 survivor is admitted and every
+"definite" classification is a true survivor, for arbitrary corpora
+(hypothesis, with fixed-seed mirrors for tier-1); (2) final predictions are
+bitwise equal to the f32 path for every registry method, including
+staged-delta and post-delete_items corpora and after compact(); (3) the
+knob is execution-only — compile counts stay one trace per batch shape
+across hot swaps and compaction (mirroring the f32 churn tests), the
+artifact fingerprint ignores it, and attach accepts a precision mismatch.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine as engine_mod
+from repro.core import sa_alsh
+from repro.data import synthetic
+from repro.engine import (EngineConfig, IndexArtifact, RkMIPSEngine,
+                          get_config)
+
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+    HAVE_HYP = True
+except ImportError:
+    HAVE_HYP = False
+
+D = 16
+_BUILD_KEY = jax.random.PRNGKey(31)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    key = jax.random.PRNGKey(23)
+    ki, kq = jax.random.split(key)
+    items, users = synthetic.recommendation_data(ki, 120, 64, D)
+    queries = synthetic.queries_from_items(kq, items, 4)
+    return items, users, queries
+
+
+def _cfg(method):
+    return get_config(method).replace(tile=32, n_bits=32, k_max=8, n_top=8,
+                                      leaf_size=8, n_cand=16,
+                                      delta_capacity=8, serve_batch_size=2)
+
+
+def _int8(cfg):
+    return cfg.replace(scan_precision="int8")
+
+
+# ---------------------------------------------------------------------------
+# Knob semantics: validation, fingerprint/attach exclusion.
+# ---------------------------------------------------------------------------
+
+
+def test_scan_precision_validation_and_kwargs():
+    with pytest.raises(ValueError, match="scan_precision"):
+        EngineConfig(scan_precision="f16")
+    assert EngineConfig().query_kwargs()["scan_precision"] == "f32"
+    assert _int8(EngineConfig()).query_kwargs()["scan_precision"] == "int8"
+
+
+def test_scan_precision_excluded_from_fingerprint_and_attach(workload):
+    items, users, _ = workload
+    cfg = _cfg("sah")
+    a32 = IndexArtifact.build(items, users, _BUILD_KEY, config=cfg)
+    a8 = IndexArtifact.build(items, users, _BUILD_KEY, config=_int8(cfg))
+    assert a32.fingerprint == a8.fingerprint
+    # an int8-scanning engine serves an f32-built artifact (and vice versa)
+    RkMIPSEngine(_int8(cfg)).attach(a32)
+    RkMIPSEngine(cfg).attach(a8)
+    with pytest.raises(ValueError, match="does not match"):
+        RkMIPSEngine(_int8(cfg).replace(n_cand=8)).attach(a32)
+
+
+# ---------------------------------------------------------------------------
+# Over-admission: the quantized screen never drops an f32 survivor.
+# ---------------------------------------------------------------------------
+
+
+def _screen_invariants(items, user, thr):
+    """The SS13 classification on raw arrays: every f32 survivor is
+    admitted by the quantized screen, and every definite beat is a true
+    survivor — the band (admitted minus definite) is the only part that
+    needs the exact re-rank."""
+    items = jnp.asarray(items, jnp.float32)
+    user = jnp.asarray(user, jnp.float32)
+    d = items.shape[1]
+    qitems, qscale = sa_alsh.quantize_rows(items)
+    qips = (qitems.astype(jnp.float32) @ user) * qscale
+    qerr = 0.5 * d ** 0.5 * sa_alsh._QERR_SLACK * qscale \
+        * jnp.linalg.norm(user)
+    survivors = np.asarray(items @ user > thr)
+    admitted = np.asarray(qips + qerr > thr)
+    definite = np.asarray(qips - qerr > thr)
+    assert (admitted | ~survivors).all(), "screen dropped an f32 survivor"
+    assert (survivors | ~definite).all(), "definite beat is not a survivor"
+
+
+@pytest.mark.parametrize("seed", [0, 1, 7, 19])
+def test_screen_over_admits_only(seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    items = jax.random.normal(ks[0], (200, 24)) * \
+        jax.random.uniform(ks[1], (200, 1), minval=0.01, maxval=3.0)
+    user = jax.random.normal(ks[2], (24,))
+    user = user / jnp.linalg.norm(user)
+    for thr in (-1.0, 0.0, 0.3, float(jnp.max(items @ user))):
+        _screen_invariants(items, user, thr)
+
+
+def test_screen_handles_zero_rows_and_scales():
+    # all-zero rows quantize to scale 0: screen must classify them exactly
+    items = jnp.concatenate([jnp.zeros((4, 8)), jnp.ones((4, 8))])
+    user = jnp.ones((8,)) / jnp.sqrt(8.0)
+    _screen_invariants(items, user, -0.5)
+    _screen_invariants(items, user, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Bitwise equality for every registry method, deltas included.
+# ---------------------------------------------------------------------------
+
+
+def _assert_same_answers(e32, e8, queries, ks=(3, 8)):
+    for k in ks:
+        r32 = e32.query_batch(queries, k)
+        r8 = e8.query_batch(queries, k)
+        np.testing.assert_array_equal(np.asarray(r32.predictions),
+                                      np.asarray(r8.predictions))
+        # identical decisions imply identical scan trajectories too
+        np.testing.assert_array_equal(np.asarray(r32.stats.tiles_scanned),
+                                      np.asarray(r8.stats.tiles_scanned))
+
+
+@pytest.mark.parametrize("method", engine_mod.method_names())
+def test_int8_predictions_bitwise_equal(method, workload):
+    items, users, queries = workload
+    cfg = _cfg(method)
+    art = IndexArtifact.build(items, users, _BUILD_KEY, config=cfg)
+    e32 = RkMIPSEngine.from_artifact(art)
+    e8 = RkMIPSEngine(_int8(cfg)).attach(art)
+    _assert_same_answers(e32, e8, queries)
+    # single-query facade rides the same dispatch
+    np.testing.assert_array_equal(
+        np.asarray(e32.query(queries[0], 5).predictions),
+        np.asarray(e8.query(queries[0], 5).predictions))
+
+
+@pytest.mark.parametrize("method", engine_mod.method_names())
+def test_int8_bitwise_equal_under_churn(method, workload):
+    """Staged-delta and post-delete corpora, then compact(): the int8
+    path answers bitwise with the f32 path at every lifecycle stage."""
+    items, users, queries = workload
+    cfg = _cfg(method)
+    key = jax.random.fold_in(_BUILD_KEY, 1)
+    art = IndexArtifact.build(items, users, _BUILD_KEY, config=cfg)
+    art = art.insert_items(jax.random.normal(key, (5, D)) * 1.2)
+    art = art.delete_items([0, 7, 55, items.shape[0] + 1])
+    e32 = RkMIPSEngine.from_artifact(art)
+    e8 = RkMIPSEngine(_int8(cfg)).attach(art)
+    _assert_same_answers(e32, e8, queries)
+    compacted = art.compact()
+    _assert_same_answers(RkMIPSEngine.from_artifact(compacted),
+                         RkMIPSEngine(_int8(cfg)).attach(compacted),
+                         queries)
+
+
+# ---------------------------------------------------------------------------
+# Compile counts: one trace per batch shape, unchanged by the knob.
+# ---------------------------------------------------------------------------
+
+
+def test_int8_churn_never_retraces(workload):
+    """Mirror of tests/test_artifact.py::test_churn_never_retraces with
+    scan_precision="int8": one executable for the plain pipeline, at most
+    one more for the delta pipeline, reused across hot swaps, deletions
+    and compact(); a new batch shape costs exactly one more."""
+    items, users, queries = workload
+    cfg = _int8(_cfg("sah"))
+    art = IndexArtifact.build(items, users, _BUILD_KEY, config=cfg)
+    eng = RkMIPSEngine.from_artifact(art)
+    eng.query_batch(queries, 3)
+    assert eng.rkmips_compile_count == 1
+    eng.query_batch(queries, 3)
+    assert eng.rkmips_compile_count == 1
+    eng.attach(art.delete_items([1, 2]))          # delete-only: plain path
+    eng.query_batch(queries, 3)
+    assert eng.rkmips_compile_count == 1
+    a = art.insert_items(jnp.ones((2, D)))
+    eng.attach(a)                                  # the one extra compile
+    eng.query_batch(queries, 3)
+    assert eng.rkmips_compile_count == 2
+    eng.attach(a.insert_items(jnp.ones((3, D))).delete_items([9]))
+    eng.query_batch(queries, 3)
+    assert eng.rkmips_compile_count == 2
+    eng.attach(a.compact())                        # same padded shapes
+    eng.query_batch(queries, 3)
+    assert eng.rkmips_compile_count == 2
+    eng.query_batch(queries[:2], 3)                # new batch shape
+    assert eng.rkmips_compile_count == 3
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: arbitrary corpora (fixed-seed mirrors above keep tier-1).
+# ---------------------------------------------------------------------------
+
+
+if HAVE_HYP:
+    hypothesis.settings.register_profile(
+        "quantized", deadline=None, max_examples=25,
+        suppress_health_check=[hypothesis.HealthCheck.too_slow,
+                               hypothesis.HealthCheck.data_too_large])
+    hypothesis.settings.load_profile("quantized")
+
+    _floats = st.floats(-5.0, 5.0, allow_nan=False, width=32)
+
+    @hypothesis.given(
+        hnp.arrays(np.float32,
+                   st.tuples(st.integers(1, 64), st.integers(1, 12)),
+                   elements=_floats),
+        st.integers(0, 2**16), st.floats(-3.0, 3.0, allow_nan=False))
+    def test_screen_over_admits_only_property(p, seed, thr):
+        user = jax.random.normal(jax.random.PRNGKey(seed), (p.shape[1],))
+        norm = jnp.linalg.norm(user)
+        user = jnp.where(norm > 0, user / jnp.maximum(norm, 1e-9), user)
+        _screen_invariants(p, user, thr)
+
+    @hypothesis.settings(max_examples=10)
+    @hypothesis.given(st.integers(12, 60), st.integers(2, 10),
+                      st.integers(0, 2**16))
+    def test_decide_count_bitwise_property(m, d, seed):
+        """decide_count int8 == f32 on arbitrary random corpora, both
+        scans, across the full tau range (deep scans included)."""
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        items = jax.random.normal(ks[0], (m, d)) * \
+            jax.random.uniform(ks[1], (m, 1), minval=0.05, maxval=2.0)
+        users = jax.random.normal(ks[2], (5, d))
+        users = users / jnp.linalg.norm(users, axis=-1, keepdims=True)
+        idx = sa_alsh.build_index(items, ks[3], tile=16, n_bits=32,
+                                  max_partitions=8)
+        ips = users @ items.T
+        taus = jnp.quantile(ips, jnp.linspace(0.1, 0.99, 5),
+                            axis=-1).diagonal()
+        init = jnp.zeros(5, jnp.int32)
+        active = jnp.ones(5, bool)
+        for scan in ("sketch", "exact"):
+            a = sa_alsh.decide_count(idx, users, taus, init, active, 3,
+                                     n_cand=8, scan=scan,
+                                     scan_precision="f32")
+            b = sa_alsh.decide_count(idx, users, taus, init, active, 3,
+                                     n_cand=8, scan=scan,
+                                     scan_precision="int8")
+            np.testing.assert_array_equal(np.asarray(a[0]),
+                                          np.asarray(b[0]))
+            assert int(a[1]) == int(b[1])
