@@ -1,0 +1,260 @@
+"""Open-loop traffic bench for the serving runtime (DESIGN.md SS14).
+
+The closed-loop cells of bench_serving.py answer "how fast is one
+outstanding ticket"; this harness answers the question the north star
+actually asks: under an *arrival process* — tickets landing on their own
+schedule, not waiting for the previous answer — what are p50/p99 latency
+and sustained QPS, and what does the first window cost when the server
+has never seen a shape before?
+
+Open-loop discipline: the arrival schedule is drawn up front (Poisson or
+bursty), submission walks the wall clock, and each ticket's latency is
+measured against its *intended* arrival time — if the generator falls
+behind, the lateness is charged to the server, exactly like a queueing
+system under load. Traffic mixes ks and query-block shapes and
+interleaves corpus churn (staged inserts within the delta capacity,
+compaction off), because that is the mix that defeats naive one-shape
+warmup.
+
+Every (arrivals, rate) cell runs twice on the *same* schedule:
+
+  cold  — stock config, no bucket ladder, no warmup: the first window
+          pays live XLA traces per fresh (shape, k) signature, which is
+          precisely the tail cliff the warm row must not have.
+  warm  — ``serve_buckets`` ladder + ``ServingRuntime(warmup=True)``:
+          every (bucket, k) executable exists before the first ticket;
+          the row records ``traces_after_warmup`` (CI asserts 0) and
+          ``first_p99_speedup`` vs. the cold row's first window.
+
+Rows land in the serving BENCH suite as ``load/...``:
+
+    PYTHONPATH=src python -m benchmarks.run --scale smoke --only load
+    PYTHONPATH=src python -m benchmarks.bench_load \
+        --arrivals poisson --rate 24 --duration 3
+
+The module CLI serves the CONTRIBUTING recipe and the CI smoke
+(``--assert-warm`` exits nonzero unless every warm cell held
+``traces_after_warmup == 0``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.bench_serving import _env, _pct
+
+
+def make_schedule(arrivals: str, rate: float, duration: float,
+                  seed: int) -> np.ndarray:
+    """Intended arrival offsets (seconds, ascending) for one cell.
+
+    poisson: exponential gaps at ``rate`` arrivals/s — memoryless open
+    traffic. bursty: the same mean rate delivered in geometric bursts
+    (mean size 4) separated by exponential gaps — the schedule that
+    punishes a server whose only good batch shape is the full one.
+    Deterministic per (arrivals, rate, seed): the cold and warm runs of a
+    cell replay the identical schedule.
+    """
+    rng = np.random.default_rng(seed)
+    t, out = 0.0, []
+    if arrivals == "poisson":
+        while True:
+            t += rng.exponential(1.0 / rate)
+            if t >= duration:
+                break
+            out.append(t)
+    elif arrivals == "bursty":
+        mean_burst = 4
+        while True:
+            t += rng.exponential(mean_burst / rate)
+            if t >= duration:
+                break
+            out.extend([t] * (1 + rng.geometric(1.0 / mean_burst)))
+    else:
+        raise ValueError(f"arrivals must be poisson|bursty, "
+                         f"got {arrivals!r}")
+    return np.asarray(out, dtype=np.float64)
+
+
+def drive(rt, queries, schedule, ks, *, churn_every: int = 0,
+          churn_rows=None, window: float = 1.0,
+          timeout: float = 600.0) -> dict:
+    """Replay ``schedule`` against a live runtime, open loop.
+
+    Ticket i is submitted at ``schedule[i]`` (waiting if early, never
+    skipping if late) with k cycling through ``ks`` and the query row
+    cycling through ``queries`` — consecutive tickets mix signatures, so
+    batch formation sees realistic fragmentation. With ``churn_every``
+    > 0, every that-many-th arrival also stages one insert from
+    ``churn_rows`` (stopping before the delta buffer would overflow).
+    Latency is resolve-time minus *intended* arrival; ``first`` is the
+    p99 of tickets that arrived inside the first ``window`` seconds —
+    where cold-start traces live.
+    """
+    nq = queries.shape[0]
+    tickets, churned = [], 0
+    cap = (rt.artifact.delta_capacity - rt.artifact.delta_used
+           if rt.artifact is not None else 0)
+    base = time.perf_counter()
+    for i, at in enumerate(schedule):
+        lead = at - (time.perf_counter() - base)
+        if lead > 0:
+            time.sleep(lead)
+        if churn_every and (i + 1) % churn_every == 0 and churned < cap:
+            rt.insert_items(churn_rows[churned % churn_rows.shape[0]][None])
+            churned += 1
+        tickets.append(rt.submit(queries[i % nq], k=ks[i % len(ks)]))
+    rt.drain(timeout)
+    lat, first, done_at = [], [], base
+    for t, at in zip(tickets, schedule):
+        t.result(timeout=timeout)            # surfaces dispatch errors
+        l = t.done_at - (base + at)
+        lat.append(l)
+        done_at = max(done_at, t.done_at)
+        if at < window:
+            first.append(l)
+    return {
+        "p50": _pct(lat, 0.5), "p99": _pct(lat, 0.99),
+        "first_p99": _pct(first or lat, 0.99),
+        "qps": len(tickets) / max(done_at - base, 1e-9),
+        "tickets": len(tickets), "churned": churned,
+        "stats": rt.stats,
+    }
+
+
+def _cell_rows(name, make_runtime, queries, schedule, ks, churn_rows,
+               churn_every, window):
+    """One (arrivals, rate) cell: cold then warm on the same schedule.
+    ``make_runtime(warm)`` must return a *fresh* runtime each call —
+    trace caches live on the server/engine instances, so cold means a
+    new one."""
+    out = {}
+    for mode in ("cold", "warm"):
+        rt = make_runtime(mode == "warm")
+        try:
+            out[mode] = drive(rt, queries, schedule, ks,
+                              churn_every=churn_every,
+                              churn_rows=churn_rows, window=window)
+        finally:
+            rt.close()
+    rows = []
+    for mode, m in out.items():
+        s = m["stats"]
+        derived = (f"p99_us={m['p99'] * 1e6:.1f};"
+                   f"first_p99_us={m['first_p99'] * 1e6:.1f};"
+                   f"qps={m['qps']:.1f};tickets={m['tickets']};"
+                   f"churned={m['churned']};"
+                   f"traces_after_warmup={s.traces_after_warmup};"
+                   f"bucket_hits={s.bucket_hits};"
+                   f"bucket_pad_rows={s.bucket_pad_rows};{_env()}")
+        if mode == "warm":
+            derived += (f";first_p99_speedup="
+                        f"{out['cold']['first_p99'] / m['first_p99']:.2f}")
+        rows.append(common.fmt_row(f"{name}/{mode}", m["p50"] * 1e6,
+                                   derived))
+    return rows
+
+
+def run(n=2048, m=4096, d=64, nq=8, cap=128, *, arrivals=("poisson",
+        "bursty"), rates=(16.0, 48.0), duration=3.0, window=1.0,
+        reverse_rate=2.0, churn_every=10, seed=0):
+    """The BENCH ``load`` suite: forward cells over every (arrivals,
+    rate), plus one reverse Poisson cell — each cold vs. warm.
+
+    Rates are arrivals/s and deliberately modest: the checked-in
+    baseline runs on small CPU containers, and an open-loop bench that
+    saturates the machine measures the backlog, not the server.
+    """
+    import jax
+
+    from repro.dist.policy import NO_SHARDING
+    from repro.engine import IndexArtifact, RkMIPSEngine, get_config
+
+    wl = common.make_workload("nmf", n, m, d, nq, (5, 10))
+    ks = (5, 10)
+    # batch 4 with a (1, 2) ladder keeps the warmup grid small enough
+    # for single-core CI while still exercising three distinct rungs
+    base_cfg = get_config("sah").replace(k_max=50, delta_capacity=cap,
+                                         serve_batch_size=4)
+    warm_cfg = base_cfg.replace(serve_buckets=(1, 2))
+    churn_rows = np.asarray(jax.random.permutation(
+        jax.random.PRNGKey(9), wl.items)[: cap] * 1.01)
+
+    # one artifact per config flavor (serve_buckets is execution-only,
+    # but attach checks full config equality) — built once, engines and
+    # servers are per-cell so every cold cell starts with no executables
+    arts = {cfg: IndexArtifact.build(wl.items, wl.users,
+                                     jax.random.PRNGKey(1), config=cfg)
+            for cfg in (base_cfg, warm_cfg)}
+
+    def forward_runtime(warm: bool):
+        cfg = warm_cfg if warm else base_cfg
+        eng = RkMIPSEngine.from_artifact(arts[cfg], policy=NO_SHARDING)
+        return eng.async_server(k=ks[0], warmup=warm, warmup_ks=ks,
+                                poll_interval=0.005)
+
+    def reverse_runtime(warm: bool):
+        cfg = warm_cfg if warm else base_cfg
+        eng = RkMIPSEngine.from_artifact(arts[cfg], policy=NO_SHARDING)
+        return eng.async_reverse_server(k=ks[0], warmup=warm,
+                                        warmup_ks=ks,
+                                        poll_interval=0.005)
+
+    rows = []
+    for arr in arrivals:
+        for rate in rates:
+            schedule = make_schedule(arr, rate, duration,
+                                     seed + int(rate))
+            rows.extend(_cell_rows(
+                f"load/{arr}/rate={rate:g}", forward_runtime,
+                wl.queries, schedule, ks, churn_rows, churn_every,
+                window))
+    # reverse: heavier per-ticket math, so its own (lower) rate; same
+    # open-loop discipline, churn included (the engine's warmup covers
+    # the delta-signature flip)
+    schedule = make_schedule("poisson", reverse_rate, duration, seed + 1)
+    rows.extend(_cell_rows(
+        f"load/reverse/poisson/rate={reverse_rate:g}", reverse_runtime,
+        wl.queries, schedule, ks, churn_rows, churn_every, window))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--arrivals", default="poisson,bursty",
+                    help="comma-separated subset of poisson,bursty")
+    ap.add_argument("--rate", type=float, action="append", default=None,
+                    help="arrivals/s (repeatable; default 16 and 48)")
+    ap.add_argument("--duration", type=float, default=3.0,
+                    help="seconds of schedule per cell")
+    ap.add_argument("--window", type=float, default=1.0,
+                    help="first-window length (s) for first_p99")
+    ap.add_argument("--reverse-rate", type=float, default=2.0,
+                    help="arrivals/s of the reverse cell")
+    ap.add_argument("--assert-warm", action="store_true",
+                    help="fail unless every warm cell recorded "
+                         "traces_after_warmup=0 (CI smoke)")
+    args = ap.parse_args()
+    rows = run(arrivals=tuple(args.arrivals.split(",")),
+               rates=tuple(args.rate or (16.0, 48.0)),
+               duration=args.duration, window=args.window,
+               reverse_rate=args.reverse_rate)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r, flush=True)
+    if args.assert_warm:
+        bad = [r for r in rows if "/warm," in r
+               and "traces_after_warmup=0;" not in r]
+        if bad:
+            raise SystemExit("warm cells traced after warmup:\n"
+                             + "\n".join(bad))
+        print(f"# assert-warm OK over "
+              f"{sum('/warm,' in r for r in rows)} warm cells")
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,13 @@ def _pct(lat: list, q: float) -> float:
     return s[min(len(s) - 1, int(q * (len(s) - 1) + 0.5))]
 
 
+def _env() -> str:
+    """``cores=...;devices=...`` — stamped on every serving row so a
+    baseline row is interpretable without chasing the run's meta block
+    (thread-pipeline latency is core-count sensitive)."""
+    return f"cores={os.cpu_count()};devices={jax.device_count()}"
+
+
 def run(n=2048, m=4096, d=64, nq=8, k=10, cap=128, steady_rounds=48):
     from repro.dist.policy import NO_SHARDING
     from repro.engine import IndexArtifact, RkMIPSEngine, get_config
@@ -47,7 +54,7 @@ def run(n=2048, m=4096, d=64, nq=8, k=10, cap=128, steady_rounds=48):
     dt_sync = (time.perf_counter() - t0) / nq
     rows.append(common.fmt_row(
         f"serving/sync/k={k}", dt_sync * 1e6,
-        f"n={n};m={m};traces={sync.compile_count}"))
+        f"n={n};m={m};traces={sync.compile_count};{_env()}"))
 
     eng = RkMIPSEngine.from_artifact(art)
     # compact_policy pinned single-device: under --host-devices N the
@@ -72,7 +79,8 @@ def run(n=2048, m=4096, d=64, nq=8, k=10, cap=128, steady_rounds=48):
             f"serving/runtime/steady/k={k}", _pct(steady, 0.5) * 1e6,
             f"p99_us={_pct(steady, 0.99) * 1e6:.1f};"
             f"samples={len(steady)};traces={rt.server.compile_count};"
-            f"overhead_vs_sync={_pct(steady, 0.5) / dt_sync:.2f}"))
+            f"overhead_vs_sync={_pct(steady, 0.5) / dt_sync:.2f};"
+            f"{_env()}"))
 
         # part-full delta buffer: the closed loop pays the exact buffer
         # scan — THIS is the fair baseline for the compaction ratio (the
@@ -91,7 +99,8 @@ def run(n=2048, m=4096, d=64, nq=8, k=10, cap=128, steady_rounds=48):
             f"serving/runtime/delta/k={k}", _pct(delta, 0.5) * 1e6,
             f"p99_us={_pct(delta, 0.99) * 1e6:.1f};"
             f"samples={len(delta)};fill={cap // 2}/{cap};"
-            f"overhead_vs_steady={_pct(delta, 0.5) / _pct(steady, 0.5):.2f}"))
+            f"overhead_vs_steady={_pct(delta, 0.5) / _pct(steady, 0.5):.2f};"
+            f"{_env()}"))
 
         # during compaction: keep the closed loop running while the
         # maintenance thread rebuilds the staged corpus off-thread
@@ -113,7 +122,7 @@ def run(n=2048, m=4096, d=64, nq=8, k=10, cap=128, steady_rounds=48):
             _pct(during or steady, 0.5) * 1e6,
             f"p99_us={_pct(during or steady, 0.99) * 1e6:.1f};"
             f"samples={len(during)};compact_s={t_compact:.2f};"
-            f"cores={os.cpu_count()};p99_vs_delta={p99_ratio:.2f}"))
+            f"p99_vs_delta={p99_ratio:.2f};{_env()}"))
         assert rt.artifact.n_base == n + cap // 2        # compaction landed
     finally:
         rt.close()

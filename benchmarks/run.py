@@ -33,7 +33,7 @@ def main() -> None:
     ap.add_argument("--scale", choices=("smoke", "bench"), default="bench")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: rkmips,artifact,serving,"
-                         "kmips,params,kernels,roofline")
+                         "load,kmips,params,kernels,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + run metadata as JSON")
     ap.add_argument("--host-devices", type=int, default=None, metavar="N",
@@ -51,8 +51,8 @@ def main() -> None:
               f"={args.host_devices}").strip()
 
     from benchmarks import (bench_artifact, bench_kernels, bench_kmips,
-                            bench_params, bench_rkmips, bench_roofline,
-                            bench_serving)
+                            bench_load, bench_params, bench_rkmips,
+                            bench_roofline, bench_serving)
 
     small = args.scale == "smoke"
     suites = {
@@ -67,6 +67,11 @@ def main() -> None:
             n=2048 if small else 8192, m=4096 if small else 16384,
             nq=8 if small else 16, cap=128 if small else 256,
             steady_rounds=48 if small else 128),
+        "load": lambda: bench_load.run(
+            n=2048 if small else 8192, m=4096 if small else 16384,
+            nq=8 if small else 16, cap=128 if small else 256,
+            duration=3.0 if small else 10.0,
+            rates=(16.0, 48.0) if small else (32.0, 96.0)),
         "kmips": lambda: bench_kmips.run(
             n=4096 if small else 16384, m=4096 if small else 16384,
             nq=8 if small else 32,

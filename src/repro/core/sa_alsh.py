@@ -511,6 +511,70 @@ def merge_topk(vals: jnp.ndarray, ids: jnp.ndarray,
     return best, jnp.take_along_axis(merged_i, pos, axis=-1)
 
 
+def merge_delta_topk(vals: jnp.ndarray, ids: jnp.ndarray,
+                     queries: jnp.ndarray, d_items: jnp.ndarray,
+                     d_mask: jnp.ndarray, k: int, n_base: int, *,
+                     d_qitems: jnp.ndarray | None = None,
+                     d_qscale: jnp.ndarray | None = None,
+                     scan_precision: str = "f32"):
+    """Fold the staged-insert delta buffer into a main-index top-k answer.
+
+    vals/ids (Q, k) -- the main scan's descending top-k; queries (Q, d);
+    d_items (cap, d) staged rows with liveness d_mask (cap,). Staged row j
+    gets id ``n_base + j``. This is THE forward delta merge: the engine's
+    ``kmips`` and the RetrievalServer's jitted merge both route through it,
+    so the two surfaces can never disagree id-for-id (DESIGN.md SS10).
+
+    ``scan_precision="int8"`` screens the buffer with its persisted
+    quantized twin (``d_qitems``/``d_qscale``, per-row scales --
+    engine/artifact.py stamps them at insert) before touching f32: a row
+    whose dequantized IP plus the Cauchy-Schwarz error ball
+    ``0.5 * sqrt(d) * slack * scale * ||q||`` cannot beat the main scan's
+    k-th value is dropped outright -- it provably cannot displace any
+    incumbent (ties break toward earlier positions, and the main top-k
+    concatenates first). Only surviving band rows are scored in f32, by
+    the *same* GEMM expression the f32 path uses, skipped entirely
+    (``lax.cond``) when that query's band screens clean -- so the merged
+    answer is BITWISE the f32 merge, and the screen may only over-admit
+    (the SS13 contract, applied to the delta buffer).
+
+    The f32 scoring maps over queries (``lax.map``) for the same reason
+    as the main scan (engine/sharding.py): a batched contraction's
+    per-row low bits vary with Q, and the serving bucket ladder dispatches
+    this merge at every rung — bitwise rung-equality (DESIGN.md SS14)
+    needs per-query bodies whose shapes never see Q.
+    """
+    if scan_precision not in _SCAN_PRECISIONS:
+        raise ValueError(f"scan_precision must be one of {_SCAN_PRECISIONS},"
+                         f" got {scan_precision!r}")
+    if scan_precision == "int8":
+        if d_qitems is None or d_qscale is None:
+            raise ValueError("int8 delta merge needs the quantized buffer: "
+                             "pass d_qitems/d_qscale "
+                             "(artifact.kmips_delta_quantized)")
+        radius = 0.5 * float(queries.shape[-1]) ** 0.5 * _QERR_SLACK
+        qitems_f32 = d_qitems.astype(jnp.float32)
+
+        def one_screened(args):
+            q, v = args                                  # (d,), (k,)
+            qips = (qitems_f32 @ q) * d_qscale
+            qerr = radius * d_qscale * jnp.linalg.norm(q)
+            band = d_mask & (qips + qerr > v[k - 1])
+            ips = jax.lax.cond(
+                jnp.any(band),
+                lambda: d_items @ q,
+                lambda: jnp.zeros((d_items.shape[0],), vals.dtype))
+            return jnp.where(band, ips, -jnp.inf)
+        d_vals = jax.lax.map(one_screened, (queries, vals))
+    else:
+        d_vals = jax.lax.map(
+            lambda q: jnp.where(d_mask, d_items @ q, -jnp.inf), queries)
+    d_ids = jnp.broadcast_to(
+        n_base + jnp.arange(d_items.shape[0], dtype=ids.dtype),
+        d_vals.shape)
+    return merge_topk(vals, ids, d_vals, d_ids, k)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "n_cand", "scan"))
 def kmips_topk(index: SAALSHIndex, queries: jnp.ndarray, k: int,
                *, n_cand: int = 64, scan: str = "sketch"):

@@ -162,9 +162,10 @@ class IndexArtifact:
         # Staged rows quantized at insert (every insert evolves a new
         # artifact through here). Per-row scales -- partitions are a
         # compacted-index notion; dead slots quantize to zeros/scale 0.
-        # Persisted with the version and consumed by the int8 screen once
-        # a delta-aware execute phase lands; today's plan phase counts
-        # deltas in f32 (DESIGN.md SS13), so this is derived state only.
+        # Persisted with the version and consumed by the forward-serving
+        # int8 delta screen (``kmips_delta_quantized`` ->
+        # ``sa_alsh.merge_delta_topk``); the reverse execute phase still
+        # scans deltas in f32 (DESIGN.md SS13 leftover).
         self.delta_qitems, self.delta_qscale = \
             _alsh.quantize_rows(delta_items)
         # Transient diagnostics of the build that made this version (a
@@ -393,6 +394,18 @@ class IndexArtifact:
         if bool(np.asarray(self.delta_mask).any()):
             return self.delta_items, self.delta_mask
         return None, None
+
+    def kmips_delta_quantized(self):
+        """``kmips_delta`` plus the buffer's persisted int8 twin:
+        ``(delta_items, delta_mask, delta_qitems, delta_qscale)`` when any
+        staged row is live, else ``(None,) * 4``. The forward delta merge
+        reads this so ``scan_precision="int8"`` can screen staged rows
+        with the quantized codes stamped at insert
+        (``sa_alsh.merge_delta_topk``)."""
+        if bool(np.asarray(self.delta_mask).any()):
+            return (self.delta_items, self.delta_mask,
+                    self.delta_qitems, self.delta_qscale)
+        return None, None, None, None
 
     def kmips_query_view(self) -> _alsh.SAALSHIndex:
         """The kMIPS index with deleted rows masked out of the scan (same

@@ -67,10 +67,23 @@ class EngineConfig:
                — it is excluded from the artifact fingerprint and from
                ``attach`` config equality, and the plan phase ignores it.
 
-    Online-serving knobs (engine/serving.py, DESIGN.md SS8):
+    Online-serving knobs (engine/serving.py, DESIGN.md SS8, SS14):
       serve_batch_size:     micro-batch size the RetrievalServer pads
                             accumulated queries to (static shape: exactly
                             one compile per distinct batch size).
+      serve_buckets:        ascending dispatch sizes below
+                            ``serve_batch_size`` the serving runtime may
+                            pad a partial micro-batch up to instead of the
+                            full batch (e.g. ``(1, 2, 4)`` for a
+                            power-of-two ladder under a batch of 8). Empty
+                            (the default) keeps the single-size contract:
+                            every dispatch pads to ``serve_batch_size``.
+                            Each rung is one more static shape — one trace
+                            each, all precompiled by ``warmup()`` — and
+                            bucket-padded dispatch is bitwise equal to the
+                            unbucketed flush (padding is dead either way).
+                            Execution-only like ``serve_batch_size``: not
+                            part of any build recipe or cache key.
       serve_cache_capacity: LRU capacity of the built-serving-state cache
                             (states are keyed by the artifact fingerprint
                             + the config's item-index recipe).
@@ -110,6 +123,7 @@ class EngineConfig:
     chunk: int = 256
     tie_eps: float = TIE_EPS_DEFAULT
     serve_batch_size: int = 8
+    serve_buckets: tuple = ()
     serve_cache_capacity: int = 4
     delta_capacity: int = 256
     build_sharding: str = "auto"
@@ -150,10 +164,33 @@ class EngineConfig:
         if self.n_bits % 32 != 0:
             raise ValueError(f"n_bits must be a multiple of 32, "
                              f"got {self.n_bits}")
+        # normalize to a tuple so the config stays hashable when callers
+        # pass a list; validation then pins the ladder shape
+        object.__setattr__(self, "serve_buckets",
+                           tuple(self.serve_buckets))
+        for bkt in self.serve_buckets:
+            if not isinstance(bkt, int) or isinstance(bkt, bool):
+                raise ValueError(f"serve_buckets must hold ints, got "
+                                 f"{bkt!r}")
+            if not 1 <= bkt <= self.serve_batch_size:
+                raise ValueError(f"serve_buckets entries must be in "
+                                 f"[1, serve_batch_size="
+                                 f"{self.serve_batch_size}], got {bkt}")
+        if list(self.serve_buckets) != sorted(set(self.serve_buckets)):
+            raise ValueError(f"serve_buckets must be strictly increasing, "
+                             f"got {self.serve_buckets}")
 
     def replace(self, **overrides) -> "EngineConfig":
         """A copy with the given fields replaced (validation re-runs)."""
         return dataclasses.replace(self, **overrides)
+
+    def bucket_ladder(self) -> tuple:
+        """The ascending dispatch sizes serving may pad a micro-batch to:
+        ``serve_buckets`` plus the full ``serve_batch_size`` as the top
+        rung. With no buckets configured this is the single-size ladder
+        ``(serve_batch_size,)`` — the pre-bucketing contract."""
+        return tuple(b for b in self.serve_buckets
+                     if b < self.serve_batch_size) + (self.serve_batch_size,)
 
     def build_kwargs(self) -> dict:
         """Kwargs for core/sah.py::build (index construction)."""

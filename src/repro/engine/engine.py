@@ -414,6 +414,52 @@ class RkMIPSEngine:
         return QueryResult(po, stats, time.perf_counter() - t0, k,
                            self._funnel(stats, queries.shape[0]))
 
+    def warmup(self, ks, *, batch_sizes=None) -> int:
+        """Ahead-of-time compile the reverse dispatch at every (batch, k)
+        cell (DESIGN.md SS14) so the first real query of any warmed shape
+        runs an executable that already exists — the serving runtime's
+        ``traces_after_warmup == 0`` guarantee.
+
+        ``ks`` is the iterable of query-time ks traffic will use;
+        ``batch_sizes`` defaults to the config's ``bucket_ladder()`` (the
+        serving dispatch sizes). Single-device this lowers and compiles
+        the jitted dispatch per cell (``jit(...).lower().compile()``
+        populates the same executable cache live calls hit — the
+        maxtext ``aot_compile`` pattern); under a mesh the dispatch is
+        eager shard_map (DESIGN.md SS9), so warmup *runs* one dummy batch
+        per cell instead, which primes the identical signature-keyed
+        cache. ``rkmips_compile_count`` counts warmup traces like any
+        others. Returns the number of cells compiled.
+        """
+        index = self.index                 # raises unless built for RkMIPS
+        d = index.users.shape[-1]
+        batch_sizes = (self.config.bucket_ladder() if batch_sizes is None
+                       else tuple(batch_sizes))
+        # warm the live delta signature — and, when the buffer is empty
+        # but artifact-backed, the buffer-array signature too: the first
+        # post-warmup insert flips self._delta from (None, None) to the
+        # fixed-capacity arrays, and that flip must not trace
+        deltas = [self._delta]
+        if self.artifact is not None and self._delta[0] is None:
+            deltas.append((self.artifact.delta_items,
+                           self.artifact.delta_mask))
+        cells = 0
+        for b in batch_sizes:
+            qs = jnp.zeros((b, d), index.users.dtype)
+            for k in tuple(ks):
+                self._check_k(k)
+                for d_items, d_mask in deltas:
+                    if self.policy.mesh is None:
+                        self._rkmips_dispatch.lower(
+                            index, qs, d_items, d_mask, k=k).compile()
+                    else:
+                        pred, _ = self._rkmips_dispatch(index, qs,
+                                                        d_items, d_mask,
+                                                        k=k)
+                        jax.block_until_ready(pred)
+                    cells += 1
+        return cells
+
     # -- forward queries ---------------------------------------------------
 
     def kmips(self, q: jnp.ndarray, k: int, *,
@@ -425,9 +471,11 @@ class RkMIPSEngine:
         single-pass scan of engine/sharding.py — which covers every row,
         so ``tiles_visited`` reports the full tile count there by design.
         Deleted rows are masked out of the scan; staged inserts are folded
-        in by an exact scan of the delta buffer (``sa_alsh.merge_topk``),
-        with ids ``n_base + slot``. n_cand overrides the config's re-rank
-        depth for recall/latency sweeps.
+        in by a scan of the delta buffer (``sa_alsh.merge_delta_topk``),
+        with ids ``n_base + slot`` — under ``scan_precision="int8"`` the
+        buffer's persisted quantized twin screens staged rows first, with
+        the same bitwise-equal answers. n_cand overrides the config's
+        re-rank depth for recall/latency sweeps.
         """
         art = self._require_artifact()
         index = art.kmips_query_view()
@@ -448,12 +496,10 @@ class RkMIPSEngine:
             tiles = int(tiles)
         d_items, d_mask = self._delta
         if d_items is not None:
-            d_vals = jnp.where(d_mask[None, :], queries @ d_items.T,
-                               -jnp.inf)
-            d_ids = jnp.broadcast_to(
-                art.n_base + jnp.arange(d_items.shape[0], dtype=ids.dtype),
-                d_vals.shape)
-            vals, ids = _alsh.merge_topk(vals, ids, d_vals, d_ids, k)
+            vals, ids = _alsh.merge_delta_topk(
+                vals, ids, queries, d_items, d_mask, k, art.n_base,
+                d_qitems=art.delta_qitems, d_qscale=art.delta_qscale,
+                scan_precision=self.config.scan_precision)
         jax.block_until_ready(vals)
         seconds = time.perf_counter() - t0
         if q.ndim == 1:

@@ -26,7 +26,14 @@ Architecture (one runtime = up to three thread roles + the callers):
     synchronous ``flush`` uses, with the same padding. Runtime answers are
     therefore bitwise identical to library-mode serving, and compile
     counts stay pinned at one per batch shape (partial batches pad, they
-    never shrink the shape).
+    never shrink the shape). With a bucket ladder configured
+    (``EngineConfig.serve_buckets``, DESIGN.md SS14) a partial run pads
+    only up to the nearest rung (``server.bucket_for``) instead of the
+    full batch — fewer dead rows per dispatch, same bitwise answers —
+    and a run already sitting on a rung skips the linger entirely.
+    ``ServingRuntime(warmup=True)`` precompiles every rung's executable
+    before the first ticket, so bucketing never *adds* traces at
+    runtime: ``stats.traces_after_warmup`` stays 0.
   * the **completion queue** decouples dispatch from reply: workers hand
     finished batches to a completion thread that resolves the futures, so
     a slow consumer can never stall the dispatch loop.
@@ -151,7 +158,17 @@ class ServeTicket:
 class RuntimeStats(NamedTuple):
     """Counters snapshot (``ServingRuntime.stats``), monotone per runtime:
     every submitted ticket ends as exactly one of completed / expired /
-    failed."""
+    failed.
+
+    The last three make warmup/bucketing regressions observable rather
+    than inferred (DESIGN.md SS14): ``bucket_hits`` counts successful
+    dispatches padded to a sub-maximal ladder rung (0 without
+    ``serve_buckets``), ``bucket_pad_rows`` totals the dead padding rows
+    those dispatches added (padding waste is measurable, not guessed),
+    and ``traces_after_warmup`` is how many XLA traces the server's
+    dispatch has cost since the warmup baseline (construction, or the
+    last ``warmup()``) — a warmed runtime must hold it at 0, which CI
+    asserts via benchmarks/bench_load.py."""
 
     submitted: int
     completed: int
@@ -160,6 +177,9 @@ class RuntimeStats(NamedTuple):
     batches: int      # successful micro-batch dispatches
     swaps: int        # artifact versions made live
     compactions: int  # background compact->reconcile->swap cycles
+    bucket_hits: int      # dispatches padded to a sub-max ladder rung
+    bucket_pad_rows: int  # dead rows added by bucket padding
+    traces_after_warmup: int  # server traces since the warmup baseline
 
 
 class ServingRuntime:
@@ -181,7 +201,18 @@ class ServingRuntime:
                     ``TicketExpired`` instead of dispatched.
       batch_linger  how long (seconds) a worker waits for a partial batch
                     to fill before dispatching it anyway — the classic
-                    throughput/latency knob.
+                    throughput/latency knob. With a bucket ladder
+                    (``EngineConfig.serve_buckets``) a run whose length
+                    already sits exactly on a rung skips the linger: it
+                    can dispatch immediately with zero padding, so
+                    waiting buys nothing.
+      warmup        ahead-of-time compile every serving dispatch cell
+                    before the worker threads start (DESIGN.md SS14):
+                    calls ``server.warmup(warmup_ks)`` and then baselines
+                    ``traces_after_warmup`` at 0 — the first request at
+                    any ladder rung runs an already-built executable.
+      warmup_ks     the ks warmup compiles for (default: the runtime's
+                    ``k=``; warmup with neither raises).
       compaction    start the maintenance thread (requires an
                     artifact-backed server).
       compact_fill  delta-buffer fill fraction that triggers a background
@@ -199,6 +230,7 @@ class ServingRuntime:
 
     def __init__(self, server, *, k: int | None = None, workers: int = 1,
                  deadline: float | None = None, batch_linger: float = 0.002,
+                 warmup: bool = False, warmup_ks=None,
                  compaction: bool = False, compact_fill: float = 0.5,
                  compact_policy=None, artifact_dir: str | None = None,
                  keep: int | None = None, poll_interval: float = 0.05):
@@ -248,7 +280,23 @@ class ServingRuntime:
         self._batches = 0
         self._swaps = 0
         self._compactions = 0
+        self._bucket_hits = 0
+        self._bucket_pad_rows = 0
         self.last_compaction_seconds: float | None = None
+
+        # AOT warmup runs before any worker exists, so no ticket can race
+        # a live trace; the baseline makes traces_after_warmup read 0
+        # until something actually traces post-warmup. Without warmup the
+        # baseline is construction time: the counter then reads "traces
+        # this runtime caused", the cold-start number bench_load reports.
+        if warmup:
+            ks = warmup_ks if warmup_ks is not None else \
+                ([] if k is None else [k])
+            if not ks:
+                raise ValueError("warmup=True needs warmup_ks= (or a "
+                                 "default k= to warm for)")
+            server.warmup(tuple(ks))
+        self._trace_base = server.compile_count
 
         self._threads = [
             threading.Thread(target=self._worker_loop,
@@ -317,6 +365,14 @@ class ServingRuntime:
     def _signature(self, t: ServeTicket) -> tuple:
         return (t.k, t.n_cand, t.scan)
 
+    def _ladder(self) -> tuple:
+        """The live config's bucket ladder (ascending dispatch sizes) —
+        read per call, so a config swapped between flushes brings its own
+        ladder along, like ``batch_size``."""
+        cfg = (self._engine.config if self._is_reverse
+               else self.server.config)
+        return cfg.bucket_ladder()
+
     def _next_batch(self) -> list[ServeTicket] | None:
         """The next micro-batch: the longest run of queue-head tickets
         sharing one signature, up to ``serve_batch_size``. Expired tickets
@@ -333,9 +389,13 @@ class ServingRuntime:
                     continue
                 if (self._linger > 0 and not lingered
                         and len(self._ticket_deque) < size
+                        and len(self._ticket_deque) not in self._ladder()
                         and not self._stop.is_set()):
                     # one bounded wait for a fuller batch, then dispatch
-                    # whatever is there — never a second linger
+                    # whatever is there — never a second linger. A queue
+                    # already sitting exactly on a ladder rung skips the
+                    # wait: it dispatches with zero padding, so lingering
+                    # buys throughput nothing and costs latency.
                     lingered = True
                     self._admit.wait(self._linger)
                     continue
@@ -348,7 +408,7 @@ class ServingRuntime:
                         self._ticket_deque.popleft()
                         self._completion.put(([head], None, TicketExpired(
                             f"ticket {head.seq} missed its deadline "
-                            f"before dispatch")))
+                            f"before dispatch"), None))
                         continue
                     if sig is None:
                         sig = self._signature(head)
@@ -359,14 +419,22 @@ class ServingRuntime:
                     return batch
                 lingered = False  # head tickets all expired; go around
 
-    def _dispatch_batch(self, batch: list[ServeTicket]) -> list:
+    def _dispatch_batch(self, batch: list[ServeTicket]) -> tuple[list, int]:
+        """Dispatch one signature run through the server's own flush path,
+        padded to the nearest ladder rung (``bucket_for``) rather than the
+        full ``serve_batch_size`` — bitwise the same answers (padding is
+        dead), one executable per rung, all precompiled by warmup.
+        Returns (results, pad_to)."""
         first = batch[0]
         group = [t.query for t in batch]
+        pad_to = self.server.bucket_for(len(group))
         if self._is_reverse:
-            return self.server._flush_batch(group, first.k)
-        return self.server._flush_batch(group, first.k,
-                                        n_cand=first.n_cand,
-                                        scan=first.scan)
+            return (self.server._flush_batch(group, first.k,
+                                             pad_to=pad_to), pad_to)
+        return (self.server._flush_batch(group, first.k,
+                                         n_cand=first.n_cand,
+                                         scan=first.scan,
+                                         pad_to=pad_to), pad_to)
 
     def _worker_loop(self) -> None:
         while True:
@@ -375,18 +443,18 @@ class ServingRuntime:
                 return
             try:
                 with self._dispatch_lock:
-                    results = self._dispatch_batch(batch)
+                    results, pad_to = self._dispatch_batch(batch)
             except BaseException as e:  # noqa: BLE001 — routed to futures
-                self._completion.put((batch, None, e))
+                self._completion.put((batch, None, e, None))
                 continue
-            self._completion.put((batch, results, None))
+            self._completion.put((batch, results, None, pad_to))
 
     def _completion_loop(self) -> None:
         while True:
             item = self._completion.get()
             if item is _SHUTDOWN:
                 return
-            batch, results, error = item
+            batch, results, error, pad_to = item
             if error is not None:
                 for t in batch:
                     t._resolve(error=error)
@@ -398,6 +466,10 @@ class ServingRuntime:
                 if error is None:
                     self._completed += len(batch)
                     self._batches += 1
+                    if pad_to is not None:
+                        if pad_to < self.server.batch_size:
+                            self._bucket_hits += 1
+                        self._bucket_pad_rows += pad_to - len(batch)
                 elif isinstance(error, TicketExpired):
                     self._expired += len(batch)
                 else:
@@ -484,13 +556,37 @@ class ServingRuntime:
 
     # -- lifecycle ---------------------------------------------------------
 
+    def warmup(self, ks=None, **server_kwargs) -> int:
+        """Re-run the server's AOT warmup under the dispatch lock (never
+        mid-flush) and re-baseline ``traces_after_warmup`` at 0 — e.g.
+        after swapping in a config with a different ladder, or to warm
+        extra ks mid-flight. ``ks`` defaults to the runtime's ``k=``;
+        extra keyword args go to ``server.warmup`` (n_cands/scans/buckets
+        on the forward server, buckets on the reverse). Returns the
+        number of cells compiled."""
+        ks = ks if ks is not None else \
+            ([] if self._default_k is None else [self._default_k])
+        if not ks:
+            raise ValueError("warmup needs ks= (or a default k= on the "
+                             "runtime)")
+        with self._dispatch_lock:
+            cells = self.server.warmup(tuple(ks), **server_kwargs)
+            self._trace_base = self.server.compile_count
+        return cells
+
     @property
     def stats(self) -> RuntimeStats:
-        """A consistent snapshot of the runtime counters."""
+        """A consistent snapshot of the runtime counters (see
+        ``RuntimeStats`` for the field contract; ``traces_after_warmup``
+        is derived live from the server's ``compile_count`` against the
+        warmup baseline)."""
+        traces = self.server.compile_count - self._trace_base
         with self._admit:
             return RuntimeStats(self._submitted, self._completed,
                                 self._expired, self._failed, self._batches,
-                                self._swaps, self._compactions)
+                                self._swaps, self._compactions,
+                                self._bucket_hits, self._bucket_pad_rows,
+                                traces)
 
     @property
     def pending(self) -> int:
@@ -534,7 +630,8 @@ class ServingRuntime:
             self._ticket_deque.clear()
         if leftover:
             self._completion.put((leftover, None, RuntimeError(
-                "runtime closed before these tickets were dispatched")))
+                "runtime closed before these tickets were dispatched"),
+                None))
         if self._completer.is_alive():
             self._completion.put(_SHUTDOWN)
             self._completer.join(timeout=30)

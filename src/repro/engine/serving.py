@@ -363,7 +363,9 @@ class RetrievalServer(_TicketQueue):
         self.config = config
         self.policy = policy
         self.artifact: IndexArtifact | None = None
-        self._delta = (None, None)   # live staged rows (items, mask) | None
+        # live staged rows (items, mask, qitems, qscale) | (None,) * 4 —
+        # the quantized twin rides along so the int8 screen covers churn
+        self._delta = (None, None, None, None)
         self._deleted = None         # host (n_base,) bool; None = no deletes
         self._mask_memo = None       # (ServingState, masked item_mask)
         self.cache = ServingCache(items, key, policy=policy,
@@ -384,20 +386,23 @@ class RetrievalServer(_TicketQueue):
         self._dispatch = jax.jit(_scan,
                                  static_argnames=("k", "n_cand", "scan"))
 
-        def _merge(vals, ids, queries, d_items, d_mask, *, k, n_base):
-            # Exact fold-in of the staged delta buffer — the same merge
+        def _merge(vals, ids, queries, d_items, d_mask, d_qitems,
+                   d_qscale, *, k, n_base, scan_precision):
+            # Fold-in of the staged delta buffer — the same merge
             # RkMIPSEngine.kmips applies, so ids agree id-for-id. The
             # buffer's capacity is static: one trace per (batch, k,
-            # n_base) ever, however much churn streams through.
+            # n_base, precision) ever, however much churn streams
+            # through. Under scan_precision="int8" the persisted
+            # quantized twin screens staged rows first (bitwise-equal
+            # contract: sa_alsh.merge_delta_topk).
             self.compile_count += 1
-            d_vals = jnp.where(d_mask[None, :], queries @ d_items.T,
-                               -jnp.inf)
-            d_ids = jnp.broadcast_to(
-                n_base + jnp.arange(d_items.shape[0], dtype=ids.dtype),
-                d_vals.shape)
-            return _alsh.merge_topk(vals, ids, d_vals, d_ids, k)
+            return _alsh.merge_delta_topk(
+                vals, ids, queries, d_items, d_mask, k, n_base,
+                d_qitems=d_qitems, d_qscale=d_qscale,
+                scan_precision=scan_precision)
 
-        self._merge = jax.jit(_merge, static_argnames=("k", "n_base"))
+        self._merge = jax.jit(
+            _merge, static_argnames=("k", "n_base", "scan_precision"))
 
     @classmethod
     def from_artifact(cls, artifact: IndexArtifact, *,
@@ -423,7 +428,7 @@ class RetrievalServer(_TicketQueue):
 
     def _bind_artifact(self, artifact: IndexArtifact) -> None:
         self.artifact = artifact
-        self._delta = artifact.kmips_delta()
+        self._delta = artifact.kmips_delta_quantized()
         deleted = np.asarray(artifact.deleted)
         self._deleted = deleted if deleted.any() else None
         self._mask_memo = None
@@ -481,14 +486,31 @@ class RetrievalServer(_TicketQueue):
         config swapped between flushes brings its own batching along."""
         return self.config.serve_batch_size
 
+    def bucket_for(self, n: int) -> int:
+        """The dispatch size ``n`` queries pad up to: the smallest rung of
+        ``config.bucket_ladder()`` that fits them. With no buckets
+        configured this is always ``serve_batch_size`` — the pre-bucketing
+        contract."""
+        if not 1 <= n <= self.batch_size:
+            raise ValueError(f"group of {n} outside [1, "
+                             f"batch_size={self.batch_size}]")
+        return next(b for b in self.config.bucket_ladder() if b >= n)
+
     def _flush_batch(self, group: list, k: int, *,
                      n_cand: int | None = None,
-                     scan: str | None = None) -> list[ServeResult]:
+                     scan: str | None = None,
+                     pad_to: int | None = None) -> list[ServeResult]:
         """Answer one micro-batch (<= ``batch_size`` queries) through the
         compiled dispatch — THE flush path: the synchronous ``flush`` and
         the threaded runtime's workers (engine/runtime.py) both call this,
         so their answers are bitwise identical by construction (same
         padding, same executables, same delta fold-in).
+
+        ``pad_to`` overrides the padded dispatch size (a ladder rung from
+        ``bucket_for``; defaults to the full ``batch_size``). Padding is
+        dead either way — zero queries computed and discarded — so a
+        bucket-padded dispatch is bitwise equal to the unbucketed one;
+        only the static shape (and hence which executable runs) differs.
         """
         state = self.cache.get(self.config)
         bound = (state.n_items if self.artifact is None
@@ -498,7 +520,10 @@ class RetrievalServer(_TicketQueue):
                              f"supported by this corpus")
         n_cand = self.config.n_cand if n_cand is None else n_cand
         scan = self.config.scan if scan is None else scan
-        batch = self.batch_size
+        batch = self.batch_size if pad_to is None else pad_to
+        if len(group) > batch:
+            raise ValueError(f"group of {len(group)} does not fit "
+                             f"pad_to={batch}")
         qs = jnp.stack(group)
         if len(group) < batch:
             qs = jnp.concatenate(
@@ -508,11 +533,66 @@ class RetrievalServer(_TicketQueue):
                                    self._masked_item_mask(state),
                                    state.codes, state.proj_q, qs, k=k,
                                    n_cand=n_cand, scan=scan)
-        d_items, d_mask = self._delta
+        d_items, d_mask, d_qitems, d_qscale = self._delta
         if d_items is not None:
-            vals, ids = self._merge(vals, ids, qs, d_items, d_mask, k=k,
-                                    n_base=self.artifact.n_base)
+            vals, ids = self._merge(
+                vals, ids, qs, d_items, d_mask, d_qitems, d_qscale, k=k,
+                n_base=self.artifact.n_base,
+                scan_precision=self.config.scan_precision)
         return [ServeResult(vals[j], ids[j], k) for j in range(len(group))]
+
+    def warmup(self, ks, *, n_cands=None, scans=None,
+               buckets=None) -> int:
+        """Ahead-of-time compile every (bucket, k, n_cand, scan) dispatch
+        cell — plus the delta merge when an artifact with live staged rows
+        is bound — via ``jit(...).lower().compile()`` (DESIGN.md SS14), so
+        the first real request at any ladder rung runs an executable that
+        already exists: zero traces after startup, pinned by the runtime's
+        ``traces_after_warmup`` counter.
+
+        ``ks`` is the iterable of query-time ks traffic will use;
+        ``n_cands``/``scans``/``buckets`` default to the config's single
+        n_cand / scan and the full ``bucket_ladder()``. Returns the number
+        of cells compiled. Lowering traces the same jitted callables the
+        live path calls (``compile_count`` counts these warmup traces
+        too), and the populated jit cache is what the live calls hit.
+        """
+        state = self.cache.get(self.config)
+        mask = self._masked_item_mask(state)
+        d = state.items.shape[1]
+        ks = tuple(ks)
+        n_cands = ((self.config.n_cand,) if n_cands is None
+                   else tuple(n_cands))
+        scans = (self.config.scan,) if scans is None else tuple(scans)
+        buckets = (self.config.bucket_ladder() if buckets is None
+                   else tuple(buckets))
+        # warm the merge off the artifact's raw buffer arrays, not the
+        # liveness-gated self._delta: the buffer's capacity/dtypes are
+        # fixed, so the executable built here is the one post-warmup
+        # churn will hit — staging the first insert must not trace
+        art = self.artifact
+        cells = 0
+        for b in buckets:
+            qs = jnp.zeros((b, d), state.items.dtype)
+            for k in ks:
+                for nc in n_cands:
+                    for sc in scans:
+                        self._dispatch.lower(
+                            state.items, state.item_ids, mask,
+                            state.codes, state.proj_q, qs, k=k,
+                            n_cand=nc, scan=sc).compile()
+                        cells += 1
+                if art is not None:
+                    vals = jnp.zeros((b, k), state.items.dtype)
+                    ids = jnp.zeros((b, k), state.item_ids.dtype)
+                    self._merge.lower(
+                        vals, ids, qs, art.delta_items, art.delta_mask,
+                        art.delta_qitems, art.delta_qscale, k=k,
+                        n_base=art.n_base,
+                        scan_precision=self.config.scan_precision
+                    ).compile()
+                    cells += 1
+        return cells
 
     def flush(self, k: int, *, n_cand: int | None = None,
               scan: str | None = None) -> list[ServeResult]:
@@ -621,13 +701,42 @@ class ReverseServer(_TicketQueue):
         (batch shape, k); serving adds no executables of its own)."""
         return self.engine.rkmips_compile_count
 
-    def _flush_batch(self, group: list, k: int) -> list[ReverseResult]:
+    def bucket_for(self, n: int) -> int:
+        """The dispatch size ``n`` queries pad up to: the smallest rung of
+        the engine config's ``bucket_ladder()`` that fits them. With no
+        buckets configured this is always ``serve_batch_size``."""
+        if not 1 <= n <= self.batch_size:
+            raise ValueError(f"group of {n} outside [1, "
+                             f"batch_size={self.batch_size}]")
+        return next(b for b in self.engine.config.bucket_ladder()
+                    if b >= n)
+
+    def warmup(self, ks, *, buckets=None) -> int:
+        """Ahead-of-time compile the engine's reverse dispatch at every
+        (bucket, k) cell (DESIGN.md SS14) — delegates to
+        ``RkMIPSEngine.warmup``, since reverse serving owns no executables
+        of its own. Returns the number of cells compiled."""
+        buckets = (self.engine.config.bucket_ladder() if buckets is None
+                   else tuple(buckets))
+        return self.engine.warmup(ks, batch_sizes=buckets)
+
+    def _flush_batch(self, group: list, k: int, *,
+                     pad_to: int | None = None) -> list[ReverseResult]:
         """Answer one micro-batch (<= ``batch_size`` queries) through the
         engine's batched dispatch — THE flush path shared by the
         synchronous ``flush`` and the threaded runtime's workers
         (engine/runtime.py): same repeat-padding, same executable, so
-        their answers are bitwise identical by construction."""
-        batch = self.batch_size
+        their answers are bitwise identical by construction.
+
+        ``pad_to`` overrides the padded dispatch size (a ladder rung from
+        ``bucket_for``; defaults to the full ``batch_size``). Repeat-padded
+        rows are computed and discarded and work-queue lanes are
+        independent, so a bucket-padded dispatch is bitwise equal to the
+        unbucketed one — only the static shape differs."""
+        batch = self.batch_size if pad_to is None else pad_to
+        if len(group) > batch:
+            raise ValueError(f"group of {len(group)} does not fit "
+                             f"pad_to={batch}")
         qs = jnp.stack(group)
         if len(group) < batch:
             qs = jnp.concatenate(

@@ -221,20 +221,35 @@ def _flat_candidates(items, item_ids, item_mask, codes, ucodes, queries,
                      k: int, n_cand: int, scan: str):
     """One-pass scan over a row slab: sketch (Hamming top-n_cand + exact
     re-rank) or exact (dense IPs), then top-k. Returns (vals (Q, k),
-    ids (Q, k) original item rows)."""
+    ids (Q, k) original item rows).
+
+    The f32 work maps over queries (``lax.map``) instead of batching the
+    contraction across them: XLA lowers a batched contraction differently
+    at different Q, so a batched expression's per-row results drift in
+    the last ulp across batch shapes — which would break the serving
+    contract that a bucket-padded dispatch (any ladder rung, DESIGN.md
+    SS14) is bitwise equal to the full-batch flush. The per-query body is
+    shape-identical at every Q, so every executable computes identical
+    rows; the N-axis work inside each step stays fully vectorized, and Q
+    is a micro-batch on the serving path.
+    """
     if scan == "exact":
-        ips = jnp.where(item_mask[None, :], queries @ items.T, _NEG)
+        def one_exact(q):
+            ips = jnp.where(item_mask, items @ q, _NEG)
+            vals, pos = jax.lax.top_k(ips, k)
+            return vals, jnp.take(item_ids, pos)
+        return jax.lax.map(one_exact, queries)
+
+    def one_sketch(args):
+        uc, q = args
+        dist = kops.hamming_scores(uc[None], codes)[0]    # (N,)
+        dist = jnp.where(item_mask, dist, _BIG_HAMMING)
+        _, cand = jax.lax.top_k(-dist, n_cand)            # (n_cand,)
+        ips = jnp.take(items, cand, axis=0) @ q
+        ips = jnp.where(jnp.take(item_mask, cand), ips, _NEG)
         vals, pos = jax.lax.top_k(ips, k)
-        return vals, jnp.take(item_ids, pos)
-    dist = kops.hamming_scores(ucodes, codes)             # (Q, N)
-    dist = jnp.where(item_mask[None, :], dist, _BIG_HAMMING)
-    _, cand = jax.lax.top_k(-dist, n_cand)                # (Q, n_cand)
-    cand_vecs = jnp.take(items, cand, axis=0)             # (Q, n_cand, d)
-    ips = jnp.einsum("cnd,cd->cn", cand_vecs, queries)
-    ips = jnp.where(jnp.take(item_mask, cand, axis=0), ips, _NEG)
-    vals, pos = jax.lax.top_k(ips, k)
-    ids = jnp.take_along_axis(jnp.take(item_ids, cand, axis=0), pos, axis=-1)
-    return vals, ids
+        return vals, jnp.take(jnp.take(item_ids, cand), pos)
+    return jax.lax.map(one_sketch, (ucodes, queries))
 
 
 def kmips_flat_arrays(items: jnp.ndarray, item_ids: jnp.ndarray,

@@ -1,0 +1,262 @@
+"""Bucket ladder + AOT warmup contract (DESIGN.md SS14).
+
+Hypothesis-free mirrors of the serving bucketing invariants (the property
+versions over arbitrary ticket-arrival prefixes live in
+tests/test_core_properties.py):
+
+  * ``EngineConfig.serve_buckets`` validation and the ``bucket_ladder()``
+    shape — ascending rungs, ``serve_batch_size`` always the top one;
+  * bucket-padded dispatch (``_flush_batch(pad_to=...)``) is bitwise
+    equal to the unbucketed flush for BOTH servers, staged deltas
+    included — padding is dead whichever rung it fills to;
+  * warmup (``server.warmup`` / ``ServingRuntime(warmup=True)``)
+    precompiles every ladder rung: the first post-warmup request at any
+    rung — and the first post-warmup churn — adds zero traces, observable
+    as ``RuntimeStats.traces_after_warmup == 0``;
+  * the runtime's ``bucket_hits`` / ``bucket_pad_rows`` counters account
+    for exactly the sub-maximal dispatches and their dead rows.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.engine import EngineConfig, IndexArtifact, RkMIPSEngine
+from repro.engine.runtime import ServingRuntime
+
+D = 16
+_BUILD_KEY = jax.random.PRNGKey(41)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    key = jax.random.PRNGKey(17)
+    ki, kq = jax.random.split(key)
+    items, users = synthetic.recommendation_data(ki, 120, 40, D)
+    queries = synthetic.queries_from_items(kq, items, 6)
+    return items, users, queries
+
+
+def _cfg(**over):
+    base = dict(k_max=8, n_top=8, leaf_size=8, tile=32, n_bits=32,
+                n_cand=16, delta_capacity=8, serve_batch_size=4,
+                serve_buckets=(1, 2))
+    base.update(over)
+    return EngineConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def artifact(workload):
+    items, users, _ = workload
+    return IndexArtifact.build(items, users, _BUILD_KEY, config=_cfg())
+
+
+# ---------------------------------------------------------------------------
+# Config: serve_buckets validation + the ladder shape.
+# ---------------------------------------------------------------------------
+
+
+def test_serve_buckets_validation():
+    with pytest.raises(ValueError, match="serve_buckets"):
+        EngineConfig(serve_batch_size=4, serve_buckets=(0, 2))
+    with pytest.raises(ValueError, match="serve_buckets"):
+        EngineConfig(serve_batch_size=4, serve_buckets=(1, 8))
+    with pytest.raises(ValueError, match="serve_buckets"):
+        EngineConfig(serve_batch_size=4, serve_buckets=(2, 1))
+    with pytest.raises(ValueError, match="serve_buckets"):
+        EngineConfig(serve_batch_size=4, serve_buckets=(2, 2))
+    with pytest.raises(ValueError, match="serve_buckets"):
+        EngineConfig(serve_batch_size=4, serve_buckets=("1",))
+    # lists normalize to a tuple (the config stays hashable)
+    cfg = EngineConfig(serve_batch_size=4, serve_buckets=[1, 2])
+    assert cfg.serve_buckets == (1, 2)
+    hash(cfg)
+
+
+def test_bucket_ladder():
+    assert EngineConfig(serve_batch_size=8).bucket_ladder() == (8,)
+    cfg = EngineConfig(serve_batch_size=8, serve_buckets=(1, 2, 4))
+    assert cfg.bucket_ladder() == (1, 2, 4, 8)
+    # a bucket equal to the batch size does not duplicate the top rung
+    cfg = EngineConfig(serve_batch_size=8, serve_buckets=(2, 8))
+    assert cfg.bucket_ladder() == (2, 8)
+
+
+def test_bucket_for(artifact):
+    srv = RkMIPSEngine.from_artifact(artifact).server()
+    assert [srv.bucket_for(n) for n in (1, 2, 3, 4)] == [1, 2, 4, 4]
+    rsrv = RkMIPSEngine.from_artifact(artifact).reverse_server()
+    assert [rsrv.bucket_for(n) for n in (1, 2, 3, 4)] == [1, 2, 4, 4]
+    for bad in (0, 5):
+        with pytest.raises(ValueError, match="outside"):
+            srv.bucket_for(bad)
+        with pytest.raises(ValueError, match="outside"):
+            rsrv.bucket_for(bad)
+
+
+# ---------------------------------------------------------------------------
+# Bitwise: bucket-padded dispatch == unbucketed flush, both servers.
+# ---------------------------------------------------------------------------
+
+
+def test_forward_bucket_padding_bitwise(workload, artifact):
+    """Every group size, every fitting rung — including the top one —
+    answers bitwise like the plain full-batch flush, with staged deltas
+    live (the merge path is exercised too)."""
+    _, _, queries = workload
+    art = artifact.insert_items(jnp.ones((3, D)) * 0.7).delete_items([2])
+    srv = RkMIPSEngine.from_artifact(artifact).server().swap(art)
+    for n in (1, 2, 3, 4):
+        group = [queries[i % queries.shape[0]] for i in range(n)]
+        plain = srv._flush_batch(group, 3)
+        for rung in (r for r in (1, 2, 4) if r >= n):
+            padded = srv._flush_batch(group, 3, pad_to=rung)
+            for a, b in zip(plain, padded):
+                np.testing.assert_array_equal(np.asarray(a.values),
+                                              np.asarray(b.values))
+                np.testing.assert_array_equal(np.asarray(a.ids),
+                                              np.asarray(b.ids))
+    with pytest.raises(ValueError, match="does not fit"):
+        srv._flush_batch([queries[0]] * 3, 3, pad_to=2)
+
+
+def test_reverse_bucket_padding_bitwise(workload, artifact):
+    _, _, queries = workload
+    rsrv = RkMIPSEngine.from_artifact(artifact).reverse_server()
+    for n in (1, 2, 3, 4):
+        group = [queries[i % queries.shape[0]] for i in range(n)]
+        plain = rsrv._flush_batch(group, 3)
+        padded = rsrv._flush_batch(group, 3, pad_to=rsrv.bucket_for(n))
+        for a, b in zip(plain, padded):
+            np.testing.assert_array_equal(np.asarray(a.predictions),
+                                          np.asarray(b.predictions))
+    with pytest.raises(ValueError, match="does not fit"):
+        rsrv._flush_batch([queries[0]] * 3, 3, pad_to=1)
+
+
+# ---------------------------------------------------------------------------
+# Warmup: zero traces on the first request at every rung, churn included.
+# ---------------------------------------------------------------------------
+
+
+def test_forward_warmup_zero_traces_every_rung(workload, artifact):
+    _, _, queries = workload
+    srv = RkMIPSEngine.from_artifact(artifact).server()
+    cells = srv.warmup((3,))
+    # 3 rungs x (1 dispatch + 1 merge): the merge warms off the raw
+    # buffer arrays even though no delta is live yet
+    assert cells == 6
+    base = srv.compile_count
+    for n in (1, 2, 3, 4):
+        group = [queries[i % queries.shape[0]] for i in range(n)]
+        srv._flush_batch(group, 3, pad_to=srv.bucket_for(n))
+        assert srv.compile_count == base, f"rung for n={n} traced"
+    # post-warmup churn flips the delta merge live: still no trace
+    srv.swap(artifact.insert_items(jnp.ones((2, D))))
+    srv._flush_batch([queries[0]], 3, pad_to=1)
+    assert srv.compile_count == base
+    # an unwarmed signature still traces (the counter is live, not wedged)
+    srv._flush_batch([queries[0]], 5, pad_to=1)
+    assert srv.compile_count == base + 2    # dispatch + merge at k=5
+
+
+def test_reverse_warmup_zero_traces_every_rung(workload, artifact):
+    _, _, queries = workload
+    eng = RkMIPSEngine.from_artifact(artifact)
+    rsrv = eng.reverse_server()
+    # 3 rungs x 1 k x (empty-delta sig + buffer-array sig)
+    assert rsrv.warmup((3,)) == 6
+    base = rsrv.compile_count
+    for n in (1, 2, 3, 4):
+        group = [queries[i % queries.shape[0]] for i in range(n)]
+        rsrv._flush_batch(group, 3, pad_to=rsrv.bucket_for(n))
+        assert rsrv.compile_count == base, f"rung for n={n} traced"
+    # churn flips the engine delta from None to the buffer arrays: warmed
+    eng.attach(artifact.insert_items(jnp.ones((2, D))))
+    rsrv._flush_batch([queries[0]], 3, pad_to=1)
+    assert rsrv.compile_count == base
+
+
+# ---------------------------------------------------------------------------
+# Runtime: stats counters + warmup=True end to end.
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_warm_vs_cold_and_bucket_stats(workload, artifact):
+    _, _, queries = workload
+    warm = ServingRuntime(RkMIPSEngine.from_artifact(artifact).server(),
+                          k=3, warmup=True, batch_linger=0.0)
+    cold = ServingRuntime(RkMIPSEngine.from_artifact(artifact).server(),
+                          k=3, batch_linger=0.0)
+    try:
+        # submit one at a time (resolving each before the next) so every
+        # batch is a single ticket: deterministic rung-1 dispatches
+        wt = [warm.submit(queries[i]) for i in range(3)]
+        for t in wt:
+            t.result(timeout=120)
+        ct = []
+        for i in range(3):
+            t = cold.submit(queries[i])
+            t.result(timeout=120)
+            ct.append(t)
+        ws, cs = warm.stats, cold.stats
+        assert ws.traces_after_warmup == 0
+        assert cs.traces_after_warmup > 0          # cold paid live traces
+        # cold dispatched 3 single-ticket batches, each on rung 1 — every
+        # one sub-maximal, no dead rows on an exact rung
+        assert cs.bucket_hits == cs.batches == 3
+        assert cs.bucket_pad_rows == 0
+        # the warm side may have coalesced its burst, but the counters
+        # stay coherent: hits never exceed batches, and everything landed
+        assert ws.completed == 3
+        assert 0 <= ws.bucket_hits <= ws.batches
+        for t_warm, t_cold in zip(wt, ct):
+            np.testing.assert_array_equal(
+                np.asarray(t_warm.result().values),
+                np.asarray(t_cold.result().values))
+            np.testing.assert_array_equal(
+                np.asarray(t_warm.result().ids),
+                np.asarray(t_cold.result().ids))
+    finally:
+        warm.close()
+        cold.close()
+
+
+def test_runtime_unbucketed_ladder_is_pre_bucketing_contract(workload):
+    """Without serve_buckets every dispatch pads to the full batch:
+    bucket_hits stays 0 and pad rows account for full-batch padding."""
+    items, users, queries = workload
+    art = IndexArtifact.build(items, users, _BUILD_KEY,
+                              config=_cfg(serve_buckets=()))
+    rt = ServingRuntime(RkMIPSEngine.from_artifact(art).server(), k=3,
+                        batch_linger=0.0)
+    try:
+        rt.submit(queries[0]).result(timeout=120)
+        s = rt.stats
+        assert s.bucket_hits == 0
+        assert s.bucket_pad_rows == 3              # 1 ticket padded to 4
+    finally:
+        rt.close()
+
+
+def test_runtime_rewarmup_rebaselines(workload, artifact):
+    _, _, queries = workload
+    rt = ServingRuntime(RkMIPSEngine.from_artifact(artifact).server(),
+                        k=3, batch_linger=0.0)
+    try:
+        rt.submit(queries[0]).result(timeout=120)
+        assert rt.stats.traces_after_warmup > 0
+        rt.warmup()                                # default ks = (k,)
+        assert rt.stats.traces_after_warmup == 0
+        rt.submit(queries[1]).result(timeout=120)
+        assert rt.stats.traces_after_warmup == 0
+    finally:
+        rt.close()
+
+
+def test_runtime_warmup_needs_ks(workload, artifact):
+    with pytest.raises(ValueError, match="warmup"):
+        ServingRuntime(RkMIPSEngine.from_artifact(artifact).server(),
+                       warmup=True)

@@ -308,6 +308,76 @@ def test_padding_preserves_original_mapping(m, shards, seed):
     np.testing.assert_array_equal(out, expect)
 
 
+# ---------------------------------------------------------------------------
+# Serving bucket ladder (DESIGN.md SS14): grouping an arbitrary ticket-
+# arrival prefix the way the runtime's _next_batch does (same-k runs capped
+# at serve_batch_size) and flushing each group at its ladder rung is bitwise
+# the unbucketed full-batch flush — both servers, staged delta live. The
+# hypothesis-free mirror with fixed group sizes lives in
+# tests/test_bucketing.py.
+# ---------------------------------------------------------------------------
+
+_bucket_env: dict = {}
+
+
+def _bucket_servers():
+    """Build the shared corpus/servers once — jit caches live on the server
+    instances, so examples after the first re-use every executable."""
+    if not _bucket_env:
+        from repro.engine import EngineConfig, IndexArtifact, RkMIPSEngine
+        key = jax.random.PRNGKey(77)
+        ki, ku, kq, kb = jax.random.split(key, 4)
+        items = jax.random.normal(ki, (48, 8))
+        users = jax.random.normal(ku, (16, 8))
+        cfg = EngineConfig(k_max=4, n_top=4, leaf_size=8, tile=32,
+                           n_bits=32, n_cand=16, delta_capacity=4,
+                           serve_batch_size=4, serve_buckets=(1, 2))
+        art = IndexArtifact.build(items, users, kb, config=cfg)
+        churned = art.insert_items(jnp.ones((2, 8)) * 0.8).delete_items([5])
+        _bucket_env["queries"] = jax.random.normal(kq, (5, 8)) * 1.5
+        _bucket_env["fwd"] = \
+            RkMIPSEngine.from_artifact(art).server().swap(churned)
+        _bucket_env["rev"] = \
+            RkMIPSEngine.from_artifact(churned).reverse_server()
+    return _bucket_env
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(st.lists(
+    st.tuples(st.integers(0, 4), st.sampled_from((2, 3))),
+    min_size=1, max_size=12))
+def test_bucketed_dispatch_bitwise_over_arrival_prefixes(arrivals):
+    """Any arrival prefix of (query, k) tickets: runtime-style grouping +
+    rung padding answers bitwise like the plain flush, group by group."""
+    env = _bucket_servers()
+    fwd, rev, queries = env["fwd"], env["rev"], env["queries"]
+    batch = fwd.batch_size
+    groups, run = [], []
+    for qi, k in arrivals:                 # same-k runs, capped at batch
+        if run and (run[0][1] != k or len(run) == batch):
+            groups.append(run)
+            run = []
+        run.append((qi, k))
+    groups.append(run)
+    for run in groups:
+        k = run[0][1]
+        group = [queries[qi] for qi, _ in run]
+        plain = fwd._flush_batch(group, k)
+        padded = fwd._flush_batch(group, k,
+                                  pad_to=fwd.bucket_for(len(group)))
+        for a, b in zip(plain, padded):
+            np.testing.assert_array_equal(np.asarray(a.values),
+                                          np.asarray(b.values))
+            np.testing.assert_array_equal(np.asarray(a.ids),
+                                          np.asarray(b.ids))
+        rplain = rev._flush_batch(group, k)
+        rpadded = rev._flush_batch(group, k,
+                                   pad_to=rev.bucket_for(len(group)))
+        for a, b in zip(rplain, rpadded):
+            np.testing.assert_array_equal(np.asarray(a.predictions),
+                                          np.asarray(b.predictions))
+
+
 @hypothesis.given(st.integers(4, 60), st.integers(1, 4))
 def test_pack_unpack_hamming(n, w):
     """Hamming distance of packed codes == sign-bit disagreements."""

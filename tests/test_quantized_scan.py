@@ -170,6 +170,43 @@ def test_int8_bitwise_equal_under_churn(method, workload):
                          queries)
 
 
+def test_int8_forward_serving_delta_bitwise(workload):
+    """The RetrievalServer's jitted merge consumes the artifact's persisted
+    quantized twin (delta_qitems/delta_qscale) as an int8 screen on staged
+    rows: over churned corpora — staged inserts, deletions, compact() —
+    the int8 serving flush answers bitwise with the f32 flush, and the
+    engine's ``kmips`` delta fold holds the same int8==f32 equality."""
+    items, users, queries = workload
+    cfg = _cfg("sah")
+    key = jax.random.fold_in(_BUILD_KEY, 2)
+    base = IndexArtifact.build(items, users, _BUILD_KEY, config=cfg)
+    churned = base.insert_items(jax.random.normal(key, (5, D)) * 1.2)
+    stages = [churned,
+              churned.delete_items([3, 50, items.shape[0] + 2]),
+              churned.compact()]
+    s32 = RkMIPSEngine.from_artifact(base).server()
+    s8 = RkMIPSEngine(_int8(cfg)).attach(base).server()
+    for art in stages:
+        s32.swap(art)
+        s8.swap(art)
+        e32 = RkMIPSEngine.from_artifact(art)
+        e8 = RkMIPSEngine(_int8(cfg)).attach(art)
+        for k in (3, 8):
+            r32 = s32._flush_batch(list(queries[:2]), k)
+            r8 = s8._flush_batch(list(queries[:2]), k)
+            for a, b in zip(r32, r8):
+                np.testing.assert_array_equal(np.asarray(a.values),
+                                              np.asarray(b.values))
+                np.testing.assert_array_equal(np.asarray(a.ids),
+                                              np.asarray(b.ids))
+            k32 = e32.kmips(queries[:2], k)
+            k8 = e8.kmips(queries[:2], k)
+            np.testing.assert_array_equal(np.asarray(k32.values),
+                                          np.asarray(k8.values))
+            np.testing.assert_array_equal(np.asarray(k32.ids),
+                                          np.asarray(k8.ids))
+
+
 # ---------------------------------------------------------------------------
 # Compile counts: one trace per batch shape, unchanged by the knob.
 # ---------------------------------------------------------------------------
