@@ -1,0 +1,239 @@
+"""Adversarial-query bench: scan budgets vs. SRP-pruning-defeating
+traffic (DESIGN.md SS15).
+
+The reverse pipeline's speed rests on pruning: SRP sketch codes and norm
+bounds retire most (user, query) lanes before the tile scan. This harness
+crafts queries that *defeat* that pruning and measures what one hostile
+tenant costs the well-behaved traffic sharing its batches — and what a
+``scan_budget`` buys back.
+
+Crafting (two families, worst offenders kept by *measured* tile visits):
+
+  * **SRP-blind probes** — unit directions drawn from the span of the
+    projection matrix's smallest left-singular vectors: near-orthogonal
+    to every SRP hyperplane, their code bits are signs of near-zero
+    margins, so sketch distances carry almost no signal and lanes
+    survive to the exact scan.
+  * **Max-norm-shell probes** — noisy copies of the top-norm items,
+    scaled onto the corpus's maximum-norm shell: tau lands high enough
+    that norm-based O(1) decisions thin out and borderline users go to
+    the scan in bulk.
+
+Schedule: one open-loop Poisson stream (benchmarks/bench_load.py
+discipline — latency charged against *intended* arrival) mixing benign
+queries with an adversarial probe every ``adv_every`` tickets. The same
+schedule replays against two warmed runtimes:
+
+  unbudgeted — ``scan_budget=0``: every batch containing a probe runs
+               its while-loop to the probe's depth; co-batched benign
+               tickets inherit that latency.
+  budgeted   — ``scan_budget`` set just above the benign pool's
+               worst-case tile depth: probes get truncated (flagged
+               ``truncated=True``, counted in ``RuntimeStats.truncated``
+               — never silent), benign answers stay bitwise exact.
+
+Rows land in the BENCH suite as ``adversarial/...``; the budgeted row
+carries ``budget_p99_speedup=`` (unbudgeted benign p99 / budgeted benign
+p99 — the number CI asserts is present) plus the truncation count.
+
+    PYTHONPATH=src python -m benchmarks.run --scale smoke --only adversarial
+    PYTHONPATH=src python -m benchmarks.bench_adversarial --duration 3
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks import common
+from benchmarks.bench_load import make_schedule
+from benchmarks.bench_serving import _env, _pct
+
+
+def craft_adversarial(engine, n_probes: int, *, seed: int = 7,
+                      pool_factor: int = 4) -> tuple[np.ndarray, dict]:
+    """The ``n_probes`` worst queries for ``engine``'s index, by measured
+    tile visits.
+
+    Builds a candidate pool of SRP-blind and max-norm-shell probes
+    (module docstring), runs them through ``query_batch`` against the
+    live index, and keeps the candidates whose ``tiles_scanned`` is
+    highest — crafted against the *actual* projection and norms, not a
+    heuristic. Returns (probes (n_probes, d) f32, crafting diagnostics).
+    """
+    rng = np.random.default_rng(seed)
+    index = engine.index
+    d = int(index.users.shape[-1])
+    pool_n = max(n_probes * pool_factor, n_probes + 2)
+
+    # family 1: SRP-blind — span of the smallest left-singular vectors of
+    # the (d, B) query-side projection
+    proj = np.asarray(index.alsh.proj)[:-1]          # (d, B)
+    u, s, _ = np.linalg.svd(proj, full_matrices=True)
+    n_small = max(2, d // 8)
+    basis = u[:, -n_small:]                          # (d, n_small)
+    coef = rng.normal(size=(pool_n // 2, n_small))
+    blind = coef @ basis.T
+    blind /= np.linalg.norm(blind, axis=-1, keepdims=True) + 1e-30
+
+    # family 2: max-norm-shell — noisy top-norm items pushed onto the
+    # corpus's max-norm shell
+    top = np.asarray(index.top_items)
+    max_norm = float(np.asarray(index.top_norms)[0])
+    picks = top[rng.integers(0, top.shape[0],
+                             size=pool_n - blind.shape[0])]
+    shell = picks + 0.05 * rng.normal(size=picks.shape) * \
+        np.linalg.norm(picks, axis=-1, keepdims=True)
+    shell *= max_norm / (np.linalg.norm(shell, axis=-1,
+                                        keepdims=True) + 1e-30)
+    # SRP-blind probes ride the same shell: pruning by norm must not
+    # retire what pruning by code failed to
+    blind *= max_norm
+
+    pool = np.concatenate([blind, shell]).astype(np.float32)
+    res = engine.query_batch(pool, min(3, engine.config.k_max))
+    tiles = np.asarray(res.stats.tiles_scanned)
+    worst = np.argsort(tiles)[::-1][:n_probes]
+    return pool[worst], {
+        "pool": pool.shape[0],
+        "picked_tiles_mean": float(tiles[worst].mean()),
+        "pool_tiles_mean": float(tiles.mean()),
+    }
+
+
+def benign_tile_budget(engine, queries, k: int, *,
+                       headroom: float = 1.25) -> tuple[int, int]:
+    """-> (budget, benign worst-case tiles): the smallest per-query tile
+    cap that leaves the benign pool untouched, with ``headroom`` slack
+    for co-residency charging (a chunk's tile visits are charged to
+    every query with a lane in it, DESIGN.md SS9)."""
+    res = engine.query_batch(queries, k)
+    worst = int(np.asarray(res.stats.tiles_scanned).max())
+    return max(1, int(worst * headroom) + 1), worst
+
+
+def drive_mixed(rt, benign, probes, schedule, k: int, *,
+                adv_every: int, timeout: float = 600.0) -> dict:
+    """Replay ``schedule`` open-loop with a probe every ``adv_every``-th
+    ticket; per-class latency (benign vs adversarial) plus per-ticket
+    truncation counts out of the resolved results."""
+    nb, na = benign.shape[0], probes.shape[0]
+    base = time.perf_counter()
+    tickets = []
+    for i, at in enumerate(schedule):
+        lead = at - (time.perf_counter() - base)
+        if lead > 0:
+            time.sleep(lead)
+        adv = adv_every > 0 and (i + 1) % adv_every == 0
+        q = probes[(i // adv_every) % na] if adv else benign[i % nb]
+        tickets.append((rt.submit(q, k=k), at, adv))
+    rt.drain(timeout)
+    lat = {False: [], True: []}
+    trunc = {False: 0, True: 0}
+    for t, at, adv in tickets:
+        r = t.result(timeout=timeout)
+        lat[adv].append(t.done_at - (base + at))
+        trunc[adv] += bool(getattr(r, "truncated", False))
+    return {
+        "benign_p50": _pct(lat[False], 0.5),
+        "benign_p99": _pct(lat[False], 0.99),
+        "adv_p99": _pct(lat[True] or lat[False], 0.99),
+        "p99": _pct(lat[False] + lat[True], 0.99),
+        "tickets": len(tickets),
+        "trunc_benign": trunc[False], "trunc_adv": trunc[True],
+        "stats": rt.stats,
+    }
+
+
+def run(n=2048, m=4096, d=64, nq=8, *, k=3, rate=24.0, duration=3.0,
+        adv_every=4, n_probes=4, chunk=64, seed=0):
+    """The BENCH ``adversarial`` suite: craft, then one mixed open-loop
+    cell driven twice (unbudgeted vs budgeted) on the same schedule.
+
+    ``chunk`` is deliberately small relative to the bench index so probe
+    depth shows up as extra while-loop iterations rather than vanishing
+    into one giant chunk (the same reason tests/test_gateway.py pins
+    chunk=8).
+    """
+    import jax
+
+    from repro.engine import IndexArtifact, RkMIPSEngine, get_config
+
+    wl = common.make_workload("nmf", n, m, d, nq, (k,))
+    cfg = get_config("sah").replace(k_max=max(10, k), chunk=chunk,
+                                    serve_batch_size=4,
+                                    serve_buckets=(1, 2))
+    art = IndexArtifact.build(wl.items, wl.users, jax.random.PRNGKey(1),
+                              config=cfg)
+
+    crafter = RkMIPSEngine.from_artifact(art)
+    probes, craft = craft_adversarial(crafter, n_probes, seed=seed + 7)
+    budget, benign_worst = benign_tile_budget(crafter,
+                                              np.asarray(wl.queries), k)
+
+    rows = [common.fmt_row(
+        "adversarial/craft", 0.0,
+        f"pool={craft['pool']};probes={n_probes};"
+        f"probe_tiles_mean={craft['picked_tiles_mean']:.1f};"
+        f"benign_tiles_worst={benign_worst};budget={budget};{_env()}")]
+
+    schedule = make_schedule("poisson", rate, duration, seed + 1)
+    out = {}
+    for mode, b in (("unbudgeted", 0), ("budgeted", budget)):
+        eng = RkMIPSEngine(cfg.replace(scan_budget=b)).attach(art)
+        rt = eng.async_reverse_server(k=k, warmup=True,
+                                      poll_interval=0.005)
+        try:
+            out[mode] = drive_mixed(rt, np.asarray(wl.queries), probes,
+                                    schedule, k, adv_every=adv_every)
+        finally:
+            rt.close()
+    for mode, msr in out.items():
+        s = msr["stats"]
+        derived = (f"benign_p99_us={msr['benign_p99'] * 1e6:.1f};"
+                   f"adv_p99_us={msr['adv_p99'] * 1e6:.1f};"
+                   f"p99_us={msr['p99'] * 1e6:.1f};"
+                   f"tickets={msr['tickets']};"
+                   f"truncated={s.truncated};"
+                   f"trunc_adv={msr['trunc_adv']};"
+                   f"trunc_benign={msr['trunc_benign']};"
+                   f"traces_after_warmup={s.traces_after_warmup};"
+                   f"{_env()}")
+        if mode == "budgeted":
+            derived += (f";budget={budget};budget_p99_speedup="
+                        f"{out['unbudgeted']['benign_p99'] / msr['benign_p99']:.2f}")
+        rows.append(common.fmt_row(f"adversarial/mixed/{mode}",
+                                   msr["benign_p50"] * 1e6, derived))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=2048)
+    ap.add_argument("--m", type=int, default=4096)
+    ap.add_argument("--nq", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=24.0)
+    ap.add_argument("--duration", type=float, default=3.0)
+    ap.add_argument("--adv-every", type=int, default=4)
+    ap.add_argument("--assert-speedup", action="store_true",
+                    help="exit nonzero unless the budgeted run reported "
+                         "truncations and a benign-p99 speedup > 1")
+    args = ap.parse_args()
+    rows = run(n=args.n, m=args.m, nq=args.nq, rate=args.rate,
+               duration=args.duration, adv_every=args.adv_every)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r)
+    if args.assert_speedup:
+        budgeted = [r for r in rows if "/budgeted" in r][0]
+        speedup = float(budgeted.split("budget_p99_speedup=")[1])
+        truncated = int(budgeted.split("truncated=")[1].split(";")[0])
+        assert truncated > 0, "budgeted run truncated nothing"
+        assert speedup > 1.0, f"benign p99 speedup {speedup} <= 1"
+        print(f"# ok: truncated={truncated} benign_p99_speedup={speedup}")
+
+
+if __name__ == "__main__":
+    main()

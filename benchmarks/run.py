@@ -33,7 +33,7 @@ def main() -> None:
     ap.add_argument("--scale", choices=("smoke", "bench"), default="bench")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: rkmips,artifact,serving,"
-                         "load,kmips,params,kernels,roofline")
+                         "load,adversarial,kmips,params,kernels,roofline")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + run metadata as JSON")
     ap.add_argument("--host-devices", type=int, default=None, metavar="N",
@@ -50,9 +50,10 @@ def main() -> None:
             + f" --xla_force_host_platform_device_count"
               f"={args.host_devices}").strip()
 
-    from benchmarks import (bench_artifact, bench_kernels, bench_kmips,
-                            bench_load, bench_params, bench_rkmips,
-                            bench_roofline, bench_serving)
+    from benchmarks import (bench_adversarial, bench_artifact,
+                            bench_kernels, bench_kmips, bench_load,
+                            bench_params, bench_rkmips, bench_roofline,
+                            bench_serving)
 
     small = args.scale == "smoke"
     suites = {
@@ -72,6 +73,11 @@ def main() -> None:
             nq=8 if small else 16, cap=128 if small else 256,
             duration=3.0 if small else 10.0,
             rates=(16.0, 48.0) if small else (32.0, 96.0)),
+        "adversarial": lambda: bench_adversarial.run(
+            n=2048 if small else 8192, m=4096 if small else 16384,
+            nq=8 if small else 16,
+            rate=24.0 if small else 48.0,
+            duration=3.0 if small else 10.0),
         "kmips": lambda: bench_kmips.run(
             n=4096 if small else 16384, m=4096 if small else 16384,
             nq=8 if small else 32,

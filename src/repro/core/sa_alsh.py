@@ -575,6 +575,29 @@ def merge_delta_topk(vals: jnp.ndarray, ids: jnp.ndarray,
     return merge_topk(vals, ids, d_vals, d_ids, k)
 
 
+def delta_screen_tables(users: jnp.ndarray, d_qitems: jnp.ndarray,
+                        d_qscale: jnp.ndarray):
+    """Query-independent int8 screen tables for the staged delta buffer in
+    the *reverse* plan (sah.py ``_plan_one``): ``(qips, qerr)``, both
+    (m, cap).
+
+    ``qips[u, j]`` is the dequantized inner product of user row u with
+    staged row j; ``qerr[u, j]`` its sound error radius — the same
+    ``0.5 * sqrt(d) * slack * scale * ||u||`` Cauchy-Schwarz ball the
+    forward merge (``merge_delta_topk``) puts around a query's dequantized
+    IP, with the user vector in the query role. Dead slots (scale 0) get
+    qips = qerr = 0 and are masked by the caller's ``delta_mask`` anyway.
+    Computed once per dispatch by every driver (the full GEMM is the
+    identical expression in the per-query and batched paths, keeping their
+    screen decisions bitwise consistent).
+    """
+    radius = 0.5 * float(users.shape[-1]) ** 0.5 * _QERR_SLACK
+    qips = (users @ d_qitems.astype(jnp.float32).T) * d_qscale[None, :]
+    qerr = radius * d_qscale[None, :] * \
+        jnp.linalg.norm(users, axis=-1, keepdims=True)
+    return qips, qerr
+
+
 @functools.partial(jax.jit, static_argnames=("k", "n_cand", "scan"))
 def kmips_topk(index: SAALSHIndex, queries: jnp.ndarray, k: int,
                *, n_cand: int = 64, scan: str = "sketch"):

@@ -242,11 +242,13 @@ class QueryStats(NamedTuple):
     n_scan: jnp.ndarray          # users that needed the item scan
     tiles_scanned: jnp.ndarray   # total tile-visits across chunks
     chunks: jnp.ndarray
+    truncated: jnp.ndarray       # 1 iff a scan budget skipped lanes
 
 
 def _plan_one(index: SAHIndex, q: jnp.ndarray, k: int, tie_eps: float,
               delta_ip: jnp.ndarray | None = None,
-              delta_mask: jnp.ndarray | None = None):
+              delta_mask: jnp.ndarray | None = None,
+              delta_screen=None):
     """Lemmas 2-3 + dense tau + the O(1) decisions for ONE query.
 
     Shared verbatim by the per-query reference driver (``rkmips_impl``) and
@@ -262,6 +264,17 @@ def _plan_one(index: SAHIndex, q: jnp.ndarray, k: int, tie_eps: float,
     caller must hand an index view whose ``top_norms`` covers the staged
     rows (the "yes by norm" shortcut would otherwise fire against a stale,
     too-small k-th norm).
+
+    delta_screen (delta_items, qips, qerr) replaces the exact delta_ip with
+    the int8 screen (``sa_alsh.delta_screen_tables``): lanes whose
+    quantized inner product clears the threshold by more than the sound
+    error radius count without any f32 work, lanes that miss it by more
+    than the radius are skipped, and only the thin in-band remainder falls
+    back to the exact GEMM — the identical ``users @ delta_items.T``
+    expression, under a ``lax.cond`` so the zero-band case pays nothing.
+    Counts (hence predictions) stay bitwise equal to the f32 path; only
+    who computes them changes (the SS13 over-admission argument, applied
+    to the strict-count comparison instead of a top-k band).
 
     Returns (tau, count0, pred0, undecided, eps, block_alive, user_alive,
     no_lb, yes_norm), all in cone-leaf order.
@@ -292,7 +305,22 @@ def _plan_one(index: SAHIndex, q: jnp.ndarray, k: int, tie_eps: float,
     yes_norm = tau >= index.top_norms[k - 1]
     undecided = user_alive & ~no_lb & ~yes_norm
     count0 = _simpfer.init_count(index.user_lb, tau + eps)
-    if delta_ip is not None:
+    if delta_screen is not None:
+        d_items, qips, qerr = delta_screen
+        thr = (tau + eps)[:, None]
+        live = delta_mask[None, :]
+        sure = live & (qips - qerr > thr)
+        band = live & ~sure & (qips + qerr > thr)
+
+        def exact_band():
+            dip = index.users @ d_items.T
+            return jnp.sum(band & (dip > thr), axis=-1).astype(jnp.int32)
+
+        band_n = jax.lax.cond(
+            jnp.any(band), exact_band,
+            lambda: jnp.zeros((m_pad,), jnp.int32))
+        count0 = count0 + jnp.sum(sure, axis=-1).astype(jnp.int32) + band_n
+    elif delta_ip is not None:
         count0 = count0 + jnp.sum(
             delta_mask[None, :] & (delta_ip > (tau + eps)[:, None]),
             axis=-1).astype(jnp.int32)
@@ -305,7 +333,9 @@ def rkmips_impl(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
                 scan: str = "sketch", chunk: int = 256,
                 tie_eps: float = 0.0, scan_precision: str = "f32",
                 delta_items: jnp.ndarray | None = None,
-                delta_mask: jnp.ndarray | None = None):
+                delta_mask: jnp.ndarray | None = None,
+                delta_qitems: jnp.ndarray | None = None,
+                delta_qscale: jnp.ndarray | None = None):
     """Algorithm 5 for one query, undecorated: the per-query REFERENCE
     driver. Returns (pred (m_pad,), QueryStats).
 
@@ -313,7 +343,10 @@ def rkmips_impl(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
     tie_eps: relative tie tolerance, must match the oracle (core/exact.py).
     delta_items (cap, d) / delta_mask (cap,): optional staged-insert buffer
     counted exactly into every lane (see ``_plan_one``; the engine's
-    artifact lifecycle is the caller). Call ``rkmips`` (the jitted alias)
+    artifact lifecycle is the caller). delta_qitems/delta_qscale: the
+    buffer's persisted int8 twin — consumed (as the SS13 screen) only when
+    ``scan_precision == "int8"``, ignored otherwise, and never changes the
+    counts either way. Call ``rkmips`` (the jitted alias)
     directly. Production batches go through the plan/execute pipeline
     (``rkmips_batch``), which is bitwise equal to this driver query for
     query; this one survives as the oracle the batched path's equivalence
@@ -321,10 +354,19 @@ def rkmips_impl(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
     """
     m_pad = index.n_users
     chunk = min(chunk, m_pad)
-    delta_ip = None if delta_items is None else index.users @ delta_items.T
+    if scan_precision != "int8":
+        delta_qitems = delta_qscale = None
+    delta_ip = None
+    delta_screen = None
+    if delta_items is not None and delta_qitems is not None:
+        qips, qerr = _alsh.delta_screen_tables(index.users, delta_qitems,
+                                               delta_qscale)
+        delta_screen = (delta_items, qips, qerr)
+    elif delta_items is not None:
+        delta_ip = index.users @ delta_items.T
     (tau, count0, pred0, undecided, eps, block_alive, user_alive,
      no_lb, yes_norm) = _plan_one(index, q, k, tie_eps, delta_ip,
-                                  delta_mask)
+                                  delta_mask, delta_screen)
 
     # --- compact survivors (cone order preserved) and scan in chunks ------
     und_ids = jnp.argsort(~undecided)                     # undecided first
@@ -366,6 +408,7 @@ def rkmips_impl(index: SAHIndex, q: jnp.ndarray, k: int, *, n_cand: int = 64,
         n_scan=n_und,
         tiles_scanned=tiles,
         chunks=n_chunks,
+        truncated=jnp.asarray(0, jnp.int32),
     )
     return pred, stats
 
@@ -413,7 +456,9 @@ class RkMIPSPlan(NamedTuple):
 def rkmips_plan_impl(index: SAHIndex, queries: jnp.ndarray, k: int, *,
                      tie_eps: float = 0.0,
                      delta_items: jnp.ndarray | None = None,
-                     delta_mask: jnp.ndarray | None = None) -> RkMIPSPlan:
+                     delta_mask: jnp.ndarray | None = None,
+                     delta_qitems: jnp.ndarray | None = None,
+                     delta_qscale: jnp.ndarray | None = None) -> RkMIPSPlan:
     """Phase 1 (plan): Lemmas 2-3, dense tau, O(1) decisions for the whole
     (nq, m_pad) grid, then compaction into one flat cross-query work queue.
 
@@ -429,18 +474,32 @@ def rkmips_plan_impl(index: SAHIndex, queries: jnp.ndarray, k: int, *,
     inner products are query-independent, so they are computed ONCE here —
     outside the per-query lax.map — and every query's plan reads the same
     values the per-query reference driver computes (bitwise).
+
+    delta_qitems/delta_qscale: the buffer's persisted int8 twin. When
+    present, the query-independent screen tables
+    (``sa_alsh.delta_screen_tables``) replace the exact delta GEMM, and
+    each query's plan falls back to f32 only for its in-band lanes (see
+    ``_plan_one``) — counts stay bitwise equal. The batch driver forwards
+    them only under ``scan_precision == "int8"``.
     """
     if queries.shape[0] * index.n_users >= 2 ** 31:
         raise ValueError(
             f"batch too large for the int32 flat work queue: nq * m_pad = "
             f"{queries.shape[0]} * {index.n_users} >= 2**31; split the "
             f"query batch")
-    delta_ip = None if delta_items is None else index.users @ delta_items.T
+    delta_ip = None
+    delta_screen = None
+    if delta_items is not None and delta_qitems is not None:
+        qips, qerr = _alsh.delta_screen_tables(index.users, delta_qitems,
+                                               delta_qscale)
+        delta_screen = (delta_items, qips, qerr)
+    elif delta_items is not None:
+        delta_ip = index.users @ delta_items.T
 
     def one(q):
         (tau, count0, pred0, undecided, eps, block_alive, user_alive,
          no_lb, yes_norm) = _plan_one(index, q, k, tie_eps, delta_ip,
-                                      delta_mask)
+                                      delta_mask, delta_screen)
         return (tau, count0, pred0, undecided, eps,
                 jnp.sum(block_alive), jnp.sum(user_alive),
                 jnp.sum(no_lb & index.user_mask),
@@ -466,7 +525,8 @@ rkmips_plan = functools.partial(
 
 def rkmips_execute_impl(index: SAHIndex, plan: RkMIPSPlan, k: int, *,
                         n_cand: int = 64, scan: str = "sketch",
-                        chunk: int = 256, scan_precision: str = "f32"):
+                        chunk: int = 256, scan_precision: str = "f32",
+                        scan_budget=0):
     """Phase 2 (execute): ONE while_loop over fixed-size, possibly
     mixed-query chunks of the flat work queue. Returns
     (pred (nq, m_pad) bool, QueryStats with (nq,) counters).
@@ -484,24 +544,44 @@ def rkmips_execute_impl(index: SAHIndex, plan: RkMIPSPlan, k: int, *,
     reproduces the per-query driver's numbers exactly; for mixed-query
     chunks they are packing diagnostics (tile visits are shared by
     co-resident lanes), unlike the plan-time counters, which are exact.
+
+    ``scan_budget`` (a TRACED int32 scalar — different budget values share
+    one executable) is the execution-only per-query cap that bounds
+    adversarial queries (DESIGN.md SS15): once a query's charged
+    tile-visits reach the budget, its remaining lanes are masked out of
+    every later chunk — they keep their conservative plan-time decision
+    (``pred0``, i.e. "not in the audience") and the query's ``truncated``
+    stat is set, never silently wrong. The check runs between chunks, so a
+    query may overshoot its budget by at most one chunk's tile walk; lanes
+    already decided stay decided, and co-batched queries that are still
+    under budget keep scanning (one pathological query can no longer force
+    the deep tile walks of every chunk it rides in). ``scan_budget <= 0``
+    disables the cap: that path is bitwise identical to the pre-budget
+    pipeline, and any query the budget never bites keeps bitwise-identical
+    predictions under either setting.
     """
     nq, m_pad = plan.tau.shape
     chunk = min(chunk, nq * m_pad)
     tau_f = plan.tau.reshape(-1)
     count_f = plan.count0.reshape(-1)
+    budget = jnp.asarray(scan_budget, jnp.int32)
 
     def cond(state):
-        ci, _, _, _ = state
+        ci, _, _, _, _ = state
         return (ci * chunk) < plan.n_work
 
     def body(state):
-        ci, pred, tiles_q, chunks_q = state
+        ci, pred, tiles_q, chunks_q, trunc_q = state
         # Clamped start, for the same almost-full-queue tail case as the
         # per-query driver (see rkmips_impl).
         start = jnp.minimum(ci * chunk, nq * m_pad - chunk)
         ids = jax.lax.dynamic_slice(plan.queue, (start,), (chunk,))
-        active = (start + jnp.arange(chunk)) < plan.n_work
+        in_work = (start + jnp.arange(chunk)) < plan.n_work
         qid = ids // m_pad
+        # Budget gate: lanes of an exhausted query leave the chunk before
+        # the scan, so they stop forcing tile depth on their neighbours.
+        over = (budget > 0) & (jnp.take(tiles_q, qid) >= budget)
+        active = in_work & ~over
         users_c = jnp.take(index.users, ids % m_pad, axis=0)
         taus_c = jnp.take(tau_f, ids)
         counts_c = jnp.take(count_f, ids)
@@ -514,12 +594,13 @@ def rkmips_execute_impl(index: SAHIndex, plan: RkMIPSPlan, k: int, *,
         present = jnp.zeros((nq,), bool).at[qid].max(active)
         tiles_q = tiles_q + jnp.where(present, t_vis, 0)
         chunks_q = chunks_q + present.astype(jnp.int32)
-        return ci + 1, pred, tiles_q, chunks_q
+        trunc_q = trunc_q.at[qid].max(in_work & over)
+        return ci + 1, pred, tiles_q, chunks_q, trunc_q
 
     zeros_q = jnp.zeros((nq,), jnp.int32)
-    _, pred, tiles_q, chunks_q = jax.lax.while_loop(
+    _, pred, tiles_q, chunks_q, trunc_q = jax.lax.while_loop(
         cond, body, (jnp.asarray(0, jnp.int32), plan.pred0.reshape(-1),
-                     zeros_q, zeros_q))
+                     zeros_q, zeros_q, jnp.zeros((nq,), bool)))
 
     stats = QueryStats(
         blocks_alive=plan.blocks_alive,
@@ -529,6 +610,7 @@ def rkmips_execute_impl(index: SAHIndex, plan: RkMIPSPlan, k: int, *,
         n_scan=plan.n_scan,
         tiles_scanned=tiles_q,
         chunks=chunks_q,
+        truncated=trunc_q.astype(jnp.int32),
     )
     return pred.reshape(nq, m_pad), stats
 
@@ -544,7 +626,10 @@ def rkmips_batch_impl(index: SAHIndex, queries: jnp.ndarray, k: int, *,
                       chunk: int = 256, tie_eps: float = 0.0,
                       scan_precision: str = "f32",
                       delta_items: jnp.ndarray | None = None,
-                      delta_mask: jnp.ndarray | None = None):
+                      delta_mask: jnp.ndarray | None = None,
+                      delta_qitems: jnp.ndarray | None = None,
+                      delta_qscale: jnp.ndarray | None = None,
+                      scan_budget=0):
     """Batched Algorithm 5, undecorated: plan + execute (DESIGN.md SS9).
 
     (nq, d) queries -> (pred (nq, m_pad), QueryStats with (nq,) counters).
@@ -552,17 +637,27 @@ def rkmips_batch_impl(index: SAHIndex, queries: jnp.ndarray, k: int, *,
     the plan-time counters; tiles/chunks are packing diagnostics). An
     optional staged-insert delta buffer (delta_items/delta_mask, see
     ``_plan_one``) threads through the plan; its static capacity keeps the
-    trace count flat however often the corpus churns. Call ``rkmips_batch``
+    trace count flat however often the corpus churns, and under
+    ``scan_precision == "int8"`` its persisted quantized twin
+    (delta_qitems/delta_qscale) turns the delta counting into the SS13
+    screen (bitwise-equal counts, f32 only for in-band lanes).
+    ``scan_budget`` is the traced execution-only per-query tile cap (see
+    ``rkmips_execute_impl``; 0 = uncapped). Call ``rkmips_batch``
     (the jitted alias) directly; the impl exists so
     ``repro.engine.sharding`` can trace the raw body under ``shard_map`` --
     one flat while_loop, no nested jit and no scan-of-while, which is what
     retires the jax 0.4.x per-query unroll workaround (the plan's lax.map
     contains only dense per-query math and is shard_map-safe).
     """
+    if scan_precision != "int8":
+        delta_qitems = delta_qscale = None
     plan = rkmips_plan_impl(index, queries, k, tie_eps=tie_eps,
-                            delta_items=delta_items, delta_mask=delta_mask)
+                            delta_items=delta_items, delta_mask=delta_mask,
+                            delta_qitems=delta_qitems,
+                            delta_qscale=delta_qscale)
     return rkmips_execute_impl(index, plan, k, n_cand=n_cand, scan=scan,
-                               chunk=chunk, scan_precision=scan_precision)
+                               chunk=chunk, scan_precision=scan_precision,
+                               scan_budget=scan_budget)
 
 
 @functools.partial(
@@ -572,14 +667,22 @@ def rkmips_batch(index: SAHIndex, queries: jnp.ndarray, k: int, *,
                  n_cand: int = 64, scan: str = "sketch", chunk: int = 256,
                  tie_eps: float = 0.0, scan_precision: str = "f32",
                  delta_items: jnp.ndarray | None = None,
-                 delta_mask: jnp.ndarray | None = None):
+                 delta_mask: jnp.ndarray | None = None,
+                 delta_qitems: jnp.ndarray | None = None,
+                 delta_qscale: jnp.ndarray | None = None,
+                 scan_budget=0):
     """Jitted batched Algorithm 5 — see ``rkmips_batch_impl``. (A wrapper
     rather than a jit alias so the impl binds late: the compile-count tests
-    wrap it to prove one body invocation per trace.)"""
+    wrap it to prove one body invocation per trace. ``scan_budget`` is
+    deliberately traced, not static: per-tenant budgets share one
+    executable.)"""
     return rkmips_batch_impl(index, queries, k, n_cand=n_cand, scan=scan,
                              chunk=chunk, tie_eps=tie_eps,
                              scan_precision=scan_precision,
-                             delta_items=delta_items, delta_mask=delta_mask)
+                             delta_items=delta_items, delta_mask=delta_mask,
+                             delta_qitems=delta_qitems,
+                             delta_qscale=delta_qscale,
+                             scan_budget=scan_budget)
 
 
 def rkmips_batch_mapped(index: SAHIndex, queries: jnp.ndarray, k: int, *,
@@ -587,17 +690,22 @@ def rkmips_batch_mapped(index: SAHIndex, queries: jnp.ndarray, k: int, *,
                         chunk: int = 256, tie_eps: float = 0.0,
                         scan_precision: str = "f32",
                         delta_items: jnp.ndarray | None = None,
-                        delta_mask: jnp.ndarray | None = None):
+                        delta_mask: jnp.ndarray | None = None,
+                        delta_qitems: jnp.ndarray | None = None,
+                        delta_qscale: jnp.ndarray | None = None):
     """The legacy batch driver: ``lax.map`` of independent per-query
     ``rkmips`` while-loops. Superseded by the flat-queue ``rkmips_batch``
     (a fast query's lanes no longer pad out their own chunk grid while a
     slow query scans); retained as the second reference for equivalence
     tests and as the baseline ``benchmarks/bench_rkmips.py`` reports
-    batched-vs-mapped wall time against."""
+    batched-vs-mapped wall time against. Always unbudgeted (it is the
+    oracle the budget's conservative truncation is judged against)."""
     fn = functools.partial(rkmips, index, k=k, n_cand=n_cand, scan=scan,
                            chunk=chunk, tie_eps=tie_eps,
                            scan_precision=scan_precision,
-                           delta_items=delta_items, delta_mask=delta_mask)
+                           delta_items=delta_items, delta_mask=delta_mask,
+                           delta_qitems=delta_qitems,
+                           delta_qscale=delta_qscale)
     return jax.lax.map(lambda q: fn(q), queries)
 
 

@@ -35,6 +35,15 @@ This package is the only public way to run (R)kMIPS (DESIGN.md SS7):
     the next ``IndexArtifact`` version in between flushes
     (``reconcile_compaction``), with ``drain``/``close`` semantics and
     per-ticket deadlines;
+  * the **multi-tenant gateway** (engine/gateway.py, DESIGN.md SS15) —
+    ``ServingGateway`` hosts N tenants, each a name bound to an artifact
+    fingerprint plus a ``TenantPolicy`` (max k, max in-flight, per-ticket
+    scan budget, default deadline), dispatching through per-tenant
+    runtimes that share one ``WorkerPool`` and one compiled-trace cache
+    (``share_dispatch``): identical signatures never re-trace across
+    tenants, budget-truncated answers are flagged (``truncated=True`` +
+    funnel snapshot), and ``gateway.stats()`` attributes counters per
+    tenant;
   * ``serving_codes`` — deprecated shim over
     ``IndexArtifact.serving_codes`` (the offline sketch build behind
     ``launch/serve.py::build_candidate_index``).
@@ -52,8 +61,9 @@ from repro.engine.config import (EngineConfig, PAPER_BASELINES, TIE_EPS_DEFAULT,
                                  register)
 from repro.engine.engine import (KMIPSResult, PruningFunnel, QueryResult,
                                  RkMIPSEngine, serving_codes)
+from repro.engine.gateway import (GatewayStats, ServingGateway, TenantPolicy)
 from repro.engine.runtime import (RuntimeStats, ServeTicket, ServingRuntime,
-                                  TicketExpired)
+                                  TicketExpired, WorkerPool)
 from repro.engine.serving import (RetrievalServer, ReverseResult,
                                   ReverseServer, ServeResult, ServingCache,
                                   ServingState, build_serving_state,
@@ -62,6 +72,7 @@ from repro.engine.serving import (RetrievalServer, ReverseResult,
 __all__ = [
     "BuildTimings",
     "EngineConfig",
+    "GatewayStats",
     "IndexArtifact",
     "KMIPSResult",
     "PAPER_BASELINES",
@@ -75,10 +86,13 @@ __all__ = [
     "ServeResult",
     "ServeTicket",
     "ServingCache",
+    "ServingGateway",
     "ServingRuntime",
     "ServingState",
     "TIE_EPS_DEFAULT",
+    "TenantPolicy",
     "TicketExpired",
+    "WorkerPool",
     "build_sah_index",
     "build_serving_state",
     "corpus_fingerprint",

@@ -162,10 +162,11 @@ class IndexArtifact:
         # Staged rows quantized at insert (every insert evolves a new
         # artifact through here). Per-row scales -- partitions are a
         # compacted-index notion; dead slots quantize to zeros/scale 0.
-        # Persisted with the version and consumed by the forward-serving
-        # int8 delta screen (``kmips_delta_quantized`` ->
-        # ``sa_alsh.merge_delta_topk``); the reverse execute phase still
-        # scans deltas in f32 (DESIGN.md SS13 leftover).
+        # Persisted with the version and consumed by both int8 delta
+        # screens: forward serving (``kmips_delta_quantized`` ->
+        # ``sa_alsh.merge_delta_topk``) and the reverse plan's staged-row
+        # count (``sa_alsh.delta_screen_tables`` -> ``sah._plan_one``),
+        # closing the DESIGN.md SS13 remainder.
         self.delta_qitems, self.delta_qscale = \
             _alsh.quantize_rows(delta_items)
         # Transient diagnostics of the build that made this version (a
@@ -293,13 +294,15 @@ class IndexArtifact:
         if self._fingerprint is None:
             if self._base_fp is None:
                 b = hashlib.sha256(f"{_KIND}-v{_FORMAT}".encode())
-                # build_sharding and scan_precision are execution-only:
-                # the built content (DESIGN.md SS11) and the predictions
-                # (SS13) are bitwise identical either way, so a sharded
-                # build or an int8-scanning config must fingerprint-match
-                # the defaults
+                # build_sharding, scan_precision and scan_budget are
+                # execution-only: the built content (DESIGN.md SS11) is
+                # bitwise identical either way (a budget changes answers
+                # but flags them per ticket, never the build), so a
+                # sharded build, an int8-scanning config or a budgeted
+                # tenant must fingerprint-match the defaults
                 cfg = self.config.replace(build_sharding="auto",
-                                          scan_precision="f32")
+                                          scan_precision="f32",
+                                          scan_budget=0)
                 b.update(repr(dataclasses.astuple(cfg)).encode())
                 b.update(_array_bytes(self.key))
                 b.update(_array_bytes(self.items))

@@ -66,6 +66,18 @@ class EngineConfig:
                bitwise identical either way, so — like ``build_sharding``
                — it is excluded from the artifact fingerprint and from
                ``attach`` config equality, and the plan phase ignores it.
+      scan_budget: per-query tile-visit cap for the reverse execute phase
+               (0 = uncapped, the default). The serving gateway's defence
+               against adversarial queries crafted to defeat SRP-code
+               pruning (DESIGN.md SS15): once a query's charged
+               tile-visits reach the budget, its remaining lanes resolve
+               conservatively ("not in the audience") and the result is
+               flagged ``truncated`` — never silently wrong. Execution-
+               only like ``scan_precision`` (excluded from fingerprints
+               and ``attach`` equality), and deliberately NOT part of
+               ``query_kwargs()``: the engine threads it as a *traced*
+               int32 operand so tenants with different budgets share one
+               compiled trace.
 
     Online-serving knobs (engine/serving.py, DESIGN.md SS8, SS14):
       serve_batch_size:     micro-batch size the RetrievalServer pads
@@ -128,6 +140,7 @@ class EngineConfig:
     delta_capacity: int = 256
     build_sharding: str = "auto"
     scan_precision: str = "f32"
+    scan_budget: int = 0
 
     def __post_init__(self):
         if self.build_sharding not in _BUILD_SHARDINGS:
@@ -154,6 +167,9 @@ class EngineConfig:
             if getattr(self, name) < 1:
                 raise ValueError(f"{name} must be >= 1, "
                                  f"got {getattr(self, name)}")
+        if self.scan_budget < 0:
+            raise ValueError(f"scan_budget must be >= 0 (0 = uncapped), "
+                             f"got {self.scan_budget}")
         if self.n_top is not None and self.n_top < self.k_max:
             raise ValueError(f"n_top ({self.n_top}) must be >= k_max "
                              f"({self.k_max})")

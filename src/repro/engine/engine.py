@@ -82,16 +82,20 @@ class PruningFunnel(NamedTuple):
     scan_lanes: int
     tiles_scanned: int
     chunks: int
+    truncated: int = 0          # queries the scan budget cut short (SS15)
 
     def format(self) -> str:
         """One human-readable funnel line (examples/quickstart.py)."""
+        tail = (f" ({self.truncated} budget-truncated)"
+                if self.truncated else "")
         return (f"{self.queries} queries: "
                 f"blocks {self.blocks_alive}/{self.blocks_total} alive -> "
                 f"users {self.users_alive}/{self.users_total} alive -> "
                 f"scan lanes {self.scan_lanes} "
                 f"(no-by-bound {self.decided_no_lb}, "
                 f"yes-by-norm {self.decided_yes_norm}) -> "
-                f"{self.tiles_scanned} tile-visits in {self.chunks} chunks")
+                f"{self.tiles_scanned} tile-visits in {self.chunks} chunks"
+                f"{tail}")
 
 
 class QueryResult(NamedTuple):
@@ -121,19 +125,40 @@ class KMIPSResult(NamedTuple):
     k: int
 
 
+class _TraceCount:
+    """Mutable compile counter, shared by every engine/server adopting one
+    dispatch (``share_dispatch``): the trace fires inside the *owner's*
+    closure, so sharers must read the owner's count, not a private zero."""
+
+    __slots__ = ("n",)
+
+    def __init__(self):
+        self.n = 0
+
+
 class RkMIPSEngine:
     """Config-driven, mesh-aware engine for RkMIPS and kMIPS.
 
     config: an ``EngineConfig`` or a registry name ("sah", "simpfer", ...).
     policy: sharding policy; ``NO_SHARDING`` (default) is single-device,
             a mesh policy shards users/items over every mesh axis.
+    share_dispatch: another ``RkMIPSEngine`` whose compiled reverse
+            dispatch (jitted callables + trace counter) this engine adopts
+            instead of building its own — the multi-tenant trace-sharing
+            seam (DESIGN.md SS15): tenants whose configs agree on every
+            query knob (``scan_budget``, an execution-only traced operand,
+            may differ) and whose artifacts share shapes then share one
+            executable cache, so the second tenant's warmup adds zero
+            traces. Requires config equality up to ``scan_budget`` and the
+            same mesh.
 
     The engine serves whatever ``IndexArtifact`` version is currently
     attached (``self.artifact``); ``build()`` both makes and attaches one.
     """
 
     def __init__(self, config: EngineConfig | str = "sah", *,
-                 policy: ShardingPolicy = NO_SHARDING):
+                 policy: ShardingPolicy = NO_SHARDING,
+                 share_dispatch: "RkMIPSEngine | None" = None):
         if isinstance(config, str):
             config = get_config(config)
         if not isinstance(config, EngineConfig):
@@ -144,36 +169,30 @@ class RkMIPSEngine:
         self.build_seconds: float | None = None
         self.artifact: _artifact.IndexArtifact | None = None
         self._index: _sah.SAHIndex | None = None
-        self._delta: tuple = (None, None)
+        self._delta: tuple = (None, None, None, None)
         self._items: jnp.ndarray | None = None
         self._users_unit: jnp.ndarray | None = None
         self._key: jax.Array | None = None
         self.n_users: int | None = None
-        # Every reverse query routes through one dispatch of the batched
-        # plan/execute pipeline (sharded or not). rkmips_compile_count
-        # counts compiles, not calls: exactly one per distinct (batch
-        # shape, k) — batch size is a pure throughput knob (pinned by
-        # tests/test_batched.py), and an attached delta buffer adds
-        # exactly one more signature (its capacity is static, so corpus
-        # churn never retraces). Single-device the counter increments at
-        # jit trace time (ground truth); under a mesh the shard_map must
-        # dispatch eagerly — an *outer* jit staged around it re-triggers
-        # the jax 0.4.x while-driver miscompile (wrong predictions, caught
-        # by the sharded-equivalence test) — so there the counter keys on
-        # distinct dispatch signatures, which is exactly how the XLA
-        # executable cache keys its compiles.
-        self.rkmips_compile_count = 0
+        # The per-query scan budget rides every dispatch as a TRACED int32
+        # operand (never a static): engines differing only in budget hit
+        # the same executable.
+        self._budget = jnp.asarray(config.scan_budget, jnp.int32)
         self.rkmips_mapped_compile_count = 0
-        self._rkmips_seen: set = set()
 
-        def _rkmips(index, queries, d_items, d_mask, *, k):
-            self.rkmips_compile_count += 1
+        def _rkmips(index, queries, d_items, d_mask, d_qitems, d_qscale,
+                    budget, *, k):
+            self._traces.n += 1
             return _sharding.rkmips_batch(index, queries, k, self.policy,
                                           delta_items=d_items,
                                           delta_mask=d_mask,
+                                          delta_qitems=d_qitems,
+                                          delta_qscale=d_qscale,
+                                          scan_budget=budget,
                                           **self.config.query_kwargs())
 
-        def _rkmips_eager(index, queries, d_items, d_mask, *, k):
+        def _rkmips_eager(index, queries, d_items, d_mask, d_qitems,
+                          d_qscale, budget, *, k):
             # Key on everything the executable cache keys on: the index
             # leaves' shapes too, so a rebuild with new sizes counts its
             # recompile instead of hiding behind an old query signature.
@@ -184,25 +203,76 @@ class RkMIPSEngine:
                          for l in jax.tree.leaves(index)))
             if sig not in self._rkmips_seen:
                 self._rkmips_seen.add(sig)
-                self.rkmips_compile_count += 1
+                self._traces.n += 1
             return _sharding.rkmips_batch(index, queries, k, self.policy,
                                           delta_items=d_items,
                                           delta_mask=d_mask,
+                                          delta_qitems=d_qitems,
+                                          delta_qscale=d_qscale,
+                                          scan_budget=budget,
                                           **self.config.query_kwargs())
 
-        def _rkmips_mapped(index, queries, d_items, d_mask, *, k):
+        def _rkmips_mapped(index, queries, d_items, d_mask, d_qitems,
+                           d_qscale, *, k):
             self.rkmips_mapped_compile_count += 1
             return _sah.rkmips_batch_mapped(index, queries, k,
                                             delta_items=d_items,
                                             delta_mask=d_mask,
+                                            delta_qitems=d_qitems,
+                                            delta_qscale=d_qscale,
                                             **self.config.query_kwargs())
 
-        if policy.mesh is None:
-            self._rkmips_dispatch = jax.jit(_rkmips, static_argnames=("k",))
+        if share_dispatch is not None:
+            donor = share_dispatch
+            if not isinstance(donor, RkMIPSEngine):
+                raise TypeError(f"share_dispatch expects an RkMIPSEngine, "
+                                f"got {type(donor).__name__}")
+            # Everything but the budget must agree: the adopted closure
+            # reads the DONOR's query_kwargs() at trace time, so any other
+            # difference would silently serve the donor's knobs.
+            if donor.config.replace(
+                    scan_budget=config.scan_budget) != config:
+                raise ValueError(
+                    "share_dispatch requires configs equal in every field "
+                    "except scan_budget (the budget is a traced operand; "
+                    "all other query knobs bake into the shared trace)")
+            if donor.policy.mesh is not policy.mesh:
+                raise ValueError("share_dispatch requires the same "
+                                 "sharding policy mesh")
+            self._traces = donor._traces
+            self._rkmips_seen = donor._rkmips_seen
+            self._rkmips_dispatch = donor._rkmips_dispatch
         else:
-            self._rkmips_dispatch = _rkmips_eager
+            # Every reverse query routes through one dispatch of the
+            # batched plan/execute pipeline (sharded or not).
+            # rkmips_compile_count counts compiles, not calls: exactly one
+            # per distinct (batch shape, k) — batch size is a pure
+            # throughput knob (pinned by tests/test_batched.py), and an
+            # attached delta buffer adds exactly one more signature (its
+            # capacity is static, so corpus churn never retraces).
+            # Single-device the counter increments at jit trace time
+            # (ground truth); under a mesh the shard_map must dispatch
+            # eagerly — an *outer* jit staged around it re-triggers the
+            # jax 0.4.x while-driver miscompile (wrong predictions, caught
+            # by the sharded-equivalence test) — so there the counter keys
+            # on distinct dispatch signatures, which is exactly how the
+            # XLA executable cache keys its compiles.
+            self._traces = _TraceCount()
+            self._rkmips_seen: set = set()
+            if policy.mesh is None:
+                self._rkmips_dispatch = jax.jit(_rkmips,
+                                                static_argnames=("k",))
+            else:
+                self._rkmips_dispatch = _rkmips_eager
         self._rkmips_mapped_dispatch = jax.jit(_rkmips_mapped,
                                                static_argnames=("k",))
+
+    @property
+    def rkmips_compile_count(self) -> int:
+        """Reverse-dispatch traces so far — shared with every engine in
+        this engine's ``share_dispatch`` group (the trace happens in one
+        closure, whoever triggered it)."""
+        return self._traces.n
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -255,15 +325,17 @@ class RkMIPSEngine:
         if not isinstance(artifact, _artifact.IndexArtifact):
             raise TypeError(f"attach expects an IndexArtifact, got "
                             f"{type(artifact).__name__}")
-        # delta_capacity, build_sharding and scan_precision are lifecycle/
-        # execution knobs, not build/query recipe fields (engine/config.py):
-        # the artifact's own buffer governs, the built content is sharding-
-        # independent, and both scan precisions predict bitwise alike, so
-        # configs differing only there are interchangeable here
+        # delta_capacity, build_sharding, scan_precision and scan_budget
+        # are lifecycle/execution knobs, not build/query recipe fields
+        # (engine/config.py): the artifact's own buffer governs, the built
+        # content is sharding-independent, both scan precisions predict
+        # bitwise alike, and the budget only caps execution, so configs
+        # differing only there are interchangeable here
         if artifact.config.replace(
                 delta_capacity=self.config.delta_capacity,
                 build_sharding=self.config.build_sharding,
-                scan_precision=self.config.scan_precision) != self.config:
+                scan_precision=self.config.scan_precision,
+                scan_budget=self.config.scan_budget) != self.config:
             raise ValueError(
                 "artifact config does not match this engine's config; use "
                 "RkMIPSEngine.from_artifact(artifact) (or rebuild the "
@@ -277,13 +349,16 @@ class RkMIPSEngine:
         if artifact.users is None:
             # no user-side index, but live staged inserts still ride the
             # forward merge (kmips); query_view can't be asked here
-            self._delta = artifact.kmips_delta()
+            self._delta = artifact.kmips_delta_quantized()
             jax.block_until_ready(artifact.ensure_kmips_index().codes)
             return self
         # query_view owns the delta-liveness rule: the buffer it returns is
-        # exactly the one its adjusted top_norms covers (stale-norm safety)
+        # exactly the one its adjusted top_norms covers (stale-norm safety);
+        # the persisted int8 twin rides along for the SS13 reverse screen
         view, d_items, d_mask = artifact.query_view()
-        self._delta = (d_items, d_mask)
+        self._delta = ((None, None, None, None) if d_items is None else
+                       (d_items, d_mask, artifact.delta_qitems,
+                        artifact.delta_qscale))
         if self.policy.mesh is not None:
             view = _sharding.shard_index(view, self.policy)
         jax.block_until_ready(view.users)
@@ -348,7 +423,8 @@ class RkMIPSEngine:
             decided_yes_norm=tot(stats.n_yes_norm),
             scan_lanes=tot(stats.n_scan),
             tiles_scanned=tot(stats.tiles_scanned),
-            chunks=tot(stats.chunks))
+            chunks=tot(stats.chunks),
+            truncated=int((np.asarray(stats.truncated) > 0).sum()))
 
     def query(self, q: jnp.ndarray, k: int) -> QueryResult:
         """RkMIPS for one query (d,): which users have q in their top-k.
@@ -363,7 +439,7 @@ class RkMIPSEngine:
         self._check_k(k)
         t0 = time.perf_counter()
         pred, stats = self._rkmips_dispatch(index, q[None], *self._delta,
-                                            k=k)
+                                            self._budget, k=k)
         pred = pred[0]
         stats = jax.tree.map(lambda s: s[0], stats)
         po = _sah.predictions_to_original(index, pred, self.n_users)
@@ -386,7 +462,7 @@ class RkMIPSEngine:
         self._check_k(k)
         t0 = time.perf_counter()
         pred, stats = self._rkmips_dispatch(index, queries, *self._delta,
-                                            k=k)
+                                            self._budget, k=k)
         po = _sah.predictions_to_original(index, pred, self.n_users)
         jax.block_until_ready(po)
         return QueryResult(po, stats, time.perf_counter() - t0, k,
@@ -437,25 +513,27 @@ class RkMIPSEngine:
                        else tuple(batch_sizes))
         # warm the live delta signature — and, when the buffer is empty
         # but artifact-backed, the buffer-array signature too: the first
-        # post-warmup insert flips self._delta from (None, None) to the
-        # fixed-capacity arrays, and that flip must not trace
+        # post-warmup insert flips self._delta from all-None to the
+        # fixed-capacity arrays (plus their int8 twin), and that flip must
+        # not trace
         deltas = [self._delta]
         if self.artifact is not None and self._delta[0] is None:
             deltas.append((self.artifact.delta_items,
-                           self.artifact.delta_mask))
+                           self.artifact.delta_mask,
+                           self.artifact.delta_qitems,
+                           self.artifact.delta_qscale))
         cells = 0
         for b in batch_sizes:
             qs = jnp.zeros((b, d), index.users.dtype)
             for k in tuple(ks):
                 self._check_k(k)
-                for d_items, d_mask in deltas:
+                for delta in deltas:
                     if self.policy.mesh is None:
                         self._rkmips_dispatch.lower(
-                            index, qs, d_items, d_mask, k=k).compile()
+                            index, qs, *delta, self._budget, k=k).compile()
                     else:
-                        pred, _ = self._rkmips_dispatch(index, qs,
-                                                        d_items, d_mask,
-                                                        k=k)
+                        pred, _ = self._rkmips_dispatch(index, qs, *delta,
+                                                        self._budget, k=k)
                         jax.block_until_ready(pred)
                     cells += 1
         return cells
@@ -494,7 +572,7 @@ class RkMIPSEngine:
                                                            index.tile),
                                                 scan=self.config.scan)
             tiles = int(tiles)
-        d_items, d_mask = self._delta
+        d_items, d_mask = self._delta[:2]
         if d_items is not None:
             vals, ids = _alsh.merge_delta_topk(
                 vals, ids, queries, d_items, d_mask, k, art.n_base,

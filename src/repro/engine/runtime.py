@@ -168,7 +168,13 @@ class RuntimeStats(NamedTuple):
     and ``traces_after_warmup`` is how many XLA traces the server's
     dispatch has cost since the warmup baseline (construction, or the
     last ``warmup()``) — a warmed runtime must hold it at 0, which CI
-    asserts via benchmarks/bench_load.py."""
+    asserts via benchmarks/bench_load.py.
+
+    ``truncated`` counts tickets whose answer a scan budget
+    (``EngineConfig.scan_budget``) resolved conservatively — the
+    per-ticket ``ReverseResult.truncated`` flag aggregated per runtime,
+    so budget pressure is attributable per tenant (DESIGN.md SS15),
+    never silent."""
 
     submitted: int
     completed: int
@@ -180,6 +186,106 @@ class RuntimeStats(NamedTuple):
     bucket_hits: int      # dispatches padded to a sub-max ladder rung
     bucket_pad_rows: int  # dead rows added by bucket padding
     traces_after_warmup: int  # server traces since the warmup baseline
+    truncated: int    # tickets answered under an exhausted scan budget
+
+
+class WorkerPool:
+    """Shared dispatch workers for many ``ServingRuntime``s (the gateway
+    tier, DESIGN.md SS15).
+
+    A runtime constructed with ``pool=`` starts no worker threads of its
+    own; instead the pool's threads round-robin over every registered
+    runtime, forming and dispatching micro-batches through each one's own
+    ``_try_next_batch`` / ``_dispatch_batch`` — the exact code path a
+    dedicated worker would take, so pooled answers are bitwise identical
+    to dedicated-runtime answers.
+
+    Non-stall contract: a pool thread takes a runtime's dispatch lock
+    with ``acquire(blocking=False)`` — if one tenant's lock is held (a
+    hot-swap, a compaction landing, another pool thread mid-flush), the
+    thread moves on to the next tenant instead of queueing behind it.
+    One tenant's maintenance can therefore never stall another tenant's
+    flushes (pinned by tests/test_gateway.py).
+    """
+
+    def __init__(self, workers: int = 1, *, poll_interval: float = 0.01):
+        if workers < 1:
+            raise ValueError(f"workers must be >= 1, got {workers}")
+        self._cond = threading.Condition()
+        self._members: list["ServingRuntime"] = []
+        self._rr = 0
+        self._stop = threading.Event()
+        self._threads = [
+            threading.Thread(target=self._run, name=f"pool-worker-{i}",
+                             daemon=True)
+            for i in range(workers)]
+        self._poll = poll_interval
+        for t in self._threads:
+            t.start()
+
+    def register(self, runtime: "ServingRuntime") -> None:
+        with self._cond:
+            if self._stop.is_set():
+                raise RuntimeError("worker pool is closed")
+            if runtime not in self._members:
+                self._members.append(runtime)
+            self._cond.notify_all()
+
+    def unregister(self, runtime: "ServingRuntime") -> None:
+        with self._cond:
+            if runtime in self._members:
+                self._members.remove(runtime)
+
+    def notify(self) -> None:
+        """Wake the pool: a member admitted tickets."""
+        with self._cond:
+            self._cond.notify_all()
+
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            with self._cond:
+                members = list(self._members)
+                start = self._rr
+                self._rr = (self._rr + 1) % max(1, len(members))
+            dispatched = False
+            for i in range(len(members)):
+                rt = members[(start + i) % len(members)]
+                # non-blocking: a busy/swapping tenant is skipped, not
+                # queued behind — the cross-tenant non-stall guarantee
+                if not rt._dispatch_lock.acquire(blocking=False):
+                    continue
+                try:
+                    batch = rt._try_next_batch()
+                    if batch is None:
+                        continue
+                    dispatched = True
+                    try:
+                        results, pad_to = rt._dispatch_batch(batch)
+                    except BaseException as e:  # noqa: BLE001 — to futures
+                        rt._completion.put((batch, None, e, None))
+                    else:
+                        rt._completion.put((batch, results, None, pad_to))
+                finally:
+                    rt._dispatch_lock.release()
+            if not dispatched:
+                with self._cond:
+                    self._cond.wait(self._poll)
+
+    def close(self) -> None:
+        """Stop the pool threads. Registered runtimes must be closed (or
+        re-homed) first — a pooled runtime with live tickets and no pool
+        would never dispatch them."""
+        self._stop.set()
+        with self._cond:
+            self._cond.notify_all()
+        for t in self._threads:
+            t.join(timeout=30)
+
+    def __enter__(self) -> "WorkerPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 class ServingRuntime:
@@ -226,6 +332,12 @@ class ServingRuntime:
                     just-saved version is always protected).
       poll_interval idle-thread wakeup period in seconds (responsiveness
                     of compaction-trigger checks and close()).
+      pool          a shared ``WorkerPool`` to dispatch through instead
+                    of starting dedicated worker threads (``workers`` is
+                    then ignored). The pool's threads run the same batch
+                    formation and dispatch path, so answers are bitwise
+                    identical; close() unregisters from the pool but
+                    leaves it running for its other members.
     """
 
     def __init__(self, server, *, k: int | None = None, workers: int = 1,
@@ -233,7 +345,8 @@ class ServingRuntime:
                  warmup: bool = False, warmup_ks=None,
                  compaction: bool = False, compact_fill: float = 0.5,
                  compact_policy=None, artifact_dir: str | None = None,
-                 keep: int | None = None, poll_interval: float = 0.05):
+                 keep: int | None = None, poll_interval: float = 0.05,
+                 pool: "WorkerPool | None" = None):
         if workers < 1:
             raise ValueError(f"workers must be >= 1, got {workers}")
         if not 0.0 < compact_fill <= 1.0:
@@ -282,6 +395,9 @@ class ServingRuntime:
         self._compactions = 0
         self._bucket_hits = 0
         self._bucket_pad_rows = 0
+        self._truncated = 0
+        self._pool = pool
+        self._linger_until: float | None = None   # pooled-linger deadline
         self.last_compaction_seconds: float | None = None
 
         # AOT warmup runs before any worker exists, so no ticket can race
@@ -298,7 +414,11 @@ class ServingRuntime:
             server.warmup(tuple(ks))
         self._trace_base = server.compile_count
 
-        self._threads = [
+        # Pooled mode (DESIGN.md SS15): the runtime starts no dispatch
+        # workers of its own — the shared WorkerPool's threads form and
+        # dispatch its batches. Completion and maintenance threads stay
+        # per-runtime (cheap, and their state is per-tenant anyway).
+        self._threads = [] if pool is not None else [
             threading.Thread(target=self._worker_loop,
                              name=f"serve-worker-{i}", daemon=True)
             for i in range(workers)]
@@ -317,6 +437,8 @@ class ServingRuntime:
             t.start()
         if self._compactor is not None:
             self._compactor.start()
+        if pool is not None:
+            pool.register(self)
 
     # -- admission ---------------------------------------------------------
 
@@ -358,6 +480,8 @@ class ServingRuntime:
             self._submitted += len(tickets)
             self._unfinished += len(tickets)
             self._admit.notify_all()
+        if self._pool is not None:
+            self._pool.notify()
         return tickets[0] if q.ndim == 1 else tickets
 
     # -- worker / completion loops -----------------------------------------
@@ -373,11 +497,33 @@ class ServingRuntime:
                else self.server.config)
         return cfg.bucket_ladder()
 
-    def _next_batch(self) -> list[ServeTicket] | None:
-        """The next micro-batch: the longest run of queue-head tickets
-        sharing one signature, up to ``serve_batch_size``. Expired tickets
-        are failed here, pre-dispatch. None = stopping and queue empty."""
+    def _form_batch(self) -> list[ServeTicket]:
+        """Pop the next signature run off the deque — the longest run of
+        queue-head tickets sharing one signature, up to
+        ``serve_batch_size``. Expired tickets are failed here,
+        pre-dispatch. Caller holds ``_admit``. [] = nothing poppable."""
         size = self.server.batch_size
+        batch: list[ServeTicket] = []
+        sig = None
+        now = time.monotonic()
+        while self._ticket_deque and len(batch) < size:
+            head = self._ticket_deque[0]
+            if head.deadline is not None and now >= head.deadline:
+                self._ticket_deque.popleft()
+                self._completion.put(([head], None, TicketExpired(
+                    f"ticket {head.seq} missed its deadline "
+                    f"before dispatch"), None))
+                continue
+            if sig is None:
+                sig = self._signature(head)
+            elif self._signature(head) != sig:
+                break
+            batch.append(self._ticket_deque.popleft())
+        return batch
+
+    def _next_batch(self) -> list[ServeTicket] | None:
+        """Blocking batch formation for this runtime's own workers.
+        None = stopping and queue empty."""
         with self._admit:
             lingered = False
             while True:
@@ -388,7 +534,7 @@ class ServingRuntime:
                     lingered = False
                     continue
                 if (self._linger > 0 and not lingered
-                        and len(self._ticket_deque) < size
+                        and len(self._ticket_deque) < self.server.batch_size
                         and len(self._ticket_deque) not in self._ladder()
                         and not self._stop.is_set()):
                     # one bounded wait for a fuller batch, then dispatch
@@ -399,25 +545,35 @@ class ServingRuntime:
                     lingered = True
                     self._admit.wait(self._linger)
                     continue
-                batch: list[ServeTicket] = []
-                sig = None
-                now = time.monotonic()
-                while self._ticket_deque and len(batch) < size:
-                    head = self._ticket_deque[0]
-                    if head.deadline is not None and now >= head.deadline:
-                        self._ticket_deque.popleft()
-                        self._completion.put(([head], None, TicketExpired(
-                            f"ticket {head.seq} missed its deadline "
-                            f"before dispatch"), None))
-                        continue
-                    if sig is None:
-                        sig = self._signature(head)
-                    elif self._signature(head) != sig:
-                        break
-                    batch.append(self._ticket_deque.popleft())
+                batch = self._form_batch()
                 if batch:
                     return batch
                 lingered = False  # head tickets all expired; go around
+
+    def _try_next_batch(self) -> list[ServeTicket] | None:
+        """Non-blocking batch formation for pooled workers (the caller —
+        a ``WorkerPool`` thread — already holds this runtime's dispatch
+        lock). Returns None when the queue is empty or still lingering
+        for a fuller batch; the linger is a deadline (``_linger_until``)
+        rather than a sleep, so a pool thread never blocks on one tenant
+        while others have work."""
+        with self._admit:
+            n = len(self._ticket_deque)
+            if n == 0:
+                self._linger_until = None
+                return None
+            if (self._linger > 0
+                    and n < self.server.batch_size
+                    and n not in self._ladder()
+                    and not self._stop.is_set()):
+                now = time.monotonic()
+                if self._linger_until is None:
+                    self._linger_until = now + self._linger
+                    return None
+                if now < self._linger_until:
+                    return None
+            self._linger_until = None
+            return self._form_batch() or None
 
     def _dispatch_batch(self, batch: list[ServeTicket]) -> tuple[list, int]:
         """Dispatch one signature run through the server's own flush path,
@@ -466,6 +622,9 @@ class ServingRuntime:
                 if error is None:
                     self._completed += len(batch)
                     self._batches += 1
+                    self._truncated += sum(
+                        1 for r in results
+                        if getattr(r, "truncated", False))
                     if pad_to is not None:
                         if pad_to < self.server.batch_size:
                             self._bucket_hits += 1
@@ -574,6 +733,16 @@ class ServingRuntime:
             self._trace_base = self.server.compile_count
         return cells
 
+    def rebaseline_traces(self) -> None:
+        """Zero ``traces_after_warmup`` at the server's current compile
+        count. The gateway's gateway-wide warmup uses this: tenants that
+        share a compiled dispatch are warmed once through a single
+        representative, then every sharer is re-baselined — so
+        ``traces_after_warmup == 0`` holds across all tenants without
+        per-tenant re-tracing (DESIGN.md SS15)."""
+        with self._dispatch_lock:
+            self._trace_base = self.server.compile_count
+
     @property
     def stats(self) -> RuntimeStats:
         """A consistent snapshot of the runtime counters (see
@@ -586,7 +755,7 @@ class ServingRuntime:
                                 self._expired, self._failed, self._batches,
                                 self._swaps, self._compactions,
                                 self._bucket_hits, self._bucket_pad_rows,
-                                traces)
+                                traces, self._truncated)
 
     @property
     def pending(self) -> int:
@@ -625,6 +794,13 @@ class ServingRuntime:
             t.join(timeout=30)
         if self._compactor is not None:
             self._compactor.join(timeout=60)
+        if self._pool is not None:
+            # Unregister, then take the dispatch lock once: pool threads
+            # form batches only while holding it, so after this no pooled
+            # worker can race the leftover sweep below.
+            self._pool.unregister(self)
+            with self._dispatch_lock:
+                pass
         with self._admit:
             leftover = list(self._ticket_deque)
             self._ticket_deque.clear()

@@ -69,6 +69,7 @@ from repro.dist.policy import NO_SHARDING, ShardingPolicy
 from repro.engine import sharding as _sharding
 from repro.engine.artifact import IndexArtifact, corpus_fingerprint
 from repro.engine.config import EngineConfig, get_config
+from repro.engine.engine import _TraceCount
 from repro.kernels import ops as kops
 
 
@@ -356,7 +357,8 @@ class RetrievalServer(_TicketQueue):
     def __init__(self, items: jnp.ndarray, key: jax.Array, *,
                  config: EngineConfig | str = "sah",
                  policy: ShardingPolicy = NO_SHARDING,
-                 fingerprint: str | None = None):
+                 fingerprint: str | None = None,
+                 share_dispatch: "RetrievalServer | None" = None):
         super().__init__(dim=items.shape[1])
         if isinstance(config, str):
             config = get_config(config)
@@ -371,13 +373,34 @@ class RetrievalServer(_TicketQueue):
         self.cache = ServingCache(items, key, policy=policy,
                                   capacity=config.serve_cache_capacity,
                                   fingerprint=fingerprint)
-        self.compile_count = 0
+
+        if share_dispatch is not None:
+            # Adopt the donor's compiled dispatch + trace counter. Both
+            # closures are config-free (k/n_cand/scan/n_base/precision
+            # arrive as call-time statics; only the sharding policy is
+            # baked in), so any two servers on the same mesh share every
+            # executable — tenants with identical signatures re-trace
+            # nothing.
+            donor = share_dispatch
+            if not isinstance(donor, RetrievalServer):
+                raise TypeError("share_dispatch must be a RetrievalServer, "
+                                f"got {type(donor).__name__}")
+            if donor.policy.mesh is not policy.mesh:
+                raise ValueError(
+                    "share_dispatch requires the same sharding policy "
+                    "mesh: compiled executables are specialized to it")
+            self._traces = donor._traces
+            self._dispatch = donor._dispatch
+            self._merge = donor._merge
+            return
+
+        self._traces = _TraceCount()
 
         def _scan(items_a, ids_a, mask_a, codes_a, proj_q, queries, *,
                   k, n_cand, scan):
             # Traced once per static signature; the counter increments at
             # trace time only, so it counts compiles, not calls.
-            self.compile_count += 1
+            self._traces.n += 1
             ucodes = kops.srp_hash(queries, proj_q)
             return _sharding.kmips_flat_arrays(
                 items_a, ids_a, mask_a, codes_a, ucodes, queries, k,
@@ -395,7 +418,7 @@ class RetrievalServer(_TicketQueue):
             # through. Under scan_precision="int8" the persisted
             # quantized twin screens staged rows first (bitwise-equal
             # contract: sa_alsh.merge_delta_topk).
-            self.compile_count += 1
+            self._traces.n += 1
             return _alsh.merge_delta_topk(
                 vals, ids, queries, d_items, d_mask, k, n_base,
                 d_qitems=d_qitems, d_qscale=d_qscale,
@@ -404,9 +427,16 @@ class RetrievalServer(_TicketQueue):
         self._merge = jax.jit(
             _merge, static_argnames=("k", "n_base", "scan_precision"))
 
+    @property
+    def compile_count(self) -> int:
+        """Traces taken through this server's dispatch — shared with
+        every server constructed with ``share_dispatch=self``."""
+        return self._traces.n
+
     @classmethod
     def from_artifact(cls, artifact: IndexArtifact, *,
-                      policy: ShardingPolicy = NO_SHARDING
+                      policy: ShardingPolicy = NO_SHARDING,
+                      share_dispatch: "RetrievalServer | None" = None
                       ) -> "RetrievalServer":
         """A server over an ``IndexArtifact``'s corpus.
 
@@ -422,7 +452,7 @@ class RetrievalServer(_TicketQueue):
         """
         items, key, fp = artifact.serving_base()
         srv = cls(items, key, config=artifact.config, policy=policy,
-                  fingerprint=fp)
+                  fingerprint=fp, share_dispatch=share_dispatch)
         srv._bind_artifact(artifact)
         return srv
 
@@ -634,11 +664,21 @@ class ReverseResult(NamedTuple):
                  the promoted item in their top-k.
     stats:       this query's row of core/sah.py::QueryStats.
     k:           the k answered.
+    truncated:   True iff a scan budget (EngineConfig.scan_budget) stopped
+                 this query's execute scan early. A truncated answer is
+                 conservative — skipped lanes resolve to "not in the
+                 audience" — never silently wrong, and ``funnel`` carries
+                 the batch's pruning snapshot so the caller can see how
+                 far the scan got.
+    funnel:      engine.PruningFunnel for the dispatch that answered this
+                 ticket (batch-level; None until filled by the server).
     """
 
     predictions: jnp.ndarray
     stats: object
     k: int
+    truncated: bool = False
+    funnel: object = None
 
 
 class ReverseServer(_TicketQueue):
@@ -743,10 +783,16 @@ class ReverseServer(_TicketQueue):
                 [qs, jnp.broadcast_to(qs[:1], (batch - len(group),)
                                       + qs.shape[1:])])
         res = self.engine.query_batch(qs, k)
+        # Per-ticket truncation flag: the stats row carries 1 iff a scan
+        # budget skipped lanes of THAT query (core/sah.py trunc_q); the
+        # funnel snapshot rides along so truncation is never silent.
+        trunc = np.asarray(res.stats.truncated)
         return [
             ReverseResult(res.predictions[j],
                           jax.tree.map(lambda s, j=j: s[j], res.stats),
-                          k)
+                          k,
+                          truncated=bool(trunc[j] > 0),
+                          funnel=res.funnel)
             for j in range(len(group))]
 
     def flush(self, k: int) -> list[ReverseResult]:

@@ -164,7 +164,10 @@ def rkmips_batch(index: _sah.SAHIndex, queries: jnp.ndarray, k: int,
                  scan: str = "sketch", chunk: int = 256,
                  tie_eps: float = 0.0, scan_precision: str = "f32",
                  delta_items: jnp.ndarray | None = None,
-                 delta_mask: jnp.ndarray | None = None):
+                 delta_mask: jnp.ndarray | None = None,
+                 delta_qitems: jnp.ndarray | None = None,
+                 delta_qscale: jnp.ndarray | None = None,
+                 scan_budget=0):
     """Sharded Algorithm 5 over a query batch (one trace per batch shape).
 
     Returns (pred (nq, m_pad) bool in global leaf order, QueryStats with
@@ -186,35 +189,61 @@ def rkmips_batch(index: _sah.SAHIndex, queries: jnp.ndarray, k: int,
     replicated across shards — each shard counts its own user rows against
     the full buffer ((m_local, cap) products, no collective), so the psum'd
     counters and gathered predictions match the single-device delta path
-    bitwise.
+    bitwise. delta_qitems/delta_qscale (the buffer's int8 twin, consumed
+    under ``scan_precision == "int8"``) replicate the same way.
+
+    scan_budget: the traced per-query tile cap (``rkmips_execute_impl``).
+    On a mesh each shard enforces it against its OWN charged tile count —
+    the cap bounds the slowest shard's walk, which is what bounds the
+    dispatch's wall time — and the psum'd ``truncated`` stat flags a query
+    any shard truncated.
     """
+    budget = jnp.asarray(scan_budget, jnp.int32)
     if policy.mesh is None:
         return _sah.rkmips_batch(index, queries, k, n_cand=n_cand,
                                  scan=scan, chunk=chunk, tie_eps=tie_eps,
                                  scan_precision=scan_precision,
                                  delta_items=delta_items,
-                                 delta_mask=delta_mask)
+                                 delta_mask=delta_mask,
+                                 delta_qitems=delta_qitems,
+                                 delta_qscale=delta_qscale,
+                                 scan_budget=budget)
     index = pad_index(index, n_shards(policy))
     axes = tuple(policy.mesh.axis_names)
     specs = index_specs(index, policy)
+    if scan_precision != "int8":
+        delta_qitems = delta_qscale = None
     has_delta = delta_items is not None
+    has_qdelta = has_delta and delta_qitems is not None
 
-    def local(idx_l: _sah.SAHIndex, qs: jnp.ndarray, *delta):
-        d_items, d_mask = delta if delta else (None, None)
+    def local(idx_l: _sah.SAHIndex, qs: jnp.ndarray, bgt, *delta):
+        d_items = d_mask = d_qitems = d_qscale = None
+        if has_qdelta:
+            d_items, d_mask, d_qitems, d_qscale = delta
+        elif has_delta:
+            d_items, d_mask = delta
         pred_l, stats_l = _sah.rkmips_batch_impl(
             idx_l, qs, k, n_cand=n_cand, scan=scan, chunk=chunk,
             tie_eps=tie_eps, scan_precision=scan_precision,
-            delta_items=d_items, delta_mask=d_mask)
+            delta_items=d_items, delta_mask=d_mask,
+            delta_qitems=d_qitems, delta_qscale=d_qscale,
+            scan_budget=bgt)
         pred = jax.lax.all_gather(pred_l, axes, axis=1, tiled=True)
         stats = jax.tree.map(lambda s: jax.lax.psum(s, axes), stats_l)
         return pred, stats
 
-    operands = (index, queries) + ((delta_items, delta_mask)
-                                   if has_delta else ())
-    in_specs = (specs, P()) + ((P(), P()) if has_delta else ())
-    return jax.shard_map(local, mesh=policy.mesh, in_specs=in_specs,
+    extras = ()
+    extra_specs = ()
+    if has_qdelta:
+        extras = (delta_items, delta_mask, delta_qitems, delta_qscale)
+        extra_specs = (P(), P(), P(), P())
+    elif has_delta:
+        extras = (delta_items, delta_mask)
+        extra_specs = (P(), P())
+    return jax.shard_map(local, mesh=policy.mesh,
+                         in_specs=(specs, P(), P()) + extra_specs,
                          out_specs=(P(), P()),
-                         check_vma=False)(*operands)
+                         check_vma=False)(index, queries, budget, *extras)
 
 
 def _flat_candidates(items, item_ids, item_mask, codes, ucodes, queries,

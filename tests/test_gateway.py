@@ -1,0 +1,371 @@
+"""Multi-tenant gateway contracts (engine/gateway.py, DESIGN.md SS15).
+
+Pins the gateway tier's guarantees: (1) routing adds nothing — a tenant's
+answers are bitwise the dedicated per-tenant runtime's (and the one-shot
+batched engine's) on the same queries; (2) tenants sharing a dispatch
+signature share one compiled-trace cache — after a gateway-wide warmup,
+traffic from every such tenant adds zero traces (``scan_budget`` is a
+traced operand, so budgeted and unbudgeted tenants share executables);
+(3) scan budgets truncate *visibly and conservatively*: a budgeted answer
+never adds a user the unbudgeted answer lacks, exhausted tickets come back
+``truncated=True`` with a funnel snapshot, and ``RuntimeStats.truncated``
+attributes them to the right tenant; (4) one tenant's held dispatch lock
+(a swap, a compaction landing, a slow flush) never stalls another
+tenant's traffic — the pool skips locked tenants; (5) admission rejects
+with explicit messages (unknown tenant, k over ``max_k``,
+``max_in_flight`` reached); (6) per-tenant stats never cross tenants.
+
+Threading discipline (CONTRIBUTING): every blocking wait carries an
+explicit timeout, and any lock/gate taken by the test is released in
+``finally`` so a failing assert can never wedge the pool threads.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import synthetic
+from repro.engine import (IndexArtifact, RkMIPSEngine, ServingGateway,
+                          ServingRuntime, TenantPolicy, get_config)
+
+D = 16
+
+
+def _cfg():
+    # chunk=8 keeps the execute loop multi-chunk on this workload, so a
+    # small scan_budget actually bites (truncation is exercised, not
+    # just plumbed)
+    return get_config("sah").replace(tile=32, n_bits=32, k_max=8, n_top=8,
+                                     leaf_size=8, n_cand=16, scan="sketch",
+                                     delta_capacity=8, serve_batch_size=4,
+                                     chunk=8)
+
+
+_BUILD_KEY = jax.random.PRNGKey(31)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    key = jax.random.PRNGKey(23)
+    ki, kq = jax.random.split(key)
+    items, users = synthetic.recommendation_data(ki, 120, 64, D)
+    queries = synthetic.queries_from_items(kq, items, 12)
+    return items, users, queries
+
+
+@pytest.fixture(scope="module")
+def artifact(workload):
+    items, users, _ = workload
+    return IndexArtifact.build(items, users, _BUILD_KEY, config=_cfg())
+
+
+def _results(tickets, timeout=60):
+    return [t.result(timeout=timeout) for t in tickets]
+
+
+# -- (1) routing is bitwise-invisible ------------------------------------
+
+
+def test_gateway_answers_match_dedicated_runtime_bitwise(workload, artifact):
+    """THE tier contract: the same queries through gateway.submit and
+    through a dedicated ServingRuntime (and the one-shot batched engine)
+    resolve bitwise identically, ticket for ticket."""
+    _, _, queries = workload
+    ref = RkMIPSEngine.from_artifact(artifact).query_batch(queries, 3)
+    with RkMIPSEngine.from_artifact(artifact).async_reverse_server(k=3) \
+            as dedicated:
+        ded = _results([dedicated.submit(queries[i])
+                        for i in range(queries.shape[0])])
+    with ServingGateway(pool_workers=2) as gw:
+        gw.register("t", artifact, k=3)
+        got = _results([gw.submit("t", queries[i])
+                        for i in range(queries.shape[0])])
+    for i, (g, d) in enumerate(zip(got, ded)):
+        np.testing.assert_array_equal(np.asarray(g.predictions),
+                                      np.asarray(d.predictions))
+        np.testing.assert_array_equal(np.asarray(g.predictions),
+                                      np.asarray(ref.predictions[i]))
+        assert g.truncated is False and d.truncated is False
+
+
+def test_routing_follows_fingerprints(workload, artifact):
+    _, _, queries = workload
+    with ServingGateway() as gw:
+        gw.register("t", artifact, k=3)
+        assert gw.route("t") == artifact.fingerprint
+        art2 = gw.insert_items("t", queries[:2])
+        assert gw.route("t") == art2.fingerprint != artifact.fingerprint
+        gw.swap("t", artifact)
+        assert gw.route("t") == artifact.fingerprint
+        assert gw.runtime("t").stats.swaps == 2
+
+
+# -- (2) one trace cache across tenants ----------------------------------
+
+
+def test_shared_signature_tenants_add_zero_traces_after_warmup(
+        workload, artifact):
+    """Two tenants with identical (rung, k) signatures — one budgeted,
+    one not — share one compiled dispatch: gateway-wide warmup traces
+    each cell once, and live traffic from BOTH tenants adds nothing."""
+    _, _, queries = workload
+    with ServingGateway(pool_workers=2) as gw:
+        gw.register("plain", artifact, k=3)
+        gw.register("budgeted", artifact, k=3,
+                    policy=TenantPolicy(scan_budget=2))
+        cells = gw.warmup()
+        assert cells > 0
+        assert gw.stats().traces_after_warmup == 0
+        tickets = []
+        for i in range(queries.shape[0]):
+            tickets.append(gw.submit("plain", queries[i]))
+            tickets.append(gw.submit("budgeted", queries[i]))
+        _results(tickets)
+        st = gw.stats()
+        assert st.traces_after_warmup == 0
+        for name in ("plain", "budgeted"):
+            assert st.tenants[name].traces_after_warmup == 0
+
+
+def test_shared_dispatch_is_adopted_not_duplicated(workload, artifact):
+    """Same config modulo budget -> one _TraceCount object; a genuinely
+    different recipe -> its own."""
+    items, users, _ = workload
+    other = IndexArtifact.build(items, users, _BUILD_KEY,
+                                config=_cfg().replace(n_cand=8))
+    with ServingGateway() as gw:
+        a = gw.register("a", artifact, k=3)
+        b = gw.register("b", artifact, k=3,
+                        policy=TenantPolicy(scan_budget=1))
+        c = gw.register("c", other, k=3)
+        assert b.server.engine._traces is a.server.engine._traces
+        assert c.server.engine._traces is not a.server.engine._traces
+
+
+# -- (3) budget truncation: conservative, visible, attributed ------------
+
+
+def test_budget_truncation_is_conservative_and_flagged(workload, artifact):
+    _, _, queries = workload
+    ref = RkMIPSEngine.from_artifact(artifact).query_batch(queries, 3)
+    with ServingGateway(pool_workers=2) as gw:
+        gw.register("plain", artifact, k=3)
+        gw.register("tight", artifact, k=3,
+                    policy=TenantPolicy(scan_budget=1))
+        plain = _results([gw.submit("plain", queries[i])
+                          for i in range(queries.shape[0])])
+        tight = _results([gw.submit("tight", queries[i])
+                          for i in range(queries.shape[0])])
+        st = gw.stats()
+    truncated = [r for r in tight if r.truncated]
+    assert truncated, "chunk=8 + scan_budget=1 must truncate something " \
+                      "on this workload (otherwise the test is vacuous)"
+    for i, r in enumerate(tight):
+        got = np.asarray(r.predictions)
+        full = np.asarray(ref.predictions[i])
+        # conservative: skipped lanes resolve to "not in the audience" —
+        # a budgeted answer never CONTAINS a user the full answer lacks
+        assert not np.any(got & ~full)
+        if not r.truncated:
+            np.testing.assert_array_equal(got, full)
+    for r in truncated:
+        assert r.funnel is not None
+        assert r.funnel.truncated > 0
+        assert "budget-truncated" in r.funnel.format()
+    # attribution: the budgeted tenant owns every truncation, the plain
+    # tenant none (stats isolation for the new counter)
+    assert st.tenants["tight"].truncated == len(truncated)
+    assert st.tenants["plain"].truncated == 0
+    assert all(not r.truncated for r in plain)
+
+
+def test_generous_budget_is_bitwise_exact(workload, artifact):
+    """A budget the scan never exhausts answers bitwise like no budget —
+    budget=0 and budget=huge share the executable AND the answers."""
+    _, _, queries = workload
+    ref = RkMIPSEngine.from_artifact(artifact).query_batch(queries, 3)
+    eng = RkMIPSEngine(artifact.config.replace(scan_budget=10_000)) \
+        .attach(artifact)
+    res = eng.query_batch(queries, 3)
+    np.testing.assert_array_equal(np.asarray(res.predictions),
+                                  np.asarray(ref.predictions))
+    assert int(np.asarray(res.stats.truncated).sum()) == 0
+
+
+# -- (4) no cross-tenant stalls ------------------------------------------
+
+
+def test_locked_tenant_never_stalls_another(workload, artifact):
+    """Hold tenant A's dispatch lock (what a hot-swap or a landing
+    compaction does) while B's traffic flows: B must resolve, with a
+    single pool worker, because the pool skips locked tenants instead of
+    queueing behind them."""
+    _, _, queries = workload
+    with ServingGateway(pool_workers=1) as gw:
+        a = gw.register("a", artifact, k=3)
+        gw.register("b", artifact, k=3)
+        assert a._dispatch_lock.acquire(timeout=10)
+        try:
+            tb = [gw.submit("b", queries[i]) for i in range(4)]
+            for t in tb:
+                t.result(timeout=60)   # resolves while A stays locked
+            ta = gw.submit("a", queries[0])
+            assert not ta.done()
+        finally:
+            a._dispatch_lock.release()
+        ta.result(timeout=60)          # A resumes once unlocked
+
+
+def test_background_compaction_does_not_stall_other_tenants(
+        workload, artifact):
+    """One tenant compacting (churn past compact_fill -> background
+    rebuild -> reconcile -> swap) while another serves: the other
+    tenant's tickets keep resolving, and the compaction lands."""
+    _, _, queries = workload
+    with ServingGateway(pool_workers=1) as gw:
+        gw.register("churny", artifact, k=3, compaction=True,
+                    compact_fill=0.2, poll_interval=0.01)
+        gw.register("steady", artifact, k=3)
+        gw.insert_items("churny", queries[:3])
+        gw.request_compaction("churny")
+        deadline = 60.0
+        import time
+        end = time.monotonic() + deadline
+        while gw.runtime("churny").stats.compactions < 1:
+            t = gw.submit("steady", queries[0])
+            t.result(timeout=60)
+            assert time.monotonic() < end, "compaction never landed"
+            time.sleep(0.01)
+        st = gw.stats()
+        assert st.tenants["churny"].compactions >= 1
+        assert st.tenants["steady"].completed >= 1
+        assert st.tenants["steady"].compactions == 0
+        # post-compaction both tenants still answer
+        r1 = gw.submit("churny", queries[1]).result(timeout=60)
+        r2 = gw.submit("steady", queries[1]).result(timeout=60)
+        assert r1.k == r2.k == 3
+
+
+# -- (5) admission rejections --------------------------------------------
+
+
+def test_policy_rejection_messages(workload, artifact):
+    _, _, queries = workload
+    with ServingGateway() as gw:
+        gw.register("t", artifact, k=3,
+                    policy=TenantPolicy(max_k=4, max_in_flight=2))
+        with pytest.raises(KeyError, match="unknown tenant 'ghost'"):
+            gw.submit("ghost", queries[0])
+        with pytest.raises(ValueError,
+                           match=r"k=6 exceeds policy max_k=4"):
+            gw.submit("t", queries[0], k=6)
+        with pytest.raises(ValueError, match="already registered"):
+            gw.register("t", artifact, k=3)
+        rt = gw.runtime("t")
+        assert rt._dispatch_lock.acquire(timeout=10)
+        try:
+            held = [gw.submit("t", queries[i]) for i in range(2)]
+            with pytest.raises(RuntimeError,
+                               match=r"max_in_flight=2"):
+                gw.submit("t", queries[2])
+        finally:
+            rt._dispatch_lock.release()
+        _results(held)
+        # capacity frees up once tickets resolve
+        gw.submit("t", queries[2]).result(timeout=60)
+
+
+def test_register_validation(artifact):
+    items = artifact.items
+    fwd = IndexArtifact.build(items, None, _BUILD_KEY, config=_cfg())
+    with ServingGateway() as gw:
+        with pytest.raises(ValueError, match="mode='reverse' needs"):
+            gw.register("r", fwd, k=3, mode="reverse")
+        with pytest.raises(ValueError, match="scan_budget is a "
+                                             "reverse-pipeline knob"):
+            gw.register("f", fwd, k=3,
+                        policy=TenantPolicy(scan_budget=4))
+        with pytest.raises(ValueError, match="pool"):
+            gw.register("p", artifact, k=3, pool=None)
+    with pytest.raises(ValueError, match="max_k must be >= 1"):
+        TenantPolicy(max_k=0)
+    with pytest.raises(ValueError, match="scan_budget must be >= 0"):
+        TenantPolicy(scan_budget=-1)
+
+
+def test_forward_tenant_serves_through_the_pool(workload, artifact):
+    """mode='auto' on a users=None artifact is a forward tenant; its
+    pooled answers are bitwise the library-mode flush."""
+    items, _, queries = workload
+    fwd = IndexArtifact.build(items, None, _BUILD_KEY, config=_cfg())
+    from repro.engine import RetrievalServer
+    sync = RetrievalServer.from_artifact(fwd)
+    sync.submit(queries[:4])
+    ref = sync.flush(3)
+    with ServingGateway(pool_workers=2) as gw:
+        rt = gw.register("fwd", fwd, k=3)
+        assert rt.server.__class__ is RetrievalServer
+        got = _results([gw.submit("fwd", queries[i]) for i in range(4)])
+    for g, r in zip(got, ref):
+        np.testing.assert_array_equal(np.asarray(g.values),
+                                      np.asarray(r.values))
+        np.testing.assert_array_equal(np.asarray(g.ids), np.asarray(r.ids))
+
+
+# -- (6) stats isolation -------------------------------------------------
+
+
+def test_stats_are_attributed_per_tenant(workload, artifact):
+    _, _, queries = workload
+    with ServingGateway(pool_workers=2) as gw:
+        gw.register("a", artifact, k=3)
+        gw.register("b", artifact, k=3)
+        ta = [gw.submit("a", queries[i]) for i in range(8)]
+        tb = [gw.submit("b", queries[i]) for i in range(3)]
+        _results(ta + tb)
+        st = gw.stats()
+    assert st.tenants["a"].submitted == st.tenants["a"].completed == 8
+    assert st.tenants["b"].submitted == st.tenants["b"].completed == 3
+    assert st.tenants["a"].failed == st.tenants["b"].failed == 0
+
+
+def test_pooled_runtime_close_leaves_pool_serving_others(
+        workload, artifact):
+    """Closing one tenant's runtime must not tear the shared pool down:
+    the surviving tenant keeps answering."""
+    _, _, queries = workload
+    with ServingGateway(pool_workers=1) as gw:
+        gw.register("gone", artifact, k=3)
+        gw.register("stay", artifact, k=3)
+        gw.submit("gone", queries[0]).result(timeout=60)
+        gw.runtime("gone").close(timeout=30)
+        gw.submit("stay", queries[0]).result(timeout=60)
+        with pytest.raises(RuntimeError, match="closed"):
+            gw.submit("gone", queries[0])
+
+
+def test_standalone_pooled_runtimes_compose_without_gateway(
+        workload, artifact):
+    """WorkerPool is usable below the gateway: two plain ServingRuntimes
+    on one pool dispatch bitwise like dedicated workers."""
+    from repro.engine import WorkerPool
+    _, _, queries = workload
+    ref = RkMIPSEngine.from_artifact(artifact).query_batch(queries[:4], 3)
+    with WorkerPool(2) as pool:
+        rt1 = ServingRuntime(
+            RkMIPSEngine.from_artifact(artifact).reverse_server(),
+            k=3, pool=pool)
+        rt2 = ServingRuntime(
+            RkMIPSEngine.from_artifact(artifact).reverse_server(),
+            k=3, pool=pool)
+        try:
+            r1 = _results([rt1.submit(queries[i]) for i in range(4)])
+            r2 = _results([rt2.submit(queries[i]) for i in range(4)])
+        finally:
+            rt1.close(timeout=30)
+            rt2.close(timeout=30)
+    for i in range(4):
+        np.testing.assert_array_equal(np.asarray(r1[i].predictions),
+                                      np.asarray(ref.predictions[i]))
+        np.testing.assert_array_equal(np.asarray(r2[i].predictions),
+                                      np.asarray(ref.predictions[i]))
